@@ -1,0 +1,57 @@
+"""Shared benchmark utilities: problem setup, time/epoch accounting,
+CSV emission (`name,us_per_call,derived`)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import Regularizer, LOGISTIC, LASSO
+from repro.core.baselines.fista import fista_history
+from repro.data.synthetic import make_dataset
+
+
+def build_problem(name: str, model: str, scale: float = 0.05, seed: int = 0):
+    """Returns (X, y, objective, regularizer)."""
+    task = "regression" if model == "lasso" else "classification"
+    X, y, _ = make_dataset(name, task=task, seed=seed, scale=scale)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    # paper's lambdas (Table 1): lam1 = 1e-5-ish, lam2 = 1e-5
+    reg = (Regularizer(1e-4, 1e-4) if model == "logistic"
+           else Regularizer(0.0, 1e-4))
+    obj = LOGISTIC if model == "logistic" else LASSO
+    return X, y, obj, reg
+
+
+def reference_optimum(obj, reg, X, y, iters: int = 4000) -> float:
+    _, hist = fista_history(obj, reg, X, y, jnp.zeros(X.shape[1]),
+                            iters=iters, record_every=iters)
+    return hist[-1]
+
+
+def time_to_suboptimality(history: List[float], times: List[float],
+                          p_star: float, eps: float = 1e-3):
+    """First wall-time at which P(w) - P* <= eps (np.inf if never)."""
+    for h, t in zip(history, times):
+        if h - p_star <= eps:
+            return t
+    return float("inf")
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.perf_counter()
+        self.marks: List[float] = [0.0]
+
+    def mark(self):
+        self.marks.append(time.perf_counter() - self.t0)
+        return self.marks[-1]
+
+
+def emit(rows: List[Dict]):
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}")

@@ -1,0 +1,74 @@
+"""Roofline report: reads results/dryrun/*.json into the per-cell table
+(EXPERIMENTS.md section Roofline) and emits summary CSV rows."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(directory="results/dryrun") -> List[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(ROOT, directory, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def main() -> List[Dict]:
+    rows = []
+    for r in load():
+        if r.get("status") != "ok":
+            rows.append({"name": f"dryrun/{r['arch']}/{r['shape']}/"
+                                 f"{r['mesh']}/{r['step']}",
+                         "us_per_call": "",
+                         "derived": f"status={r.get('status')}"})
+            continue
+        terms = r["roofline"]
+        rows.append({
+            "name": (f"dryrun/{r['arch']}/{r['shape']}/{r['mesh']}/"
+                     f"{r['step']}"),
+            "us_per_call": f"{r.get('compile_s', 0) * 1e6:.0f}",
+            "derived": (
+                f"fits={r['fits_hbm']};bottleneck={terms['bottleneck']};"
+                f"t_comp={terms['t_compute']:.3g};"
+                f"t_mem={terms['t_memory']:.3g};"
+                f"t_coll={terms['t_collective']:.3g};"
+                f"useful={r.get('useful_ratio') or 0:.3f}"),
+        })
+    return rows
+
+
+def markdown_table(directory="results/dryrun") -> str:
+    lines = [
+        "| arch | shape | mesh | step | fits | t_comp (s) | t_mem (s) | "
+        "t_coll (s) | bottleneck | useful |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(directory):
+        if r.get("status") == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['step']} "
+                f"| skip | — | — | — | {r.get('reason', '')[:40]} | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['step']} "
+                f"| **{r.get('status')}** | — | — | — | — | — |")
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['step']} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} | "
+            f"{t['t_compute']:.3g} | {t['t_memory']:.3g} | "
+            f"{t['t_collective']:.3g} | {t['bottleneck'][2:]} | "
+            f"{(r.get('useful_ratio') or 0):.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(main())

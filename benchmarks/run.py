@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only substr]
+
+Emits ``name,us_per_call,derived`` CSV (one row per measurement).
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="include the large avazu/kdd-like datasets")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import (fig1_convergence, table2_timing, fig2a_speedup,
+                            fig2b_partition, recovery_bench, roofline_report)
+    suites = [
+        ("fig1", lambda: fig1_convergence.main(full=args.full)),
+        ("table2", table2_timing.main),
+        ("fig2a", fig2a_speedup.main),
+        ("fig2b", fig2b_partition.main),
+        ("recovery", recovery_bench.main),
+        ("roofline", roofline_report.main),
+    ]
+    rows = []
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        try:
+            rows.extend(fn())
+        except Exception:
+            traceback.print_exc()
+            rows.append({"name": f"{name}/FAILED", "us_per_call": "",
+                         "derived": "see stderr"})
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', '')},"
+              f"{r.get('derived', '')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+#!/usr/bin/env python
+"""Fig. 2(b) study: how data partition quality controls convergence.
+
+Builds the paper's four partitions (pi*, uniform, 75/25 skew, full class
+split), estimates the local-global gap l_pi(a) and gamma for each, runs
+pSCOPE under each, and prints the side-by-side table — the ordering is
+the paper's headline theory result.
+
+    PYTHONPATH=src python examples/partition_study.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import Regularizer, LOGISTIC, PScopeConfig, run
+from repro.core.baselines import fista_history
+from repro.core.partition import (uniform_partition, label_skew_partition,
+                                  replicated_partition, stack_partition,
+                                  local_global_gap)
+from repro.data.synthetic import make_sparse_classification
+
+
+def main():
+    X, y, _ = make_sparse_classification(1024, 48, density=0.3, seed=0)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    reg = Regularizer(1e-2, 1e-4)
+    w_star, fh = fista_history(LOGISTIC, reg, X, y, jnp.zeros(48),
+                               iters=3000, record_every=3000)
+    p_star = fh[-1]
+    a = w_star + 0.4 * jax.random.normal(jax.random.PRNGKey(7), (48,))
+
+    parts = {
+        "pi* (replicated)": replicated_partition(1024, 8),
+        "pi1 (uniform)": uniform_partition(jax.random.PRNGKey(0), 1024, 8),
+        "pi2 (75/25 skew)": label_skew_partition(np.asarray(y), 8, 0.75),
+        "pi3 (class split)": label_skew_partition(np.asarray(y), 8, 1.0),
+    }
+
+    print(f"{'partition':18s} {'l_pi(a)':>12s} {'gap@T=8':>12s}")
+    for name, idx in parts.items():
+        Xp, yp = stack_partition(X, y, idx)
+        gap_metric = local_global_gap(LOGISTIC, reg, Xp, yp, a, w_star,
+                                      p_star, iters=400)
+        cfg = PScopeConfig(eta=0.5, inner_steps=2 * Xp.shape[1],
+                           inner_batch=1, outer_steps=8)
+        _, hist = run(LOGISTIC, reg, Xp, yp, jnp.zeros(48), cfg)
+        print(f"{name:18s} {gap_metric:12.3e} {hist[-1] - p_star:12.3e}")
+
+    print("\nbetter partition (smaller l_pi) => faster convergence "
+          "(Theorem 2).")
+
+
+if __name__ == "__main__":
+    main()

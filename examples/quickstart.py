@@ -1,0 +1,54 @@
+#!/usr/bin/env python
+"""Quickstart: distributed sparse logistic regression with pSCOPE.
+
+Reproduces the paper's core loop end-to-end on synthetic rcv1-like data
+with 8 simulated workers, comparing against FISTA and showing the
+linear convergence of Theorem 2 plus the L1 sparsity of the solution.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import Regularizer, LOGISTIC, PScopeConfig, run
+from repro.core.baselines import fista_history
+from repro.core.partition import uniform_partition, stack_partition
+from repro.data.synthetic import make_dataset
+
+
+def main():
+    print("== pSCOPE quickstart: L1 logistic regression, 8 workers ==")
+    X, y, _ = make_dataset("rcv1", task="classification", scale=0.05)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    n, d = X.shape
+    print(f"dataset: n={n} d={d} density={(np.asarray(X) != 0).mean():.3f}")
+
+    reg = Regularizer(lam1=5e-3, lam2=1e-4)
+
+    # reference optimum
+    _, fh = fista_history(LOGISTIC, reg, X, y, jnp.zeros(d), iters=5000,
+                          record_every=5000)
+    p_star = fh[-1]
+    print(f"P(w*) = {p_star:.8f}  (FISTA reference)")
+
+    # the paper's Algorithm 1: uniform partition, 8 workers
+    idx = uniform_partition(jax.random.PRNGKey(0), n, 8)
+    Xp, yp = stack_partition(X, y, idx)
+    cfg = PScopeConfig(eta=0.5, inner_steps=3 * Xp.shape[1], inner_batch=1,
+                       outer_steps=12)
+    w, hist = run(LOGISTIC, reg, Xp, yp, jnp.zeros(d), cfg)
+
+    print("\nouter round | P(w_t) - P*")
+    for t, h in enumerate(hist):
+        print(f"   {t:2d}       | {h - p_star:.3e}")
+
+    nnz = int(jnp.sum(jnp.abs(w) > 1e-8))
+    print(f"\nsolution sparsity: {nnz}/{d} nonzeros "
+          f"({100.0 * nnz / d:.1f}%)")
+    print("communication: 2 vector all-reduces per round "
+          f"(total {2 * cfg.outer_steps}) vs {n // 8}+ for per-step dpSGD")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Run the full (arch x shape x mesh x step) dry-run grid.
+
+Each cell runs in its own subprocess (jax locks the device count at
+first init, and compile memory is reclaimed per cell).  Resumable:
+cells with an existing result JSON are skipped.  Smallest archs first
+so results accumulate early.
+
+Usage: python scripts/run_dryrun_grid.py [--only substring] [--redo]
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT = os.path.join(ROOT, "results", "dryrun")
+
+# smallest-first ordering (compile cost roughly tracks layers x width)
+ARCHS = [
+    "whisper-base", "qwen2-1.5b", "rwkv6-1.6b", "minicpm-2b", "zamba2-2.7b",
+    "minitron-4b", "llama-3.2-vision-11b", "phi3-medium-14b",
+    "qwen3-moe-30b-a3b", "qwen3-moe-235b-a22b",
+]
+LONG_CAPABLE = {"rwkv6-1.6b", "zamba2-2.7b"}
+# microbatch counts sized so per-chip activations fit 16 GiB HBM
+N_MB = {
+    "qwen3-moe-235b-a22b": 16, "qwen3-moe-30b-a3b": 16,
+    "phi3-medium-14b": 16, "llama-3.2-vision-11b": 32,
+    "minitron-4b": 8, "minicpm-2b": 8, "zamba2-2.7b": 8,
+}
+
+
+def cells():
+    for arch in ARCHS:
+        for mesh in ("single", "multi"):
+            yield arch, "train_4k", mesh, "standard"
+        # paper-technique step: multi-pod for all, single-pod where the
+        # params fit TP-replicated next to the pSCOPE state
+        yield arch, "train_4k", "multi", "pscope"
+        if arch in ("whisper-base", "qwen2-1.5b", "rwkv6-1.6b"):
+            yield arch, "train_4k", "single", "pscope"
+        for mesh in ("single", "multi"):
+            yield arch, "prefill_32k", mesh, "serve"
+            yield arch, "decode_32k", mesh, "serve"
+        if arch in LONG_CAPABLE:
+            for mesh in ("single", "multi"):
+                yield arch, "long_500k", mesh, "serve"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--redo", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    os.makedirs(OUT, exist_ok=True)
+    todo = [c for c in cells() if args.only in "__".join(c)]
+    print(f"{len(todo)} cells", flush=True)
+    for i, (arch, shape, mesh, step) in enumerate(todo):
+        name = f"{arch}__{shape}__{mesh}__{step}"
+        path = os.path.join(OUT, name + ".json")
+        if os.path.exists(path) and not args.redo:
+            print(f"[{i+1}/{len(todo)}] skip {name} (exists)", flush=True)
+            continue
+        t0 = time.time()
+        env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mesh, "--step", step,
+               "--out", path]
+        if step in ("standard", "pscope") and arch in N_MB:
+            cmd += ["--n-mb", str(N_MB[arch])]
+        proc = subprocess.run(
+            cmd,
+            env=env, cwd=ROOT, capture_output=True, text=True,
+            timeout=args.timeout)
+        status = "?"
+        if os.path.exists(path):
+            with open(path) as f:
+                status = json.load(f).get("status")
+        else:
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                           "step": step, "status": "crash",
+                           "stderr": proc.stderr[-2000:]}, f, indent=2)
+            status = "crash"
+        print(f"[{i+1}/{len(todo)}] {name}: {status} "
+              f"({time.time()-t0:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Architecture registry: `get(arch_id)` / `get(arch_id, reduced=True)`."""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from repro.configs.base import (ModelConfig, MoEConfig, SSMConfig, ShapeCell,
+                                SHAPES, cell_applicable)
+
+_REGISTRY = {
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "minitron-4b": "minitron_4b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "minicpm-2b": "minicpm_2b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "whisper-base": "whisper_base",
+}
+
+ARCH_IDS: List[str] = list(_REGISTRY)
+
+
+def get(arch_id: str, reduced: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[arch_id]}")
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+__all__ = ["get", "ARCH_IDS", "ModelConfig", "MoEConfig", "SSMConfig",
+           "ShapeCell", "SHAPES", "cell_applicable"]

@@ -1,0 +1,100 @@
+"""Config system: model architecture + parallelism + shapes.
+
+Every assigned architecture has a `src/repro/configs/<id>.py` exporting
+CONFIG (exact published dims) and `reduced()` (smoke-test scale).
+`repro.configs.get(arch_id)` resolves either.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 128
+    top_k: int = 8
+    expert_ff: int = 768          # per-expert FFN hidden dim
+    router_aux_coef: float = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64
+    head_dim: int = 64            # mamba2 / rwkv6 head width
+    expand: int = 2               # d_inner = expand * d_model
+    conv_width: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None          # default d_model // num_heads
+    qkv_bias: bool = False                  # qwen2 style
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-6
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (zamba2): shared attention block applied every k layers
+    shared_attn_every: int = 0
+    # vlm (llama-3.2-vision): cross-attention layers at this cadence
+    cross_attn_every: int = 0
+    num_image_tokens: int = 1601            # ViT-H/14 @ 448px + cls, stub
+    # audio (whisper): encoder config; frontend stubbed to frame embeds
+    encoder_layers: int = 0
+    num_frames: int = 1500
+    # long-context serving: window for the attention blocks of hybrid
+    # archs when seq exceeds this (0 = always full)
+    long_attn_window: int = 0
+    # execution
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    use_flash_kernel: bool = False   # pallas path (interpret on CPU)
+    sharding_mode: str = "fsdp_tp"   # tp | fsdp_tp
+    # not part of the architecture: reduced smoke-test flag
+    reduced: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One (input-shape) cell of the assigned grid."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+# archs whose attention is quadratic-full -> long_500k documented skip
+FULL_ATTENTION_FAMILIES = ("dense", "moe", "vlm", "audio")
+
+
+def long_context_capable(cfg: ModelConfig) -> bool:
+    return cfg.family in ("ssm", "hybrid")
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeCell) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not long_context_capable(cfg):
+        return False, "full quadratic attention; sub-quadratic required"
+    return True, ""

@@ -1,0 +1,17 @@
+"""Llama-3.2-11B-Vision — text backbone with gated cross-attention
+layers every 5th layer; vision frontend stubbed to precomputed patch
+embeddings via input_specs() [hf:meta-llama/Llama-3.2-11B-Vision]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b", family="vlm",
+    num_layers=40, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=14336, vocab_size=128256, head_dim=128,
+    cross_attn_every=5, num_image_tokens=1601,
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=4, d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+    vocab_size=512, head_dim=32, cross_attn_every=2, num_image_tokens=16,
+    reduced=True,
+)

@@ -1,0 +1,14 @@
+"""MiniCPM-2B — llama-like arch trained with the WSD schedule
+[arXiv:2404.06395]; the WSD schedule itself is in optim/schedule.py."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b", family="dense",
+    num_layers=40, d_model=2304, num_heads=36, num_kv_heads=36,
+    d_ff=5760, vocab_size=122753, head_dim=64,
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=4, d_ff=256,
+    vocab_size=512, head_dim=32, reduced=True,
+)

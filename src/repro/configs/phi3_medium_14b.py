@@ -1,0 +1,13 @@
+"""Phi-3-medium-14B — RoPE SwiGLU GQA [arXiv:2404.14219]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-medium-14b", family="dense",
+    num_layers=40, d_model=5120, num_heads=40, num_kv_heads=10,
+    d_ff=17920, vocab_size=100352, head_dim=128,
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+    vocab_size=512, head_dim=32, reduced=True,
+)

@@ -1,0 +1,13 @@
+"""Qwen2-1.5B — GQA with QKV bias [arXiv:2407.10671]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-1.5b", family="dense",
+    num_layers=28, d_model=1536, num_heads=12, num_kv_heads=2,
+    d_ff=8960, vocab_size=151936, head_dim=128, qkv_bias=True,
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+    vocab_size=512, head_dim=32, reduced=True,
+)

@@ -1,0 +1,15 @@
+"""Qwen3-235B-A22B — 128-expert top-8 MoE [hf:Qwen/Qwen3-235B-A22B]."""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    num_layers=94, d_model=4096, num_heads=64, num_kv_heads=4,
+    d_ff=1536, vocab_size=151936, head_dim=128,
+    moe=MoEConfig(num_experts=128, top_k=8, expert_ff=1536),
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, d_ff=96,
+    vocab_size=512, head_dim=32,
+    moe=MoEConfig(num_experts=8, top_k=2, expert_ff=96), reduced=True,
+)

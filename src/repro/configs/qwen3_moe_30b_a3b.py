@@ -1,0 +1,15 @@
+"""Qwen3-30B-A3B — 128-expert top-8 MoE [hf:Qwen/Qwen3-30B-A3B]."""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    num_layers=48, d_model=2048, num_heads=32, num_kv_heads=4,
+    d_ff=768, vocab_size=151936, head_dim=128,
+    moe=MoEConfig(num_experts=128, top_k=8, expert_ff=768),
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, d_ff=64,
+    vocab_size=512, head_dim=32,
+    moe=MoEConfig(num_experts=8, top_k=2, expert_ff=64), reduced=True,
+)

@@ -1,0 +1,16 @@
+"""RWKV6-1.6B ("Finch") — attention-free, data-dependent decay
+[arXiv:2404.05892]."""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b", family="ssm",
+    num_layers=24, d_model=2048, num_heads=32, num_kv_heads=32,
+    d_ff=7168, vocab_size=65536,
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=1),
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=4, d_ff=256,
+    vocab_size=512, ssm=SSMConfig(state_dim=16, head_dim=32, expand=1),
+    reduced=True,
+)

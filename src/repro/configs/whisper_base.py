@@ -1,0 +1,16 @@
+"""Whisper-base — enc-dec backbone; conv frontend stubbed to
+precomputed frame embeddings (input_specs) [arXiv:2212.04356]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base", family="audio",
+    num_layers=6, d_model=512, num_heads=8, num_kv_heads=8,
+    d_ff=2048, vocab_size=51865, head_dim=64,
+    encoder_layers=6, num_frames=1500, rope_theta=1e4,
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=4, d_ff=256,
+    vocab_size=512, head_dim=32, encoder_layers=2, num_frames=32,
+    reduced=True,
+)

@@ -1,0 +1,19 @@
+"""Zamba2-2.7B — Mamba2 backbone + shared attention block
+[arXiv:2411.15242].  Long-context serving uses a sliding window for the
+shared attention block (see DESIGN.md §Arch-applicability)."""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", family="hybrid",
+    num_layers=54, d_model=2560, num_heads=32, num_kv_heads=32,
+    d_ff=10240, vocab_size=32000, head_dim=80,
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2),
+    shared_attn_every=6, long_attn_window=4096,
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=4, d_model=128, num_heads=4, num_kv_heads=4, d_ff=256,
+    vocab_size=512, head_dim=32,
+    ssm=SSMConfig(state_dim=16, head_dim=32, expand=2),
+    shared_attn_every=2, long_attn_window=64, reduced=True,
+)

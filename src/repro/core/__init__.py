@@ -1,0 +1,15 @@
+"""Core pSCOPE library: the paper's contribution as composable JAX modules."""
+from repro.core.prox import Regularizer, prox_l1, prox_elastic_net, soft_threshold
+from repro.core.objectives import LOGISTIC, LASSO, OBJECTIVES, Objective
+from repro.core.pscope import (PScopeConfig, PScopeState, pscope_outer_step,
+                               run, run_distributed,
+                               make_distributed_outer_step)
+from repro.core import partition, recovery, svrg
+
+__all__ = [
+    "Regularizer", "prox_l1", "prox_elastic_net", "soft_threshold",
+    "LOGISTIC", "LASSO", "OBJECTIVES", "Objective",
+    "PScopeConfig", "PScopeState", "pscope_outer_step", "run",
+    "run_distributed", "make_distributed_outer_step",
+    "partition", "recovery", "svrg",
+]

@@ -1,0 +1,32 @@
+"""Baselines the paper compares against (Section 7.1), in JAX.
+
+  fista       — FISTA (Beck & Teboulle 2009); the paper's distributed
+                version computes the gradient distributively, which is
+                mathematically identical to the serial iteration.
+  pgd         — proximal gradient descent (eq. 2).
+  prox_svrg   — serial proximal SVRG (Xiao & Zhang 2014) == pSCOPE p=1.
+  dpsgd       — distributed (minibatch) proximal SGD with a per-step
+                all-reduce [Li et al. 2016-style, synchronous model].
+  dpsvrg      — distributed minibatch proximal SVRG with a per-step
+                all-reduce [AsyProx-SVRG, Meng et al. 2017 — synchronous
+                algorithmic core].
+  admm        — consensus ADMM (DFAL-style composite splitting).
+  owlqn       — mOWL-QN: orthant-wise L-BFGS for L1 (Gong & Ye 2015).
+  dbcd        — distributed block coordinate descent (Mahajan et al.).
+  cocoa       — proxCoCoA+-style local-subproblem solver.
+"""
+from repro.core.baselines.fista import fista, fista_history
+from repro.core.baselines.pgd import pgd_history
+from repro.core.baselines.prox_svrg import prox_svrg_history
+from repro.core.baselines.dpsgd import dpsgd_history
+from repro.core.baselines.dpsvrg import dpsvrg_history
+from repro.core.baselines.admm import admm_history
+from repro.core.baselines.owlqn import owlqn_history
+from repro.core.baselines.dbcd import dbcd_history
+from repro.core.baselines.cocoa import cocoa_history
+
+__all__ = [
+    "fista", "fista_history", "pgd_history", "prox_svrg_history",
+    "dpsgd_history", "dpsvrg_history", "admm_history", "owlqn_history",
+    "dbcd_history", "cocoa_history",
+]

@@ -1,0 +1,60 @@
+"""Consensus ADMM for distributed composite minimization (DFAL-family).
+
+min (1/p) sum_k F_k(w_k) + R(v)   s.t.  w_k = v.
+
+Worker step solves its prox-augmented local problem inexactly with a few
+gradient steps; the v-update is a prox of R; duals ascend.  One
+communication round (gather w_k + lambda_k) per outer iteration.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prox import Regularizer
+
+Array = jax.Array
+
+
+def admm_history(obj, reg: Regularizer, Xp: Array, yp: Array, w0: Array,
+                 rho: float = 1.0, outer_steps: int = 50,
+                 local_gd_steps: int = 20) -> Tuple[Array, List[float]]:
+    p, n_k, d = Xp.shape
+    Xflat = Xp.reshape(-1, d)
+    yflat = yp.reshape(-1)
+    obj_val = jax.jit(lambda w: obj.loss(w, Xflat, yflat) + reg.value(w))
+    L = obj.lipschitz(Xflat) + rho + reg.lam1
+    eta = 1.0 / L
+
+    def local_solve(Xk, yk, v, lam_k, wk0):
+        def smooth(w):
+            return (obj.loss(w, Xk, yk) + 0.5 * reg.lam1 * jnp.sum(w * w)
+                    + 0.5 * rho * jnp.sum((w - v + lam_k) ** 2))
+
+        g = jax.grad(smooth)
+
+        def body(_, w):
+            return w - eta * g(w)
+
+        return jax.lax.fori_loop(0, local_gd_steps, body, wk0)
+
+    reg_l1 = Regularizer(0.0, reg.lam2)
+
+    @jax.jit
+    def outer(wk, lam, v):
+        wk = jax.vmap(lambda Xk, yk, lk, w0k: local_solve(Xk, yk, v, lk, w0k)
+                      )(Xp, yp, lam, wk)
+        v_new = reg_l1.prox(jnp.mean(wk + lam, axis=0), 1.0 / (rho * p))
+        lam = lam + wk - v_new
+        return wk, lam, v_new
+
+    wk = jnp.tile(w0[None], (p, 1))
+    lam = jnp.zeros_like(wk)
+    v = w0
+    hist = [float(obj_val(v))]
+    for _ in range(outer_steps):
+        wk, lam, v = outer(wk, lam, v)
+        hist.append(float(obj_val(v)))
+    return v, hist

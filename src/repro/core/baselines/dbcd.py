@@ -1,0 +1,55 @@
+"""Distributed block coordinate descent (Mahajan et al., JMLR 2017).
+
+Feature-partitioned: worker k owns a block B_k of coordinates.  Each
+outer round every worker takes a proximal gradient step on its own block
+(gradient restricted to B_k), which requires a full pass over the data
+plus synchronizing the predictions X w — the per-round O(n) cost the
+paper highlights as DBCD's weakness (Table 2).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.prox import Regularizer
+
+Array = jax.Array
+
+
+def dbcd_history(obj, reg: Regularizer, X: Array, y: Array, w0: Array,
+                 p: int = 8, outer_steps: int = 100,
+                 record_every: int = 1) -> Tuple[Array, List[float]]:
+    d = X.shape[1]
+    # contiguous feature blocks
+    bounds = np.linspace(0, d, p + 1).astype(int)
+    block_mask = np.zeros((p, d), np.float32)
+    for k in range(p):
+        block_mask[k, bounds[k]:bounds[k + 1]] = 1.0
+    block_mask = jnp.asarray(block_mask)
+
+    L = obj.lipschitz(X) + reg.lam1
+    eta = 1.0 / L
+    obj_val = jax.jit(lambda w: obj.loss(w, X, y) + reg.value(w))
+    reg_l1 = Regularizer(0.0, reg.lam2)
+
+    @jax.jit
+    def outer(w):
+        def smooth(wv):
+            return obj.loss(wv, X, y) + 0.5 * reg.lam1 * jnp.sum(wv * wv)
+
+        g = jax.grad(smooth)(w)
+        # every worker updates only its block; blocks are disjoint, so the
+        # combined update is one masked prox-gradient step
+        step = reg_l1.prox(w - eta * g, eta) - w
+        return w + jnp.sum(block_mask, axis=0) * step
+
+    w = w0
+    hist = [float(obj_val(w))]
+    for i in range(outer_steps):
+        w = outer(w)
+        if (i + 1) % record_every == 0:
+            hist.append(float(obj_val(w)))
+    return w, hist

@@ -1,0 +1,53 @@
+"""Distributed minibatch proximal SVRG (AsyProx-SVRG's synchronous core).
+
+Outer epoch computes the full gradient once; every inner step samples a
+minibatch ACROSS all workers and all-reduces the VR gradient — i.e.
+communication every inner step (O(n) bytes per epoch), unlike pSCOPE's
+two rounds per epoch.  Same variance reduction, different schedule.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import svrg
+from repro.core.prox import Regularizer
+
+Array = jax.Array
+
+
+def dpsvrg_history(obj, reg: Regularizer, Xp: Array, yp: Array, w0: Array,
+                   eta: float, inner_steps: int, outer_steps: int,
+                   batch: int = 8, seed: int = 0) -> Tuple[Array, List[float]]:
+    p, n_k, _ = Xp.shape
+    Xflat = Xp.reshape(-1, Xp.shape[-1])
+    yflat = yp.reshape(-1)
+    obj_val = jax.jit(lambda w: obj.loss(w, Xflat, yflat) + reg.value(w))
+    grad_full = jax.jit(lambda w: jax.grad(obj.loss_fn)(w, Xflat, yflat))
+
+    @jax.jit
+    def epoch(w_t, key):
+        z = grad_full(w_t)
+        key, sub = jax.random.split(key)
+        idx = jax.random.randint(sub, (inner_steps, p, batch), 0, n_k)
+
+        def step(u, ix):
+            # each worker's VR microgradient, then the per-step all-reduce
+            v = jnp.mean(jax.vmap(
+                lambda Xk, yk, i: svrg.vr_gradient(
+                    obj.loss_fn, u, w_t, z,
+                    jnp.take(Xk, i, axis=0), jnp.take(yk, i, axis=0))
+            )(Xp, yp, ix), axis=0)
+            return reg.prox(u - eta * v, eta), None
+
+        u, _ = jax.lax.scan(step, w_t, idx)
+        return u, key
+
+    w, key = w0, jax.random.PRNGKey(seed)
+    hist = [float(obj_val(w))]
+    for _ in range(outer_steps):
+        w, key = epoch(w, key)
+        hist.append(float(obj_val(w)))
+    return w, hist

@@ -1,0 +1,33 @@
+"""Proximal gradient descent (eq. 2 of the paper)."""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prox import Regularizer
+
+Array = jax.Array
+
+
+def pgd_history(obj, reg: Regularizer, X: Array, y: Array, w0: Array,
+                iters: int = 100, record_every: int = 1
+                ) -> Tuple[Array, List[float]]:
+    L = obj.lipschitz(X) + reg.lam1
+    eta = 1.0 / L
+
+    def smooth_loss(w):
+        return obj.loss(w, X, y) + 0.5 * reg.lam1 * jnp.sum(w * w)
+
+    reg_l1 = Regularizer(0.0, reg.lam2)
+    grad = jax.jit(jax.grad(smooth_loss))
+    obj_val = jax.jit(lambda w: obj.loss(w, X, y) + reg.value(w))
+
+    w = w0
+    hist = [float(obj_val(w))]
+    for i in range(iters):
+        w = reg_l1.prox(w - eta * grad(w), eta)
+        if (i + 1) % record_every == 0:
+            hist.append(float(obj_val(w)))
+    return w, hist

@@ -1,0 +1,99 @@
+"""ERM objectives used by the paper's experiments.
+
+Two models (Section 7):
+  * logistic regression with elastic net:
+      P(w) = (1/n) sum log(1+exp(-y_i x_i^T w)) + (lam1/2)||w||^2 + lam2||w||_1
+  * Lasso:
+      P(w) = (1/(2n)) sum (x_i^T w - y_i)^2 + lam2 ||w||_1
+
+The smooth part F(w) is separated from the regularizer R(w) (see
+core/prox.Regularizer); all functions operate on dense (B, d) batches so
+they map onto the MXU.  Sparse datasets are stored densely-padded by the
+data pipeline (see data/synthetic.py); correctness is unaffected.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _sigmoid(z):
+    return jax.nn.sigmoid(z)
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """A smooth finite-sum objective F(w) = (1/n) sum f_i(w).
+
+    loss(w, X, y)  -> mean loss over the batch
+    grad(w, X, y)  -> mean gradient over the batch
+    Both are jit/vmap/grad friendly. `lipschitz(X)` returns a bound on
+    the smoothness constant L of the mean loss (used to set eta per
+    Corollary 1: eta = mu / (12 L^2) style rules).
+    """
+
+    name: str
+    loss_fn: Callable
+    lipschitz_fn: Callable
+
+    def loss(self, w: Array, X: Array, y: Array) -> Array:
+        return self.loss_fn(w, X, y)
+
+    def grad(self, w: Array, X: Array, y: Array) -> Array:
+        return jax.grad(self.loss_fn)(w, X, y)
+
+    def loss_and_grad(self, w, X, y):
+        return jax.value_and_grad(self.loss_fn)(w, X, y)
+
+    def lipschitz(self, X: Array) -> float:
+        return self.lipschitz_fn(X)
+
+
+def _logistic_loss(w, X, y):
+    z = X @ w
+    # log(1 + exp(-y z)) computed stably
+    m = -y * z
+    return jnp.mean(jnp.logaddexp(0.0, m))
+
+
+def _logistic_lipschitz(X):
+    # f_i(w) = log(1+exp(-y x^T w)); f_i'' <= ||x||^2 / 4.
+    row_sq = jnp.sum(X * X, axis=-1)
+    return float(jnp.max(row_sq) / 4.0)
+
+
+def _lasso_loss(w, X, y):
+    r = X @ w - y
+    return 0.5 * jnp.mean(r * r)
+
+
+def _lasso_lipschitz(X):
+    row_sq = jnp.sum(X * X, axis=-1)
+    return float(jnp.max(row_sq))
+
+
+LOGISTIC = Objective("logistic", _logistic_loss, _logistic_lipschitz)
+LASSO = Objective("lasso", _lasso_loss, _lasso_lipschitz)
+
+OBJECTIVES = {"logistic": LOGISTIC, "lasso": LASSO}
+
+
+def full_objective_value(obj: Objective, reg, w, X, y):
+    """P(w) = F(w) + R(w)."""
+    return obj.loss(w, X, y) + reg.value(w)
+
+
+def strong_convexity(obj: Objective, reg, X) -> float:
+    """mu of the smooth part F + (lam1/2)||.||^2.
+
+    For logistic/lasso the data term is convex (mu_data >= smallest
+    eigenvalue of the Hessian; we use lam1 as the guaranteed modulus,
+    plus lambda_min(X^T X)/n for lasso when cheap to estimate).
+    """
+    mu = reg.lam1
+    return float(mu)

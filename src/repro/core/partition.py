@@ -1,0 +1,148 @@
+"""Data partitions and the paper's partition-goodness theory (Section 4).
+
+Builders return index arrays of shape (p, n_k) selecting each worker's
+shard; `stack_partition` materializes (p, n_k, d) worker-major data.
+
+Metrics:
+  * `local_global_gap(a)` — Definition 4:
+        l_pi(a) = P(w*) - (1/p) sum_k min_w P_k(w; a),
+    where P_k(w; a) = F_k(w) + (grad F(a) - grad F_k(a))^T w + R(w) is
+    the local objective (eq. 6).  Each inner min is solved with FISTA.
+  * `gamma_estimate` — Definition 5's gamma(pi; eps) estimated as the
+    sup of l_pi(a)/||a-w*||^2 over sampled a with ||a-w*||^2 >= eps.
+  * `quadratic_gamma_exact` — the closed form of Lemma 4/5 for
+    (diagonal) quadratic partitions: gamma = max_i (1/p) sum_k
+    (A(i,i)-A_k(i,i))^2 / A_k(i,i).  Used to cross-check the estimator.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.objectives import Objective
+from repro.core.prox import Regularizer
+from repro.core.baselines.fista import fista
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Partition builders (return numpy index arrays, shape (p, n_k))
+# ---------------------------------------------------------------------------
+
+def uniform_partition(key, n: int, p: int) -> np.ndarray:
+    """pi_1: uniform random assignment (Lemma 2's good partition)."""
+    n_k = n // p
+    perm = np.asarray(jax.random.permutation(key, n))
+    return perm[: n_k * p].reshape(p, n_k)
+
+
+def label_skew_partition(y: np.ndarray, p: int, pos_frac_first_half: float
+                         ) -> np.ndarray:
+    """pi_2 / pi_3 of Section 7.4.
+
+    A `pos_frac_first_half` fraction of positive instances goes to the
+    first p/2 workers; the rest to the last p/2 (and symmetrically for
+    negatives).  pos_frac=0.75 -> pi_2; pos_frac=1.0 -> pi_3 (full class
+    separation); pos_frac=0.5 ~ uniform.
+    """
+    y = np.asarray(y)
+    pos = np.where(y > 0)[0]
+    neg = np.where(y <= 0)[0]
+    rng = np.random.RandomState(0)
+    rng.shuffle(pos)
+    rng.shuffle(neg)
+    cut_p = int(len(pos) * pos_frac_first_half)
+    cut_n = int(len(neg) * (1.0 - pos_frac_first_half))
+    first = np.concatenate([pos[:cut_p], neg[:cut_n]])
+    second = np.concatenate([pos[cut_p:], neg[cut_n:]])
+    rng.shuffle(first)
+    rng.shuffle(second)
+    half = p // 2
+    n_k = min(len(first) // half, len(second) // (p - half))
+    shards = [first[i * n_k:(i + 1) * n_k] for i in range(half)]
+    shards += [second[i * n_k:(i + 1) * n_k] for i in range(p - half)]
+    return np.stack(shards)
+
+
+def replicated_partition(n: int, p: int) -> np.ndarray:
+    """pi*: every worker sees the whole dataset (best possible, gamma=0)."""
+    return np.tile(np.arange(n), (p, 1))
+
+
+def stack_partition(X, y, idx: np.ndarray) -> Tuple[Array, Array]:
+    """Materialize worker-major (p, n_k, d), (p, n_k) arrays."""
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    return X[idx], y[idx]
+
+
+# ---------------------------------------------------------------------------
+# Goodness metrics
+# ---------------------------------------------------------------------------
+
+def _local_objective_min(obj: Objective, reg: Regularizer,
+                         Xk: Array, yk: Array, g_shift: Array,
+                         w_init: Array, iters: int = 400) -> Tuple[Array, Array]:
+    """min_w F_k(w) + g_shift^T w + R(w) via FISTA; returns (w_k*, value)."""
+
+    def smooth_loss(w):
+        return obj.loss(w, Xk, yk) + g_shift @ w
+
+    L = obj.lipschitz(Xk) + 1e-12
+    w_star_k = fista(smooth_loss, reg, w_init, L=L + reg.lam1, iters=iters)
+    val = smooth_loss(w_star_k) + reg.value(w_star_k)
+    return w_star_k, val
+
+
+def local_global_gap(obj: Objective, reg: Regularizer, Xp: Array, yp: Array,
+                     a: Array, w_star: Array, p_star_val: float,
+                     iters: int = 400) -> float:
+    """l_pi(a) of Definition 4 (>= 0, == 0 at a = w*)."""
+    p = Xp.shape[0]
+    g_full = jnp.mean(
+        jax.vmap(lambda X, y: jax.grad(obj.loss_fn)(a, X, y))(Xp, yp), axis=0)
+    total = 0.0
+    for k in range(p):
+        g_k = jax.grad(obj.loss_fn)(a, Xp[k], yp[k])
+        shift = g_full - g_k
+        _, val = _local_objective_min(obj, reg, Xp[k], yp[k], shift,
+                                      w_init=a, iters=iters)
+        total += float(val)
+    return float(p_star_val) - total / p
+
+
+def gamma_estimate(obj: Objective, reg: Regularizer, Xp: Array, yp: Array,
+                   w_star: Array, p_star_val: float, eps: float = 1e-3,
+                   num_samples: int = 16, radius: float = 1.0,
+                   seed: int = 0, iters: int = 300) -> float:
+    """Monte-Carlo estimate of gamma(pi; eps) (Definition 5)."""
+    key = jax.random.PRNGKey(seed)
+    d = w_star.shape[0]
+    best = 0.0
+    for s in range(num_samples):
+        key, sub = jax.random.split(key)
+        direction = jax.random.normal(sub, (d,))
+        direction = direction / jnp.linalg.norm(direction)
+        scale = float(jnp.sqrt(eps)) * (1.0 + s * radius / num_samples)
+        a = w_star + scale * direction
+        gap = local_global_gap(obj, reg, Xp, yp, a, w_star, p_star_val,
+                               iters=iters)
+        ratio = gap / float(jnp.sum((a - w_star) ** 2))
+        best = max(best, ratio)
+    return best
+
+
+def quadratic_gamma_exact(A_diag_workers: np.ndarray) -> float:
+    """Lemma 5 closed form for diagonal quadratics.
+
+    A_diag_workers: (p, d) positive diagonal entries of each worker's
+    local quadratic A_k; gamma = max_i (1/p) sum_k (A(i)-A_k(i))^2/A_k(i).
+    """
+    A = np.asarray(A_diag_workers, dtype=np.float64)
+    mean = A.mean(axis=0)
+    per_coord = ((mean[None, :] - A) ** 2 / A).mean(axis=0)
+    return float(per_coord.max())

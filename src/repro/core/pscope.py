@@ -1,0 +1,207 @@
+"""Proximal SCOPE (pSCOPE) — Algorithm 1 of the paper.
+
+Cooperative Autonomous Local Learning (CALL):
+  outer step t:
+    1. z  = grad F(w_t)                      (one DP all-reduce)
+    2. each worker runs M inner prox-SVRG steps on its local shard,
+       u <- prox_{R,eta}(u - eta * (grad f_i(u) - grad f_i(w_t) + z)),
+       with NO communication
+    3. w_{t+1} = (1/p) sum_k u_{k,M}         (second DP all-reduce)
+
+Two execution modes:
+  * `pscope_outer_step` — single-program simulation: the worker axis is
+    a leading array dimension, inner loops vmapped.  Used for unit
+    tests, benchmarks and partition studies on CPU.  Bitwise-defined
+    semantics identical to the distributed mode.
+  * `make_distributed_outer_step` — shard_map over a real mesh axis;
+    the inner scan contains no DP collectives (this is the paper's
+    communication structure and what the dry-run lowers).
+
+p = 1 degenerates to proximal SVRG (Xiao & Zhang 2014), Corollary 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import svrg
+from repro.core.prox import Regularizer
+from repro.core.objectives import Objective
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PScopeConfig:
+    eta: float = 0.1            # inner learning rate
+    inner_steps: int = 64       # M
+    inner_batch: int = 1        # b (=1 reproduces Algorithm 1 exactly)
+    outer_steps: int = 30       # T
+    seed: int = 0
+    # Straggler mitigation: if participation[k] == 0 for an outer round,
+    # worker k's iterate is excluded from the average (weights renormalized).
+    # None = all participate (the paper's setting).
+    use_linear_model_fastpath: bool = True
+
+
+class PScopeState(NamedTuple):
+    w: Array          # global iterate (d,)
+    t: Array          # outer step counter
+    key: Array
+
+
+def init_state(w0: Array, seed: int = 0) -> PScopeState:
+    return PScopeState(w=w0, t=jnp.zeros((), jnp.int32),
+                       key=jax.random.PRNGKey(seed))
+
+
+def _inner_loop(loss_fn: Callable, reg: Regularizer, eta: float,
+                u0: Array, w_anchor: Array, z: Array,
+                Xk: Array, yk: Array, idx: Array,
+                h_prime: Optional[Callable] = None) -> Array:
+    """M inner prox-SVRG steps on one worker's shard. idx: (M, b)."""
+
+    def step(u, ix):
+        Xb = jnp.take(Xk, ix, axis=0)
+        yb = jnp.take(yk, ix, axis=0)
+        if h_prime is not None:
+            v = svrg.linear_model_vr_gradient(h_prime, u, w_anchor, z, Xb, yb)
+        else:
+            v = svrg.vr_gradient(loss_fn, u, w_anchor, z, Xb, yb)
+        u = reg.prox(u - eta * v, eta)
+        return u, None
+
+    u, _ = jax.lax.scan(step, u0, idx)
+    return u
+
+
+def _pick_h_prime(obj: Objective, cfg: PScopeConfig):
+    if not cfg.use_linear_model_fastpath:
+        return None
+    return {"logistic": svrg.logistic_h_prime,
+            "lasso": svrg.lasso_h_prime}.get(obj.name)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def pscope_outer_step(obj: Objective, reg: Regularizer, cfg: PScopeConfig,
+                      state: PScopeState, Xp: Array, yp: Array,
+                      participation: Optional[Array] = None) -> PScopeState:
+    """One outer iteration. Xp: (p, n_k, d), yp: (p, n_k).
+
+    Simulation mode: workers along axis 0, inner loops vmapped.
+    """
+    p, n_k, _ = Xp.shape
+    w_t, key = state.w, state.key
+    key, k_idx = jax.random.split(key)
+
+    # --- phase 1: full gradient (the first "all-reduce") ------------------
+    # z = grad F(w_t) = mean over workers of local full gradient.
+    local_grads = jax.vmap(lambda X, y: jax.grad(obj.loss_fn)(w_t, X, y))(Xp, yp)
+    z = jnp.mean(local_grads, axis=0)
+
+    # --- phase 2: autonomous local learning (no communication) ------------
+    idx = jax.vmap(
+        lambda k: svrg.sample_microbatches(k, n_k, cfg.inner_steps,
+                                           cfg.inner_batch)
+    )(jax.random.split(k_idx, p))
+    h_prime = _pick_h_prime(obj, cfg)
+    inner = functools.partial(_inner_loop, obj.loss_fn, reg, cfg.eta,
+                              h_prime=h_prime)
+    u_final = jax.vmap(lambda Xk, yk, ixk: inner(w_t, w_t, z, Xk, yk, ixk))(
+        Xp, yp, idx)
+
+    # --- phase 3: cooperative averaging (the second "all-reduce") ---------
+    if participation is None:
+        w_next = jnp.mean(u_final, axis=0)
+    else:
+        wts = participation.astype(u_final.dtype)
+        w_next = jnp.sum(u_final * wts[:, None], axis=0) / jnp.maximum(
+            jnp.sum(wts), 1.0)
+
+    return PScopeState(w=w_next, t=state.t + 1, key=key)
+
+
+def run(obj: Objective, reg: Regularizer, Xp: Array, yp: Array, w0: Array,
+        cfg: PScopeConfig, record_every: int = 1,
+        participation_schedule: Optional[Callable[[int], Array]] = None):
+    """Full pSCOPE driver. Returns (w_T, history of P(w_t))."""
+    state = init_state(w0, cfg.seed)
+    Xflat = Xp.reshape(-1, Xp.shape[-1])
+    yflat = yp.reshape(-1)
+    obj_val = jax.jit(lambda w: obj.loss(w, Xflat, yflat) + reg.value(w))
+    history = [float(obj_val(state.w))]
+    for t in range(cfg.outer_steps):
+        part = (participation_schedule(t)
+                if participation_schedule is not None else None)
+        state = pscope_outer_step(obj, reg, cfg, state, Xp, yp, part)
+        if (t + 1) % record_every == 0:
+            history.append(float(obj_val(state.w)))
+    return state.w, history
+
+
+# ---------------------------------------------------------------------------
+# Distributed execution: shard_map over a real mesh axis.
+# ---------------------------------------------------------------------------
+
+def make_distributed_outer_step(obj: Objective, reg: Regularizer,
+                                cfg: PScopeConfig, mesh,
+                                axis: str = "data"):
+    """Returns a jit'd outer step where the worker axis is a mesh axis.
+
+    Data layout: X (p * n_k, d) sharded over `axis` on dim 0; w replicated.
+    The shard_map body performs exactly two collectives (pmean of the
+    anchor gradient, pmean of the final iterates); the inner scan is
+    collective-free — this is the CALL communication structure.
+    """
+    h_prime = _pick_h_prime(obj, cfg)
+
+    def body(w_t, key, Xk, yk):
+        # phase 1: one all-reduce for the anchor (full) gradient
+        z_local = jax.grad(obj.loss_fn)(w_t, Xk, yk)
+        z = jax.lax.pmean(z_local, axis)
+        # phase 2: local inner loop, no DP collectives
+        widx = jax.lax.axis_index(axis)
+        k_local = jax.random.fold_in(key, widx)
+        idx = svrg.sample_microbatches(k_local, Xk.shape[0],
+                                       cfg.inner_steps, cfg.inner_batch)
+        u = _inner_loop(obj.loss_fn, reg, cfg.eta, w_t, w_t, z, Xk, yk, idx,
+                        h_prime=h_prime)
+        # phase 3: one all-reduce to average iterates
+        return jax.lax.pmean(u, axis)
+
+    shard_body = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(axis), P(axis)),
+        out_specs=P(),
+        # the inner scan carry starts replicated (u0 = w_t) and becomes
+        # device-varying through per-shard sampling; disable the VMA
+        # consistency check rather than pcast-ing every carry leaf
+        check_vma=False,
+    )
+
+    @jax.jit
+    def outer_step(state: PScopeState, X: Array, y: Array) -> PScopeState:
+        key, sub = jax.random.split(state.key)
+        w_next = shard_body(state.w, sub, X, y)
+        return PScopeState(w=w_next, t=state.t + 1, key=key)
+
+    return outer_step
+
+
+def run_distributed(obj: Objective, reg: Regularizer, X: Array, y: Array,
+                    w0: Array, cfg: PScopeConfig, mesh, axis: str = "data",
+                    record_every: int = 1):
+    step = make_distributed_outer_step(obj, reg, cfg, mesh, axis)
+    state = init_state(w0, cfg.seed)
+    obj_val = jax.jit(lambda w: obj.loss(w, X, y) + reg.value(w))
+    history = [float(obj_val(state.w))]
+    for t in range(cfg.outer_steps):
+        state = step(state, X, y)
+        if (t + 1) % record_every == 0:
+            history.append(float(obj_val(state.w)))
+    return state.w, history

@@ -1,0 +1,10 @@
+from repro.data.synthetic import (make_sparse_classification,
+                                  make_sparse_regression, DATASET_SPECS,
+                                  make_dataset, make_block_sparse)
+from repro.data.pipeline import ShardedBatchIterator, TokenDataset
+
+__all__ = [
+    "make_sparse_classification", "make_sparse_regression", "DATASET_SPECS",
+    "make_dataset", "make_block_sparse", "ShardedBatchIterator",
+    "TokenDataset",
+]

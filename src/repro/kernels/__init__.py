@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+  lazy_prox       — Lemma-11 recovery catch-up (the paper's Section 6)
+  fused_prox_svrg — fused VR-gradient + elastic-net prox inner update
+  flash_attention — blocked online-softmax attention (prefill/long ctx)
+"""
+from repro.kernels.ops import lazy_prox, fused_prox_svrg, flash_attention
+
+__all__ = ["lazy_prox", "fused_prox_svrg", "flash_attention"]

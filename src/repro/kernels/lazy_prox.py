@@ -1,0 +1,84 @@
+"""Pallas TPU kernel for the paper's recovery rule (Lemma 11).
+
+Catch a parameter block up by q skipped autonomous prox steps
+    u <- S_{lam2*eta}((1 - lam1*eta) u - eta z)
+in closed form.  Elementwise on the VPU; (8,128)-aligned VMEM blocks.
+
+The math is shared with core/recovery.py (`recovery_catch_up`), which
+doubles as the ref oracle — the kernel body runs the identical
+branch-free phase decomposition on a VMEM tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import recovery as _rec
+
+# sublane x lane tile; multiple rows per program amortizes grid overhead
+_BLOCK_ROWS = 256
+_LANES = 128
+
+
+def _lazy_prox_kernel(u_ref, z_ref, q_ref, o_ref, *, eta, lam1, lam2, q_max):
+    u = u_ref[...]
+    z = z_ref[...]
+    q = q_ref[...]
+    o_ref[...] = _catch_up_block(u, z, q, eta, lam1, lam2, q_max)
+
+
+def _catch_up_block(u, z, q, eta, lam1, lam2, q_max):
+    """Branch-free Lemma-11 catch-up on one VMEM tile (same math as
+    core.recovery.recovery_catch_up, inlined so Pallas traces only
+    elementwise VPU ops)."""
+    s0 = jnp.sign(u)
+    q0 = _rec._q0_branch_steps(u, jnp.where(s0 == 0, 1.0, s0), z, eta, lam1,
+                               lam2, q_max)
+    q0 = jnp.where(s0 == 0, 0, q0)
+    a = jnp.minimum(q, q0)
+    u_a = jnp.where(s0 == 0, u, _rec._affine_phase(u, s0, a, z, eta, lam1,
+                                                   lam2))
+    done = q <= a
+
+    u_b = _rec._exact_step(u_a, z, eta, lam1, lam2)
+    u_res = jnp.where(done, u_a, u_b)
+    done_b = done | (q <= a + 1)
+
+    absorbed = (u_b == 0.0) & (jnp.abs(z) <= lam2)
+    done_zero = done_b | absorbed
+
+    u_c = _rec._exact_step(u_b, z, eta, lam1, lam2)
+    jumped = u_b != 0.0
+    s1 = jnp.where(jumped, jnp.sign(u_b), jnp.sign(u_c))
+    start = jnp.where(jumped, u_b, u_c)
+    r = jnp.maximum(jnp.where(jumped, q - a - 1, q - a - 2), 0)
+    u_phase_b = _rec._affine_phase(start, s1, r, z, eta, lam1, lam2)
+
+    out = jnp.where(done_zero, jnp.where(done_b, u_res, 0.0), u_phase_b)
+    return jnp.where(q == 0, u, out)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eta", "lam1", "lam2", "interpret"))
+def lazy_prox_pallas(u: jax.Array, z: jax.Array, q: jax.Array, *, eta: float,
+                     lam1: float, lam2: float,
+                     interpret: bool = True) -> jax.Array:
+    """u, z: (rows, 128) float32; q: (rows, 128) int32. rows % 8 == 0."""
+    rows, lanes = u.shape
+    assert lanes == _LANES and rows % 8 == 0, (rows, lanes)
+    block_rows = min(_BLOCK_ROWS, rows)
+    grid = (rows // block_rows,)
+    bspec = pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0))
+    kernel = functools.partial(_lazy_prox_kernel, eta=eta, lam1=lam1,
+                               lam2=lam2, q_max=1 << 30)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[bspec, bspec, bspec],
+        out_specs=bspec,
+        out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
+        interpret=interpret,
+    )(u, z, q)

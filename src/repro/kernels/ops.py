@@ -1,0 +1,86 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles shape canonicalization (padding to (rows, 128) tiles), dtype
+promotion, and the interpret-mode switch: on the CPU container kernels
+execute via `interpret=True`; on a real TPU backend they compile to
+Mosaic.  `USE_PALLAS=0` env var falls back to the jnp reference (used to
+A/B the kernels inside the full system).
+"""
+from __future__ import annotations
+
+import os
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.lazy_prox import lazy_prox_pallas
+from repro.kernels.fused_prox_svrg import fused_prox_svrg_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+_LANES = 128
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _use_pallas() -> bool:
+    return os.environ.get("USE_PALLAS", "1") != "0"
+
+
+def _to_tiles(x: jax.Array):
+    """Flatten to (rows, 128) with zero padding; returns (tiles, d)."""
+    flat = x.reshape(-1)
+    d = flat.shape[0]
+    rows = max(8, -(-d // _LANES))
+    rows = -(-rows // 8) * 8
+    pad = rows * _LANES - d
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(rows, _LANES), d
+
+
+def _from_tiles(tiles: jax.Array, d: int, shape):
+    return tiles.reshape(-1)[:d].reshape(shape)
+
+
+def lazy_prox(u: jax.Array, z: jax.Array, q: jax.Array, *, eta: float,
+              lam1: float, lam2: float) -> jax.Array:
+    """Catch-up of q skipped prox steps (Lemma 11); any shape, q int."""
+    if not _use_pallas():
+        return _ref.lazy_prox_ref(u, z, q, eta=eta, lam1=lam1, lam2=lam2)
+    ut, d = _to_tiles(u.astype(jnp.float32))
+    zt, _ = _to_tiles(jnp.broadcast_to(z, u.shape).astype(jnp.float32))
+    qt, _ = _to_tiles(jnp.broadcast_to(q, u.shape).astype(jnp.int32))
+    out = lazy_prox_pallas(ut, zt, qt, eta=eta, lam1=lam1, lam2=lam2,
+                           interpret=_interpret())
+    return _from_tiles(out, d, u.shape).astype(u.dtype)
+
+
+def fused_prox_svrg(u: jax.Array, g_u: jax.Array, g_w: jax.Array,
+                    z: jax.Array, *, eta: float, lam1: float,
+                    lam2: float) -> jax.Array:
+    """Fused VR-gradient + elastic-net prox step; any shape."""
+    if not _use_pallas():
+        return _ref.fused_prox_svrg_ref(u, g_u, g_w, z, eta=eta, lam1=lam1,
+                                        lam2=lam2)
+    ut, d = _to_tiles(u.astype(jnp.float32))
+    gut, _ = _to_tiles(g_u.astype(jnp.float32))
+    gwt, _ = _to_tiles(g_w.astype(jnp.float32))
+    zt, _ = _to_tiles(z.astype(jnp.float32))
+    out = fused_prox_svrg_pallas(ut, gut, gwt, zt, eta=eta, lam1=lam1,
+                                 lam2=lam2, interpret=_interpret())
+    return _from_tiles(out, d, u.shape).astype(u.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """Blocked attention; q (B,H,S,D), kv (B,KVH,S,D)."""
+    if not _use_pallas():
+        return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+    return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=_interpret())

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.recovery import recovery_catch_up as _catch_up
+from repro.core.prox import prox_elastic_net
+
+
+def lazy_prox_ref(u, z, q, *, eta, lam1, lam2):
+    """Oracle for kernels/lazy_prox: Lemma-11 catch-up (any shape)."""
+    return _catch_up(u, z, q, eta, lam1, lam2)
+
+
+def lazy_prox_sequential_ref(u, z, q, *, eta, lam1, lam2, max_steps):
+    """Literal step-by-step oracle (slow; ground truth for both)."""
+    from repro.core.recovery import sequential_catch_up
+    return sequential_catch_up(u, z, q, eta, lam1, lam2, max_steps)
+
+
+def fused_prox_svrg_ref(u, g_u, g_w, z, *, eta, lam1, lam2):
+    """Oracle for kernels/fused_prox_svrg."""
+    v = g_u - g_w + z
+    return prox_elastic_net(u - eta * v, eta, lam1, lam2)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None):
+    """Oracle for kernels/flash_attention: exact softmax attention, fp32.
+
+    q: (B, H, Sq, D); k, v: (B, KVH, Sk, D) with GQA head grouping.
+    """
+    B, H, Sq, D = q.shape
+    KVH, Sk = k.shape[1], k.shape[2]
+    group = H // KVH
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

@@ -1,0 +1,308 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent without
+hardware: jit(step).lower(**input_specs).compile() must succeed on the
+production mesh, memory_analysis() must fit 16 GiB/chip, and
+cost_analysis() + the parsed collective schedule feed the roofline
+table (EXPERIMENTS.md section Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k \
+      --mesh multi --step pscope --out results/dryrun/x.json
+  python -m repro.launch.dryrun --all --mesh both   # full grid, resumable
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import numpy as np
+
+
+def _build_step(arch: str, shape_name: str, mesh, step_kind: str,
+                overrides=None):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P, NamedSharding
+
+    from repro import configs
+    from repro.configs.base import SHAPES, cell_applicable
+    from repro.models import build_model
+    from repro.sharding import rules_for_config
+    from repro.optim.pscope_dl import (PScopeDLConfig, make_pscope_train_step,
+                                       make_standard_train_step,
+                                       init_train_state)
+    from repro.optim import optimizers as opt
+    from repro.models import module as mod
+
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return None, {"skipped": True, "reason": why}
+
+    multi_pod = "pod" in mesh.axis_names
+    # parallelism mode: TP-only keeps params replicated over DP — fine
+    # for inference of small archs; training holds optimizer state
+    # (AdamW moments, or pSCOPE's u/z/anchor), so anything above ~2B
+    # params uses FSDP+TP (ZeRO-3 over the `data` axis).
+    big_infer = arch in ("qwen3-moe-30b-a3b", "qwen3-moe-235b-a22b",
+                         "phi3-medium-14b", "llama-3.2-vision-11b")
+    big_train = big_infer or arch in ("minitron-4b", "minicpm-2b",
+                                      "zamba2-2.7b")
+    if shape.kind == "train":
+        mode = "fsdp_tp" if big_train else "tp"
+    else:
+        mode = "fsdp_tp" if big_infer else "tp"
+    if step_kind == "pscope" and multi_pod and cfg.d_model >= 1024:
+        mode = "fsdp_tp"
+    if step_kind == "pscope" and not multi_pod and big_train:
+        return None, {"skipped": True,
+                      "reason": "single-pod pSCOPE needs TP-replicated "
+                                "params (workers own the data axis); this "
+                                "arch requires FSDP — covered by the "
+                                "multi-pod cell"}
+    if overrides and "mode" in overrides:
+        mode = overrides["mode"]
+    tp_size = mesh.shape["model"]
+    # activation sequence parallelism for full-sequence cells: the
+    # residual stream is seq-sharded over `model` between blocks, so
+    # the per-layer stored activations shrink by the TP degree
+    seq_parallel = shape.kind in ("train", "prefill")
+    if overrides and "seq_parallel" in overrides:
+        seq_parallel = overrides["seq_parallel"]
+    rules = rules_for_config(cfg, mode, multi_pod, tp_size,
+                             seq_parallel=seq_parallel)
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    # tiny global batches (long_500k has B=1) cannot shard the DP axes
+    if shape.global_batch % dp_size != 0:
+        rules["batch"] = None
+        dp = ()
+    if overrides and "rules" in overrides:
+        rules.update(overrides["rules"])
+    model = build_model(cfg, rules)
+    pspecs = model.param_pspecs()
+    params_abs = model.abstract_params()
+
+    def in_shard(tree_specs):
+        import jax
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), tree_specs)
+
+    if shape.kind == "train":
+        batch_specs = model.input_specs(shape)
+        batch_shardings = {k: NamedSharding(mesh, P(dp))
+                           for k in batch_specs}
+        if step_kind == "pscope":
+            from repro.optim.pscope_dl import make_pscope_train_step_stacked
+            waxes = ("pod",) if multi_pod else ("data",)
+            # single-pod pSCOPE needs TP-replicated params (workers own
+            # the data axis); multi-pod keeps FSDP over data
+            pcfg = PScopeDLConfig(
+                inner_steps=(overrides or {}).get("inner_steps", 2),
+                num_microbatches=(overrides or {}).get("n_mb", 2),
+                lam1=1e-5, lam2=1e-6, worker_axes=waxes,
+                # z in bf16: the anchor gradient is already averaged
+                # over the full batch (low variance); halves pSCOPE's
+                # extra state (u + z + anchor w)
+                z_dtype=jnp.bfloat16,
+                unroll_loops=(overrides or {}).get("unroll", False))
+            # the stacked-worker formulation (pure auto-SPMD) is robust
+            # across FSDP/TP modes; the manual shard_map variant trips
+            # several XLA partitioner bugs on this version (see
+            # optim/pscope_dl.py docstrings) and remains a library
+            # option exercised by the distributed tests on small meshes
+            step = make_pscope_train_step_stacked(model, mesh, pcfg,
+                                                  donate=False)
+            state_abs = jax.eval_shape(
+                lambda p: init_train_state(p, pcfg), params_abs)
+            key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            lowered = jax.jit(
+                step.__wrapped__,
+                in_shardings=(in_shard(pspecs),
+                              jax.tree_util.tree_map(
+                                  lambda _: NamedSharding(mesh, P()),
+                                  state_abs),
+                              batch_shardings, NamedSharding(mesh, P())),
+            ).lower(params_abs, state_abs, batch_specs, key_abs)
+        else:
+            n_mb = (overrides or {}).get("n_mb", 4)
+            step = make_standard_train_step(model, mesh,
+                                            num_microbatches=n_mb,
+                                            moment_dtype=(
+                                                jnp.bfloat16 if "235b" in arch
+                                                else jnp.float32),
+                                            donate=False)
+            opt_abs = jax.eval_shape(
+                lambda p: opt.adamw_init(
+                    p, jnp.bfloat16 if "235b" in arch else jnp.float32),
+                params_abs)
+            opt_shardings = jax.tree_util.tree_map(
+                lambda _: None, opt_abs)
+            # moments shard like params (ZeRO-1/3 consistent)
+            opt_shardings = {
+                "m": in_shard(pspecs), "v": in_shard(pspecs),
+                "t": NamedSharding(mesh, P())}
+            key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            lowered = jax.jit(
+                step.__wrapped__,
+                in_shardings=(in_shard(pspecs), opt_shardings,
+                              batch_shardings, NamedSharding(mesh, P())),
+            ).lower(params_abs, opt_abs, batch_specs, key_abs)
+        return lowered, {"kind": "train", "step": step_kind,
+                         "mode": mode, "params": model.param_count()}
+
+    if shape.kind == "prefill":
+        batch_specs = model.input_specs(shape)
+        batch_shardings = {k: NamedSharding(mesh, P(dp))
+                           for k in batch_specs}
+
+        def prefill(params, batch):
+            return model.logits(params, batch)
+
+        lowered = jax.jit(
+            prefill,
+            in_shardings=(in_shard(pspecs), batch_shardings),
+            out_shardings=NamedSharding(mesh, P(dp, None, "model")),
+        ).lower(params_abs, batch_specs)
+        return lowered, {"kind": "prefill", "mode": mode,
+                         "params": model.param_count()}
+
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+    cache_specs = model.cache_specs(B, S)
+    cache_abs = mod.abstract_params(cache_specs)
+    cache_shardings = in_shard(mod.params_pspecs(cache_specs, rules))
+    in_specs = model.input_specs(shape)
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    lowered = jax.jit(
+        serve_step,
+        in_shardings=(in_shard(pspecs), cache_shardings,
+                      NamedSharding(mesh, P(dp)), NamedSharding(mesh, P(dp))),
+        # the KV cache is donated: decode updates it in place (input/
+        # output aliasing), halving the serving working set
+        donate_argnums=(1,),
+    ).lower(params_abs, cache_abs, in_specs["tokens"], in_specs["pos"])
+    return lowered, {"kind": "decode", "mode": mode,
+                     "params": model.param_count()}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, step_kind: str,
+             out_path: str = None, overrides=None) -> dict:
+    import jax
+    from repro.launch.mesh import make_production_mesh, HBM_BYTES
+    from repro.launch import roofline as rf
+    from repro.configs.base import SHAPES
+    from repro import configs
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "step": step_kind, "devices": int(np.prod(mesh.devices.shape))}
+    try:
+        with mesh:
+            lowered, meta = _build_step(arch, shape_name, mesh, step_kind,
+                                        overrides)
+            result.update(meta)
+            if lowered is None:
+                result["status"] = "skipped"
+                return result
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        chips_per_pod = 256
+        costs = rf.analyze_hlo(hlo, chips_per_pod)
+        terms = rf.roofline_terms(costs)
+        cfg = configs.get(arch)
+        shape = SHAPES[shape_name]
+        mf = rf.model_flops(cfg, shape, backward=(meta["kind"] == "train"))
+        mf_per_chip = mf / result["devices"]
+        if meta.get("step") == "pscope":
+            # pscope computes 1 z-pass + 2 grads per inner step
+            ov = overrides or {}
+            mf_per_chip *= (1 + 2 * ov.get("inner_steps", 2)
+                            / ov.get("n_mb", 2))
+        result.update({
+            "status": "ok",
+            "lower_s": round(t1 - t0, 1),
+            "compile_s": round(t2 - t1, 1),
+            "per_device_bytes": {
+                "argument": mem.argument_size_in_bytes,
+                "output": mem.output_size_in_bytes,
+                "temp": mem.temp_size_in_bytes,
+                "peak_est": mem.argument_size_in_bytes
+                + mem.temp_size_in_bytes,
+            },
+            "fits_hbm": (mem.argument_size_in_bytes
+                         + mem.temp_size_in_bytes) < HBM_BYTES,
+            "xla_cost_analysis": {"flops_body_once": float(
+                cost.get("flops", 0.0)), "bytes_body_once": float(
+                cost.get("bytes accessed", 0.0))},
+            "flops_per_chip": costs.flops,
+            "bytes_per_chip": costs.bytes,
+            "collectives": {
+                "intra_bytes_per_chip": costs.coll_intra,
+                "cross_pod_bytes_per_chip": costs.coll_cross,
+                "op_counts": costs.op_counts,
+                "op_bytes": costs.op_bytes,
+            },
+            "roofline": terms,
+            "model_flops_per_chip": mf_per_chip,
+            "useful_ratio": (mf_per_chip / costs.flops) if costs.flops
+            else None,
+        })
+    except Exception as e:
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-3000:]
+    if out_path:
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2, default=str)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--step", default="standard",
+                    choices=["standard", "pscope", "serve"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--n-mb", type=int, default=None)
+    ap.add_argument("--no-seq-parallel", action="store_true")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.n_mb:
+        overrides["n_mb"] = args.n_mb
+    if args.no_seq_parallel:
+        overrides["seq_parallel"] = False
+    res = run_cell(args.arch, args.shape, args.mesh, args.step, args.out,
+                   overrides=overrides or None)
+    keep = {k: v for k, v in res.items() if k not in ("traceback",)}
+    print(json.dumps(keep, indent=2, default=str))
+    if res["status"] == "error":
+        print(res.get("traceback", ""), file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh definitions.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: (data=16, model=16) = 256 chips
+of TPU v5e-class.  Multi-pod: (pod=2, data=16, model=16) = 512 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests / elastic resizing)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+# Hardware constants (TPU v5e-class, per chip) used by the roofline.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_LINK_BW = 50e9              # B/s per link (intra-pod)
+DCI_BW = 5e9                    # B/s per chip effective (cross-pod)
+HBM_BYTES = 16 * 2 ** 30        # 16 GiB

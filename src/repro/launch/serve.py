@@ -1,0 +1,47 @@
+#!/usr/bin/env python
+"""Serving launcher: batched continuous decoding.
+
+    python -m repro.launch.serve --arch qwen2-1.5b --requests 8
+"""
+import argparse
+
+import jax
+
+from repro import configs
+from repro.models import build_model
+from repro.serve import ServeConfig, BatchedServer
+from repro.serve.serve_loop import Request
+from repro.sharding import make_rules
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b",
+                    choices=configs.ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch, reduced=True)
+    model = build_model(cfg, make_rules("tp", multi_pod=False))
+    params = model.init(jax.random.PRNGKey(0))
+    srv = BatchedServer(model, params,
+                        ServeConfig(max_slots=args.slots,
+                                    max_seq=args.max_seq, eos_id=-1))
+    reqs = [Request(rid=i, prompt=[1 + i, 2 + i], max_new=args.max_new)
+            for i in range(args.requests)]
+    for r in reqs:
+        srv.submit(r)
+    steps = 0
+    while any(not r.done for r in reqs) and steps < 10000:
+        srv.step()
+        steps += 1
+    for r in reqs:
+        print(f"request {r.rid}: {r.prompt} -> {r.out}")
+    print(f"{len(reqs)} requests / {args.slots} slots / {steps} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+#!/usr/bin/env python
+"""Training launcher.
+
+    python -m repro.launch.train --arch qwen2-1.5b --steps 100 \
+        [--reduced] [--optimizer pscope|adamw] [--ckpt-dir DIR]
+
+On real hardware this process runs once per host (jax.distributed);
+on this container it drives the same code path on local devices.
+Resumable: re-running continues from the newest checkpoint.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data.pipeline import TokenDataset
+from repro.models import build_model
+from repro.optim import optimizers as opt
+from repro.optim.pscope_dl import (PScopeDLConfig, make_pscope_train_step,
+                                   make_standard_train_step,
+                                   init_train_state)
+from repro.sharding import make_rules
+from repro.train.train_loop import run_training, LoopConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b",
+                    choices=configs.ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="reduced config (full configs need a TPU pod)")
+    ap.add_argument("--full-config", dest="reduced", action="store_false")
+    ap.add_argument("--optimizer", default="pscope",
+                    choices=["pscope", "adamw"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--inner-steps", type=int, default=4)
+    ap.add_argument("--n-mb", type=int, default=2)
+    ap.add_argument("--lam1", type=float, default=1e-6)
+    ap.add_argument("--lam2", type=float, default=1e-7)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch, reduced=args.reduced)
+    rules = make_rules("tp", multi_pod=False)
+    model = build_model(cfg, rules)
+    print(f"{args.arch} ({'reduced' if args.reduced else 'full'}): "
+          f"{model.param_count():,} params, optimizer={args.optimizer}")
+
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    ds = TokenDataset(vocab_size=cfg.vocab_size, seed=0)
+    key = jax.random.PRNGKey(0)
+
+    if args.optimizer == "pscope":
+        pcfg = PScopeDLConfig(eta=args.lr, inner_steps=args.inner_steps,
+                              num_microbatches=args.n_mb, lam1=args.lam1,
+                              lam2=args.lam2, worker_axes=("data",))
+        step = make_pscope_train_step(model, mesh, pcfg, donate=False)
+
+        def init_state():
+            params = model.init(jax.random.PRNGKey(0))
+            return {"params": params, "opt": init_train_state(params, pcfg)}
+
+        def train_step(state, batch, i):
+            with mesh:
+                p, o, m = step(state["params"], state["opt"], batch, key)
+            return {"params": p, "opt": o}, m
+    else:
+        step = make_standard_train_step(model, mesh,
+                                        num_microbatches=args.n_mb,
+                                        lr=args.lr, donate=False)
+
+        def init_state():
+            params = model.init(jax.random.PRNGKey(0))
+            return {"params": params, "opt": opt.adamw_init(params)}
+
+        def train_step(state, batch, i):
+            with mesh:
+                p, o, m = step(state["params"], state["opt"], batch, key)
+            return {"params": p, "opt": o}, m
+
+    def batch_fn(i):
+        toks, labels = ds.batch(i, args.batch, args.seq)
+        return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+
+    loop = LoopConfig(total_steps=args.steps,
+                      checkpoint_every=args.ckpt_every,
+                      checkpoint_dir=args.ckpt_dir,
+                      log_path=args.ckpt_dir + "/metrics.jsonl")
+    run_training(train_step, init_state, batch_fn, loop)
+    print("done ->", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.models.model import Model, build_model
+from repro.models.module import (ParamSpec, init_params, abstract_params,
+                                 param_count, params_pspecs)
+
+__all__ = ["Model", "build_model", "ParamSpec", "init_params",
+           "abstract_params", "param_count", "params_pspecs"]

@@ -1,0 +1,410 @@
+"""Shared neural layers for the model zoo (pure JAX, logical sharding).
+
+Conventions:
+  * params are nested dicts; specs built by the *_specs functions.
+  * activations (B, S, d); attention keeps an explicit heads dim so TP
+    sharding of heads survives uneven head counts (XLA pads internally).
+  * KV caches are (B, S_max, KVH, Dh) with the sequence dim sharded over
+    `model` for decode (kv_seq rule) — decode attention then computes
+    per-shard partial attention and XLA inserts the LSE-merge
+    all-reduces (distributed flash-decoding).
+  * long sequences use `chunked_attention` (scan over KV blocks with
+    online softmax) — the pure-XLA analogue of kernels/flash_attention,
+    used where Pallas cannot lower (CPU dry-run) with the same FLOP and
+    memory behaviour.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import ParamSpec, constrain
+
+Array = jax.Array
+
+_CHUNKED_ATTN_THRESHOLD = 8192   # use scan-over-kv-blocks beyond this
+_ATTN_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# norms / rope / embeddings
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, w: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def norm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="ones")
+
+
+def rope_sin_cos(positions: Array, head_dim: int, theta: float
+                 ) -> Tuple[Array, Array]:
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs   # (..., half)
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: Array, sin: Array, cos: Array) -> Array:
+    """x: (..., Dh); sin/cos broadcastable (..., Dh/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    while sin.ndim < x1.ndim:
+        sin = sin[..., None, :]
+        cos = cos[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def padded_vocab(vocab: int, multiple: int = 128) -> int:
+    """Megatron-style vocab padding so the TP shard divides evenly; the
+    extra logits are real (trained-to-suppress) columns, labels never
+    reference them."""
+    return -(-vocab // multiple) * multiple
+
+
+def embed_specs(vocab: int, d: int) -> Dict[str, ParamSpec]:
+    return {"embedding": ParamSpec((padded_vocab(vocab), d),
+                                   ("vocab", "embed"))}
+
+
+def embed_lookup(params, tokens: Array, rules) -> Array:
+    out = jnp.take(params["embedding"], tokens, axis=0)
+    return constrain(out, rules, ("batch", "seq", "act_embed"))
+
+
+def unembed_specs(d: int, vocab: int) -> Dict[str, ParamSpec]:
+    return {"unembed": ParamSpec((d, padded_vocab(vocab)),
+                                 ("embed", "vocab"))}
+
+
+def unembed(params, x: Array, rules) -> Array:
+    logits = x @ params["unembed"]
+    return constrain(logits, rules, ("batch", "seq", "act_vocab"))
+
+
+def softmax_xent(logits: Array, labels: Array, rules=None) -> Array:
+    """Mean token cross-entropy over vocab-sharded logits.
+
+    Two forms:
+      * default: take_along_axis gather of the label logit — cheap, but
+        a gather over the vocab-sharded dim inside a while loop under a
+        MANUAL submesh trips XLA's SPMD partitioner (CHECK in
+        spmd_partitioner_util.cc:504);
+      * one-hot einsum (logsumexp - <onehot, logits>) — gather-free, so
+        it survives manual submeshes; selected via rules["_xent_onehot"]
+        by the manual-shard_map pSCOPE step only (the one-hot is fused
+        by XLA in that regime; in the fully-auto regime it can
+        materialize (B,S,V) slices, so it is not the default).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    if rules is not None and rules.get("_xent_onehot"):
+        onehot = jax.nn.one_hot(labels, logits.shape[-1],
+                                dtype=logits.dtype)
+        label_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    else:
+        label_logit = jnp.take_along_axis(
+            logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - label_logit)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_specs(cfg) -> Dict[str, ParamSpec]:
+    d, H, KVH, Dh = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                     cfg.resolved_head_dim)
+    specs = {
+        "wq": ParamSpec((d, H, Dh), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, KVH, Dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, KVH, Dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, Dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((H, Dh), ("heads", "head_dim"), init="zeros")
+        specs["bk"] = ParamSpec((KVH, Dh), ("kv_heads", "head_dim"),
+                                init="zeros")
+        specs["bv"] = ParamSpec((KVH, Dh), ("kv_heads", "head_dim"),
+                                init="zeros")
+    return specs
+
+
+def _project_qkv(params, x: Array, cfg, rules, positions: Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    sin, cos = rope_sin_cos(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    # head-TP when heads divide the model axis; otherwise sequence-
+    # parallel attention (attn_seq -> model, see sharding.rules_for)
+    seq_ax = "attn_seq" if x.shape[1] > 1 else None
+    q = constrain(q, rules, ("batch", seq_ax, "act_heads", None))
+    k = constrain(k, rules, ("batch", seq_ax, None, None))
+    v = constrain(v, rules, ("batch", seq_ax, None, None))
+    return q, k, v
+
+
+def full_attention(q: Array, k: Array, v: Array, causal: bool,
+                   q_offset: int = 0) -> Array:
+    """Exact grouped (GQA) attention; q: (B,Sq,H,Dh), k/v: (B,Sk,KVH,Dh).
+
+    KV is never materialized at H heads — the group dim lives in the
+    einsum (saves G x KV memory/communication under TP/SP)."""
+    B, Sq, H, Dh = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    scale = 1.0 / (Dh ** 0.5)
+    qg = q.reshape(B, Sq, KVH, G, Dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    if causal:
+        Sk = k.shape[1]
+        rows = q_offset + jnp.arange(Sq)[:, None]
+        cols = jnp.arange(Sk)[None, :]
+        s = jnp.where((rows >= cols)[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return o.reshape(B, Sq, H, Dh)
+
+
+def chunked_attention(q: Array, k: Array, v: Array, causal: bool,
+                      chunk: int = _ATTN_CHUNK) -> Array:
+    """Online-softmax grouped attention, scan over KV chunks
+    (flash-in-XLA).  Peak memory O(Sq * chunk) instead of O(Sq * Sk);
+    used where the Pallas kernel cannot lower (CPU dry-run) with the
+    same FLOP/memory behaviour."""
+    B, Sq, H, Dh = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = 1.0 / (Dh ** 0.5)
+    nck = Sk // chunk
+    qg = q.reshape(B, Sq, KVH, G, Dh)
+    kc = k.reshape(B, nck, chunk, KVH, Dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nck, chunk, KVH, Dh).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, kv):
+        m_prev, l_prev, acc = carry                   # (B,KVH,G,Sq[,Dh])
+        kb, vb, ik = kv
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kb).astype(
+            jnp.float32) * scale
+        if causal:
+            rows = jnp.arange(Sq)[:, None]
+            cols = ik * chunk + jnp.arange(chunk)[None, :]
+            s = jnp.where((rows >= cols)[None, None, None], s, -1e30)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(q.dtype), vb)
+        acc = acc * alpha[..., None].astype(q.dtype) + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, KVH, G, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, KVH, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, KVH, G, Sq, Dh), q.dtype)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kc, vc, jnp.arange(nck)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(q.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dh)
+
+
+def attn_train(params, x: Array, cfg, rules, causal: bool = True,
+               positions: Optional[Array] = None) -> Array:
+    """Full-sequence attention (training / prefill scoring)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(params, x, cfg, rules, positions)
+    if cfg.use_flash_kernel and S % 128 == 0:
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q.transpose(0, 2, 1, 3),
+                                 k.transpose(0, 2, 1, 3),
+                                 v.transpose(0, 2, 1, 3), causal=causal)
+        o = o.transpose(0, 2, 1, 3)
+    elif S > _CHUNKED_ATTN_THRESHOLD:
+        o = chunked_attention(q, k, v, causal)
+    else:
+        o = full_attention(q, k, v, causal)
+    o = constrain(o, rules, ("batch", "seq", "act_heads", None))
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+
+
+def init_kv_cache(cfg, batch: int, max_seq: int, layers: int,
+                  dtype=jnp.bfloat16) -> Dict[str, Any]:
+    KVH, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (layers, batch, max_seq, KVH, Dh)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def kv_cache_specs(cfg, batch: int, max_seq: int, layers: int,
+                   dtype=jnp.bfloat16):
+    KVH, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (layers, batch, max_seq, KVH, Dh)
+    spec = ParamSpec(shape, ("layers", "batch", "kv_seq", "kv_heads",
+                             "head_dim"), dtype=dtype)
+    return {"k": spec, "v": spec}
+
+
+def attn_decode(params, x: Array, cfg, rules, k_cache: Array, v_cache: Array,
+                pos: Array, write_pos: Optional[Array] = None,
+                valid_upto: Optional[Array] = None
+                ) -> Tuple[Array, Array, Array]:
+    """One-token decode. x: (B, 1, d); k/v_cache: (B, S_max, KVH, Dh);
+    pos: (B,) absolute positions (RoPE). write_pos: cache slot to write
+    (defaults to pos; differs for sliding windows); valid_upto: last
+    valid cache slot (defaults to pos). Returns (out, new_k, new_v)."""
+    B = x.shape[0]
+    if write_pos is None:
+        write_pos = pos
+    if valid_upto is None:
+        valid_upto = pos
+    q, k_new, v_new = _project_qkv(params, x, cfg, rules, pos[:, None])
+    # write the new kv at write_pos (per batch row)
+    upd = jax.vmap(lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(
+        c, n, p, axis=0))
+    k_cache = upd(k_cache, k_new.astype(k_cache.dtype), write_pos)
+    v_cache = upd(v_cache, v_new.astype(v_cache.dtype), write_pos)
+    k_cache = constrain(k_cache, rules, ("batch", "kv_seq", None, None))
+    v_cache = constrain(v_cache, rules, ("batch", "kv_seq", None, None))
+
+    groups = cfg.num_heads // cfg.num_kv_heads
+    Dh = cfg.resolved_head_dim
+    scale = 1.0 / (Dh ** 0.5)
+    # grouped attention against the sharded cache; the seq reduction is
+    # over the kv_seq-sharded dim -> XLA emits the LSE-merge collectives
+    qg = q.reshape(B, cfg.num_kv_heads, groups, Dh)       # (B,KVH,G,Dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    s = s * scale
+    S_max = k_cache.shape[1]
+    valid = jnp.arange(S_max)[None, :] <= valid_upto[:, None]   # (B,S)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(x.dtype), v_cache)
+    o = o.reshape(B, 1, cfg.num_heads, Dh)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    return out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# cross attention (VLM / enc-dec)
+# ---------------------------------------------------------------------------
+
+def cross_attention_specs(cfg) -> Dict[str, ParamSpec]:
+    return attention_specs(cfg)
+
+
+def cross_attention(params, x: Array, memory: Array, cfg, rules) -> Array:
+    """x: (B,S,d) queries; memory: (B,M,d) keys/values (no rope)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bmd,dhk->bmhk", memory, params["wk"])
+    v = jnp.einsum("bmd,dhk->bmhk", memory, params["wv"])
+    o = full_attention(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# dense MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_specs(d: int, d_ff: int) -> Dict[str, ParamSpec]:
+    return {
+        "w_gate": ParamSpec((d, d_ff), ("embed", "mlp")),
+        "w_up": ParamSpec((d, d_ff), ("embed", "mlp")),
+        "w_down": ParamSpec((d_ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(params, x: Array, rules) -> Array:
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = constrain(h, rules, ("batch", "seq", "act_mlp"))
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k router + capacity-based dispatch, EP over `expert` axis)
+# ---------------------------------------------------------------------------
+
+def moe_specs(d: int, moe) -> Dict[str, ParamSpec]:
+    E, f = moe.num_experts, moe.expert_ff
+    return {
+        "router": ParamSpec((d, E), ("embed", None), scale=0.006),
+        "w_gate": ParamSpec((E, d, f), ("expert", "embed", "expert_mlp")),
+        "w_up": ParamSpec((E, d, f), ("expert", "embed", "expert_mlp")),
+        "w_down": ParamSpec((E, f, d), ("expert", "expert_mlp", "embed")),
+    }
+
+
+def moe_apply(params, x: Array, moe, rules, capacity_factor: float = 1.25
+              ) -> Tuple[Array, Array]:
+    """Returns (output, aux_loss). Dropful top-k capacity routing with
+    PER-SEQUENCE local dispatch.
+
+    Every sequence routes its own tokens into its own (E, C_seq, d)
+    buffers (C_seq = S*k/E * capacity_factor), vmapped over the batch
+    dim.  Because the scatter/gather batch dim coincides with the DP
+    sharding, tokens never cross data shards (GSPMD batched-scatter
+    passthrough), and the expert dim of the buffers shards over `model`
+    = EP.  Dispatch is therefore communication-free; expert weights are
+    the only MoE traffic (the same FSDP/TP gathers the dense MLP pays).
+    FLOPs = 3 * tokens * k * d * f (capacity-bounded).
+    """
+    B, S, d = x.shape
+    E, k_top, f = moe.num_experts, moe.top_k, moe.expert_ff
+    C = max(1, int(S * k_top / E * capacity_factor))
+
+    logits = jnp.einsum("bsd,de->bse", x,
+                        params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k_top)          # (B, S, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # aux load-balancing loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E), axis=(0, 1))
+    density_prob = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * density_prob) * E * moe.router_aux_coef
+
+    def dispatch_one(xs, idx):
+        """xs: (S, d); idx: (S, k) -> per-sequence expert buffers."""
+        flat_e = idx.reshape(-1)                               # (S*k,)
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        slots = jnp.cumsum(onehot, axis=0) - onehot
+        slot_of = jnp.sum(slots * onehot, axis=-1)             # (S*k,)
+        xk = jnp.repeat(xs, k_top, axis=0)                     # (S*k, d)
+        buf = jnp.zeros((E, C, d), xs.dtype).at[flat_e, slot_of].set(
+            xk, mode="drop")
+        return buf, flat_e, slot_of
+
+    buf, flat_e, slot_of = jax.vmap(dispatch_one)(
+        x, gate_idx)                                           # (B,E,C,d)
+    buf = constrain(buf, rules, ("batch", "act_expert", None, None))
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["w_gate"]))
+    h = h * jnp.einsum("becd,edf->becf", buf, params["w_up"])
+    h = constrain(h, rules, ("batch", "act_expert", None, None))
+    out_buf = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    out_buf = constrain(out_buf, rules, ("batch", "act_expert", None, None))
+
+    def combine_one(ob, fe, so, gv):
+        keep = so < C
+        gathered = jnp.where(keep[:, None],
+                             ob[fe, jnp.minimum(so, C - 1)], 0.0)
+        weighted = gathered * gv.reshape(-1, 1).astype(ob.dtype)
+        return jnp.sum(weighted.reshape(S, k_top, d), axis=1)
+
+    out = jax.vmap(combine_one)(out_buf, flat_e, slot_of, gate_vals)
+    return out, aux

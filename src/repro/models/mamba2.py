@@ -1,0 +1,166 @@
+"""Mamba2 (SSD) block — chunked state-space scan.
+
+Per head h (scalar decay):
+    a_t = exp(-dt_t * A_h),   dt_t = softplus(raw_dt_t + dt_bias)
+    S_t = a_t S_{t-1} + dt_t * x_t B_t^T          (S: (Dh, N))
+    y_t = S_t C_t + D_h x_t
+Chunked evaluation (SSD "quadratic within chunk, recurrent across"):
+intra-chunk term is an attention-like (C x C) matmul with decay-ratio
+weights, inter-chunk state carried by scan — maps the sequential
+recurrence onto MXU matmuls, the same adaptation FlashLinearAttention /
+Mamba2 use on GPU re-expressed in jnp for TPU.
+
+Depthwise causal conv (width 4) on x before the SSM, gated output
+(silu(z)), grouped RMS norm, out projection.  B/C are shared across
+heads (ngroups = 1, the published Mamba2/Zamba2 setting).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import ParamSpec, constrain
+
+Array = jax.Array
+
+_CHUNK = 64
+
+
+def mamba2_specs(cfg) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in = s.expand * d
+    Dh = s.head_dim
+    H = d_in // Dh
+    N = s.state_dim
+    return {
+        "wz": ParamSpec((d, H, Dh), ("embed", "heads", "head_dim")),
+        "wx": ParamSpec((d, H, Dh), ("embed", "heads", "head_dim")),
+        "wB": ParamSpec((d, N), ("embed", "state")),
+        "wC": ParamSpec((d, N), ("embed", "state")),
+        "wdt": ParamSpec((d, H), ("embed", "heads")),
+        "dt_bias": ParamSpec((H,), ("heads",), init="zeros"),
+        "A_log": ParamSpec((H,), ("heads",), init="zeros"),
+        "D": ParamSpec((H,), ("heads",), init="ones"),
+        "conv": ParamSpec((s.conv_width, H, Dh), ("conv", "heads",
+                                                  "head_dim"), scale=0.1),
+        "norm": ParamSpec((H, Dh), ("heads", "head_dim"), init="ones"),
+        "wo": ParamSpec((H, Dh, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _causal_conv(x: Array, w: Array, tail: Array = None
+                 ) -> Tuple[Array, Array]:
+    """Depthwise causal conv. x: (B,S,H,Dh); w: (W,H,Dh);
+    tail: (B,W-1,H,Dh) carry-in from the previous segment."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros(x[:, :1].shape[:1] + (W - 1,) + x.shape[2:], x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_tail = xp[:, -(W - 1):] if W > 1 else tail
+    return jax.nn.silu(out), new_tail
+
+
+def _ssd_chunk(xc, Bc, Cc, log_a, dt, state):
+    """One chunk. xc: (B,H,C,Dh); Bc,Cc: (B,C,N); log_a,dt: (B,H,C);
+    state: (B,H,Dh,N)."""
+    Bsz, H, C, Dh = xc.shape
+    la = jnp.cumsum(log_a, axis=2)                    # inclusive
+    la_prev = la - log_a
+    mid = la[:, :, C // 2:C // 2 + 1]
+    # intra-chunk: y_t += sum_{j<=t} exp(la_t - la_j) dt_j (C_t.B_j) x_j
+    scores = jnp.einsum("btn,bjn->btj", Cc, Bc)       # (B,C,C)
+    decay = jnp.exp((la[:, :, :, None] - mid[:, :, :, None])
+                    + (mid[:, :, None, :] - la[:, :, None, :]))
+    G = scores[:, None] * decay * dt[:, :, None, :]   # (B,H,C,C)
+    mask = jnp.tril(jnp.ones((C, C), bool))
+    G = jnp.where(mask, G, 0.0)
+    y = jnp.einsum("bhtj,bhjd->bhtd", G.astype(xc.dtype), xc)
+    # inter-chunk: y_t += exp(la_t) * C_t . state
+    y = y + jnp.einsum("btn,bhdn,bht->bhtd", Cc, state,
+                       jnp.exp(la).astype(xc.dtype))
+    # state update: S' = exp(la_C) S + sum_j exp(la_C - la_j) dt_j x_j B_j^T
+    wtail = (jnp.exp(la[:, :, -1:] - la) * dt)        # (B,H,C)
+    new_state = (state * jnp.exp(la[:, :, -1])[..., None, None]
+                 + jnp.einsum("bhjd,bjn,bhj->bhdn", xc, Bc,
+                              wtail.astype(xc.dtype)))
+    return y, new_state
+
+
+def mamba2_apply(p, x: Array, cfg, rules, state=None, conv_tail=None
+                 ) -> Tuple[Array, Tuple[Array, Array]]:
+    """x: (B,S,d) -> (out, (new_state, new_conv_tail))."""
+    B, S, d = x.shape
+    s = cfg.ssm
+    Dh = s.head_dim
+    H = (s.expand * d) // Dh
+    N = s.state_dim
+
+    z = jnp.einsum("bsd,dhk->bshk", x, p["wz"])
+    xin = jnp.einsum("bsd,dhk->bshk", x, p["wx"])
+    xin = constrain(xin, rules, ("batch", "seq", "act_heads", None))
+    xin, new_tail = _causal_conv(xin, p["conv"], conv_tail)
+    Bv = x @ p["wB"]                                   # (B,S,N)
+    Cv = x @ p["wC"]
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    A = jnp.exp(p["A_log"].astype(jnp.float32))        # (H,) > 0
+    log_a = (-dt * A).transpose(0, 2, 1)               # (B,H,S)
+    dt_h = dt.transpose(0, 2, 1)                       # (B,H,S)
+
+    if state is None:
+        state = jnp.zeros((B, H, Dh, N), jnp.float32)
+
+    C = min(_CHUNK, S)
+    nch = S // C
+    xc = xin.transpose(0, 2, 1, 3).reshape(B, H, nch, C, Dh)
+    xc = xc.transpose(2, 0, 1, 3, 4)                   # (nch,B,H,C,Dh)
+    Bc = Bv.reshape(B, nch, C, N).transpose(1, 0, 2, 3)
+    Cc = Cv.reshape(B, nch, C, N).transpose(1, 0, 2, 3)
+    lac = log_a.reshape(B, H, nch, C).transpose(2, 0, 1, 3)
+    dtc = dt_h.reshape(B, H, nch, C).transpose(2, 0, 1, 3)
+
+    def body(st, inp):
+        xc_, Bc_, Cc_, la_, dt_ = inp
+        y, st = _ssd_chunk(xc_, Bc_, Cc_, la_, dt_, st.astype(jnp.float32))
+        return st, y
+
+    new_state, yc = jax.lax.scan(body, state, (xc, Bc, Cc, lac, dtc))
+    y = yc.transpose(1, 2, 0, 3, 4).reshape(B, H, S, Dh).transpose(0, 2, 1, 3)
+    y = y + xin * p["D"][None, None, :, None]          # skip connection
+    y = y * jax.nn.silu(z)
+    # grouped rms norm per head
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x.dtype) * p["norm"]
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"])
+    return out, (new_state, new_tail)
+
+
+def init_mamba_state(cfg, batch: int, layers: int) -> Dict[str, Array]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    return {
+        "ssm": jnp.zeros((layers, batch, H, s.head_dim, s.state_dim),
+                         jnp.float32),
+        "conv": jnp.zeros((layers, batch, s.conv_width - 1, H, s.head_dim),
+                          jnp.bfloat16),
+    }
+
+
+def mamba_state_specs(cfg, batch: int, layers: int):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    return {
+        "ssm": ParamSpec((layers, batch, H, s.head_dim, s.state_dim),
+                         ("layers", "batch", "heads", None, None),
+                         dtype=jnp.float32),
+        "conv": ParamSpec((layers, batch, s.conv_width - 1, H, s.head_dim),
+                          ("layers", "batch", None, "heads", None),
+                          dtype=jnp.bfloat16),
+    }

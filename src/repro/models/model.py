@@ -1,0 +1,147 @@
+"""Unified model facade: one interface over all families.
+
+    m = build_model(cfg, rules)
+    m.param_specs / m.init(key) / m.abstract_params()
+    m.loss(params, batch)                       # train
+    m.logits(params, batch)                     # prefill / scoring
+    m.init_cache(batch, max_seq) / m.cache_specs(batch, max_seq)
+    m.decode_step(params, cache, tokens, pos)   # serve
+    m.input_specs(shape_cell)                   # ShapeDtypeStructs
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as mod
+from repro.models import transformer as T
+from repro.models import rwkv6 as R
+from repro.models import zamba2 as Z
+from repro.configs.base import ModelConfig, ShapeCell
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    rules: Dict[Optional[str], Any]
+    param_specs: Any
+    _loss: Callable
+    _logits: Callable
+    _decode: Callable
+    _init_cache: Callable
+    _cache_specs: Callable
+
+    def init(self, key, dtype=None):
+        return mod.init_params(self.param_specs, key, dtype)
+
+    def abstract_params(self, dtype=None):
+        return mod.abstract_params(self.param_specs, dtype)
+
+    def param_pspecs(self):
+        return mod.params_pspecs(self.param_specs, self.rules)
+
+    def param_count(self) -> int:
+        return mod.param_count(self.param_specs)
+
+    def loss(self, params, batch):
+        return self._loss(params, batch)
+
+    def logits(self, params, batch):
+        return self._logits(params, batch)
+
+    def init_cache(self, batch: int, max_seq: int):
+        return self._init_cache(batch, max_seq)
+
+    def cache_specs(self, batch: int, max_seq: int):
+        return self._cache_specs(batch, max_seq)
+
+    def cache_pspecs(self, batch: int, max_seq: int):
+        return mod.params_pspecs(self._cache_specs(batch, max_seq),
+                                 self.rules)
+
+    def decode_step(self, params, cache, tokens, pos):
+        return self._decode(params, cache, tokens, pos)
+
+    # ---- dry-run inputs ---------------------------------------------------
+
+    def input_specs(self, shape: ShapeCell) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of a cell."""
+        B, S = shape.global_batch, shape.seq_len
+        cfg = self.cfg
+        if shape.kind in ("train", "prefill"):
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            }
+            if cfg.family == "vlm":
+                specs["image_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+            if cfg.family == "audio":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.num_frames, cfg.d_model), jnp.bfloat16)
+            return specs
+        # decode: one new token against a cache of size S
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+
+    def make_concrete_inputs(self, shape: ShapeCell, seed: int = 0):
+        """Small concrete batch (for smoke tests on reduced configs)."""
+        import numpy as np
+        rng = np.random.RandomState(seed)
+        specs = self.input_specs(shape)
+        out = {}
+        for k, s in specs.items():
+            if jnp.issubdtype(s.dtype, jnp.integer):
+                hi = self.cfg.vocab_size if k in ("tokens", "labels") else \
+                    max(1, shape.seq_len - 1)
+                out[k] = jnp.asarray(
+                    rng.randint(0, hi, s.shape).astype(np.int32))
+            else:
+                out[k] = jnp.asarray(
+                    rng.randn(*s.shape).astype(np.float32) * 0.02,
+                    dtype=s.dtype)
+        return out
+
+
+def build_model(cfg: ModelConfig, rules: Dict[Optional[str], Any]) -> Model:
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        specs = T.param_specs(cfg)
+        return Model(
+            cfg, rules, specs,
+            _loss=lambda p, b: T.loss_fn(p, cfg, rules, b),
+            _logits=lambda p, b: T.forward(
+                p, cfg, rules, b["tokens"],
+                memory=T._resolve_memory(p, cfg, rules, b))[0],
+            _decode=lambda p, c, t, pos: T.decode_step(p, cfg, rules, c, t,
+                                                       pos),
+            _init_cache=lambda b, s: T.init_cache(cfg, b, s),
+            _cache_specs=lambda b, s: T.cache_specs(cfg, b, s),
+        )
+    if cfg.family == "ssm":
+        specs = R.param_specs(cfg)
+        return Model(
+            cfg, rules, specs,
+            _loss=lambda p, b: R.loss_fn(p, cfg, rules, b),
+            _logits=lambda p, b: R.forward(p, cfg, rules, b["tokens"])[0],
+            _decode=lambda p, c, t, pos: R.decode_step(p, cfg, rules, c, t,
+                                                       pos),
+            _init_cache=lambda b, s: R.init_state(cfg, b),
+            _cache_specs=lambda b, s: R.state_specs(cfg, b),
+        )
+    if cfg.family == "hybrid":
+        specs = Z.param_specs(cfg)
+        return Model(
+            cfg, rules, specs,
+            _loss=lambda p, b: Z.loss_fn(p, cfg, rules, b),
+            _logits=lambda p, b: Z.forward(p, cfg, rules, b["tokens"])[0],
+            _decode=lambda p, c, t, pos: Z.decode_step(p, cfg, rules, c, t,
+                                                       pos),
+            _init_cache=lambda b, s: Z.init_cache(cfg, b, s),
+            _cache_specs=lambda b, s: Z.cache_specs(cfg, b, s),
+        )
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,103 @@
+"""Minimal functional param-tree module system (no flax in this env).
+
+A model is defined by:
+  * a pytree (nested dict) of `ParamSpec`s — shapes, dtypes, logical axes;
+  * pure apply functions taking the materialized param tree.
+
+Logical sharding axes (MaxText-style) decouple model code from the
+mesh; `sharding/logical.py` maps them to PartitionSpecs per mode
+(tp-only / fsdp+tp / ...).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]       # logical axis names per dim
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"                  # normal | zeros | ones
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _tree_paths(tree, prefix=()):  # depth-first (path, leaf) pairs
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _tree_paths(tree[k], prefix + (k,))
+    else:
+        yield prefix, tree
+
+
+def init_params(specs, key: jax.Array, dtype=None):
+    """Materialize arrays for a ParamSpec tree. Deterministic per path."""
+    out = {}
+    for path, spec in _tree_paths(specs):
+        sub = key
+        for name in path:
+            sub = jax.random.fold_in(sub, hash(name) & 0x7FFFFFFF)
+        dt = dtype or spec.dtype
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dt)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dt)
+        else:
+            arr = (jax.random.normal(sub, spec.shape, jnp.float32)
+                   * spec.scale).astype(dt)
+        node = out
+        for name in path[:-1]:
+            node = node.setdefault(name, {})
+        node[path[-1]] = arr
+    return out
+
+
+def abstract_params(specs, dtype=None):
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+
+    def mk(spec):
+        return jax.ShapeDtypeStruct(spec.shape, dtype or spec.dtype)
+
+    return jax.tree_util.tree_map(mk, specs,
+                                  is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_count(specs) -> int:
+    return sum(int(np.prod(s.shape)) for _, s in _tree_paths(specs))
+
+
+def spec_pspec(spec: ParamSpec, rules: Dict[Optional[str], Any]) -> P:
+    """Logical axes -> PartitionSpec under the given rules."""
+    return P(*(rules.get(a) for a in spec.axes))
+
+
+def params_pspecs(specs, rules):
+    return jax.tree_util.tree_map(
+        lambda s: spec_pspec(s, rules), specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def constrain(x: jax.Array, rules: Dict[Optional[str], Any],
+              axes: Tuple[Optional[str], ...]) -> jax.Array:
+    """with_sharding_constraint through logical axes (no-op w/o mesh).
+
+    An all-None spec is skipped entirely: a forced-replicated copy is
+    never useful and the annotation copies trip XLA partitioner bugs
+    inside manual submeshes ("invalid binary instruction opcode copy").
+    """
+    spec = tuple(rules.get(a) for a in axes)
+    if all(s is None for s in spec):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x   # no mesh in scope (single-device tests)

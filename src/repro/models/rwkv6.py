@@ -1,0 +1,249 @@
+"""RWKV6 ("Finch") — attention-free LM with data-dependent decay.
+
+Per layer: time-mix block (WKV6 linear recurrence over per-head outer-
+product state, decay w_t produced by a LoRA from the shifted input —
+the paper's headline data-dependent decay) + channel-mix block.
+
+The recurrence  S_t = diag(w_t) S_{t-1} + k_t v_t^T,
+               o_t = S_{t-1}^T r_t + (r_t . (u*k_t)) v_t
+is evaluated in CHUNKED parallel form (GLA-style): within a chunk the
+pairwise decay ratios are factored into per-step scalings so the
+quadratic term is two matmuls; the state is carried across chunks by a
+scan.  TPU-native: the chunk dim maps onto the MXU, the scan is over
+seq/chunk steps, and the state (H, Dh, Dh) is tiny (constant memory in
+sequence length => the arch runs the long_500k cell).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.module import ParamSpec, constrain
+
+Array = jax.Array
+
+_CHUNK = 64
+_LORA_RANK = 64
+
+
+def _tm_specs(cfg) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    Dh = cfg.ssm.head_dim
+    H = d // Dh
+    return {
+        "mu_r": ParamSpec((d,), ("embed",), init="zeros"),
+        "mu_k": ParamSpec((d,), ("embed",), init="zeros"),
+        "mu_v": ParamSpec((d,), ("embed",), init="zeros"),
+        "mu_g": ParamSpec((d,), ("embed",), init="zeros"),
+        "mu_w": ParamSpec((d,), ("embed",), init="zeros"),
+        "wr": ParamSpec((d, H, Dh), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, H, Dh), ("embed", "heads", "head_dim")),
+        "wv": ParamSpec((d, H, Dh), ("embed", "heads", "head_dim")),
+        "wg": ParamSpec((d, H, Dh), ("embed", "heads", "head_dim")),
+        "wo": ParamSpec((H, Dh, d), ("heads", "head_dim", "embed")),
+        # data-dependent decay LoRA: w_t = w0 + tanh(x A) B
+        "w0": ParamSpec((H, Dh), ("heads", "head_dim"), init="zeros"),
+        "w_A": ParamSpec((d, _LORA_RANK), ("embed", None)),
+        "w_B": ParamSpec((_LORA_RANK, H, Dh), (None, "heads", "head_dim")),
+        "u": ParamSpec((H, Dh), ("heads", "head_dim"), init="zeros"),
+        "ln_x": ParamSpec((H, Dh), ("heads", "head_dim"), init="ones"),
+    }
+
+
+def _cm_specs(cfg) -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_r": ParamSpec((d,), ("embed",), init="zeros"),
+        "mu_k": ParamSpec((d,), ("embed",), init="zeros"),
+        "wr": ParamSpec((d, d), ("embed", None)),
+        "wk": ParamSpec((d, f), ("embed", "mlp")),
+        "wv": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def _layer_specs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "ln1": L.norm_spec(d),
+        "ln2": L.norm_spec(d),
+        "tm": _tm_specs(cfg),
+        "cm": _cm_specs(cfg),
+    }
+
+
+def param_specs(cfg) -> Dict[str, Any]:
+    from repro.models.transformer import _stack_specs
+    d = cfg.d_model
+    return {
+        "embed": L.embed_specs(cfg.vocab_size, d),
+        "out": L.unembed_specs(d, cfg.vocab_size),
+        "ln_f": {"w": L.norm_spec(d)},
+        "layers": _stack_specs(_layer_specs(cfg), cfg.num_layers),
+    }
+
+
+def _shift(x: Array, last: Array = None) -> Array:
+    """Token shift: x_{t-1} (zeros / `last` at t=0). x: (B,S,d)."""
+    prev = jnp.roll(x, 1, axis=1)
+    head = jnp.zeros_like(x[:, :1]) if last is None else \
+        last[:, None].astype(x.dtype)
+    return prev.at[:, 0].set(head[:, 0])
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def _wkv_chunk(r, k, v, logw, u, state):
+    """One chunk of the WKV6 recurrence.
+
+    r,k,v: (B,H,C,Dh); logw: (B,H,C,Dh) (log decay, <=0); u: (H,Dh);
+    state: (B,H,Dh,Dh) mapping k-dim -> v-dim.  Returns (o, new_state).
+    """
+    B, H, C, Dh = r.shape
+    lp = jnp.cumsum(logw, axis=2)                      # inclusive prefix
+    lp_prev = lp - logw                                # exclusive prefix
+    mid = lp[:, :, C // 2:C // 2 + 1]                  # stabilizer
+    r_dec = r * jnp.exp(lp_prev - mid)                 # r~ = r * p_{t-1}/pm
+    k_inc = k * jnp.exp(mid - lp)                      # k~ = k * pm/p_j
+    A = jnp.einsum("bhtd,bhjd->bhtj", r_dec, k_inc)    # decay-weighted r.k
+    mask = jnp.tril(jnp.ones((C, C), bool), -1)        # strictly lower
+    A = jnp.where(mask, A, 0.0)
+    diag = jnp.einsum("bhtd,bhtd->bht", r, u[None, :, None, :] * k)
+    o = jnp.einsum("bhtj,bhjd->bhtd", A, v)            # intra-chunk
+    o = o + diag[..., None] * v                        # bonus (j = t)
+    o = o + jnp.einsum("bhtd,bhde->bhte",
+                       r * jnp.exp(lp_prev), state)    # inter-chunk
+    decay_all = jnp.exp(lp[:, :, -1])                  # (B,H,Dh)
+    k_tail = k * jnp.exp(lp[:, :, -1:] - lp)           # k * p_C/p_j
+    new_state = (state * decay_all[..., None]
+                 + jnp.einsum("bhjd,bhje->bhde", k_tail, v))
+    return o, new_state
+
+
+def _time_mix(p, x, cfg, rules, state, last_x):
+    """x: (B,S,d). Returns (out, (new_state, new_last_x))."""
+    B, S, d = x.shape
+    Dh = cfg.ssm.head_dim
+    H = d // Dh
+    xs = _shift(x, last_x)
+    r = jnp.einsum("bsd,dhk->bhsk", _mix(x, xs, p["mu_r"]), p["wr"])
+    k = jnp.einsum("bsd,dhk->bhsk", _mix(x, xs, p["mu_k"]), p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", _mix(x, xs, p["mu_v"]), p["wv"])
+    g = jnp.einsum("bsd,dhk->bhsk", _mix(x, xs, p["mu_g"]), p["wg"])
+    xw = _mix(x, xs, p["mu_w"])
+    dd = jnp.einsum("br,rhk->bhk", jnp.tanh(
+        xw.reshape(B * S, d) @ p["w_A"]), p["w_B"]).reshape(B, S, H, Dh)
+    logw = -jnp.exp(p["w0"][None, None].astype(jnp.float32)
+                    + dd.astype(jnp.float32))          # log decay <= 0
+    logw = logw.transpose(0, 2, 1, 3)                  # (B,H,S,Dh)
+
+    C = min(_CHUNK, S)
+    nch = S // C
+    rc = r.reshape(B, H, nch, C, Dh).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(B, H, nch, C, Dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, nch, C, Dh).transpose(2, 0, 1, 3, 4)
+    wc = logw.reshape(B, H, nch, C, Dh).transpose(2, 0, 1, 3, 4)
+
+    def body(st, inp):
+        rc_, kc_, vc_, wc_ = inp
+        o, st = _wkv_chunk(rc_, kc_, vc_, wc_, p["u"], st)
+        return st, o
+
+    state, oc = jax.lax.scan(body, state, (rc, kc, vc, wc))
+    o = oc.transpose(1, 2, 0, 3, 4).reshape(B, H, S, Dh)
+
+    # per-head group norm, gate, output proj
+    of = o.astype(jnp.float32)
+    mean = of.mean(-1, keepdims=True)
+    var = of.var(-1, keepdims=True)
+    o = ((of - mean) * jax.lax.rsqrt(var + 64e-5)).astype(x.dtype)
+    o = o * p["ln_x"][None, :, None, :]
+    o = o * jax.nn.silu(g)
+    out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"])
+    return out, (state, x[:, -1])
+
+
+def _channel_mix(p, x, rules, last_x):
+    xs = _shift(x, last_x)
+    r = jax.nn.sigmoid(_mix(x, xs, p["mu_r"]) @ p["wr"])
+    k = jnp.square(jax.nn.relu(_mix(x, xs, p["mu_k"]) @ p["wk"]))
+    k = constrain(k, rules, ("batch", "seq", "act_mlp"))
+    return r * (k @ p["wv"]), x[:, -1]
+
+
+def _layer(cfg, rules, p, x, st):
+    """st: dict(state,(B,H,Dh,Dh)), last_tm, last_cm (B,d)."""
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    o, (new_state, last_tm) = _time_mix(p["tm"], h, cfg, rules,
+                                        st["state"], st["last_tm"])
+    x = x + o
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    o, last_cm = _channel_mix(p["cm"], h, rules, st["last_cm"])
+    x = constrain(x + o, rules, ("batch", "res_seq", None))
+    return x, {"state": new_state, "last_tm": last_tm, "last_cm": last_cm}
+
+
+def init_state(cfg, batch: int, dtype=jnp.float32) -> Dict[str, Array]:
+    d = cfg.d_model
+    Dh = cfg.ssm.head_dim
+    H = d // Dh
+    Lr = cfg.num_layers
+    return {
+        "state": jnp.zeros((Lr, batch, H, Dh, Dh), dtype),
+        "last_tm": jnp.zeros((Lr, batch, d), jnp.bfloat16),
+        "last_cm": jnp.zeros((Lr, batch, d), jnp.bfloat16),
+    }
+
+
+def state_specs(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    Dh = cfg.ssm.head_dim
+    H = d // Dh
+    Lr = cfg.num_layers
+    return {
+        "state": ParamSpec((Lr, batch, H, Dh, Dh),
+                           ("layers", "batch", "heads", None, None),
+                           dtype=dtype),
+        "last_tm": ParamSpec((Lr, batch, d), ("layers", "batch", "embed"),
+                             dtype=jnp.bfloat16),
+        "last_cm": ParamSpec((Lr, batch, d), ("layers", "batch", "embed"),
+                             dtype=jnp.bfloat16),
+    }
+
+
+def forward(params, cfg, rules, tokens: Array, state=None
+            ) -> Tuple[Array, Any]:
+    B, S = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens, rules)
+    if state is None:
+        state = init_state(cfg, B)
+
+    block = functools.partial(_layer, cfg, rules)
+    if cfg.remat:
+        block = jax.checkpoint(block)
+
+    def body(x, p_st):
+        p, st = p_st
+        x, st = block(p, x, st)
+        return x, st
+
+    x, new_state = jax.lax.scan(body, x, (params["layers"], state))
+    x = L.rms_norm(x, params["ln_f"]["w"], cfg.norm_eps)
+    return L.unembed(params["out"], x, rules), new_state
+
+
+def loss_fn(params, cfg, rules, batch: Dict[str, Array]) -> Array:
+    logits, _ = forward(params, cfg, rules, batch["tokens"])
+    return L.softmax_xent(logits, batch["labels"], rules)
+
+
+def decode_step(params, cfg, rules, cache, tokens: Array, pos: Array
+                ) -> Tuple[Array, Any]:
+    """Single-token decode: S=1 forward threading the recurrent state."""
+    logits, new_state = forward(params, cfg, rules, tokens, state=cache)
+    return logits[:, -1], new_state

@@ -1,0 +1,310 @@
+"""Generic decoder-only transformer covering the dense / moe / vlm /
+audio (enc-dec) families. Layers are scanned with stacked params; remat
+per layer; MoE via layers.moe_apply; VLM cross-attention blocks
+interleaved; whisper-style encoder-decoder for the audio family.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.module import ParamSpec, constrain
+
+Array = jax.Array
+
+
+def _stack_specs(specs, n: int):
+    """Add a leading ("layers",) axis to every spec in the tree."""
+
+    def add(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype,
+                         s.init, s.scale)
+
+    return jax.tree_util.tree_map(add, specs,
+                                  is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _layer_specs(cfg, cross: bool = False) -> Dict[str, Any]:
+    d = cfg.d_model
+    specs: Dict[str, Any] = {
+        "ln1": L.norm_spec(d),
+        "ln2": L.norm_spec(d),
+    }
+    if cross:
+        specs["attn"] = L.cross_attention_specs(cfg)
+        specs["gate"] = ParamSpec((1,), (None,), init="zeros")
+        specs["mlp"] = L.mlp_specs(d, cfg.d_ff)
+    else:
+        specs["attn"] = L.attention_specs(cfg)
+        if cfg.moe is not None:
+            specs["moe"] = L.moe_specs(d, cfg.moe)
+        else:
+            specs["mlp"] = L.mlp_specs(d, cfg.d_ff)
+        if cfg.family == "audio":
+            # whisper decoder layers cross-attend to the encoder output
+            specs["ln_x"] = L.norm_spec(d)
+            specs["xattn"] = L.cross_attention_specs(cfg)
+    return specs
+
+
+def param_specs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    n_self, n_cross = _layer_layout(cfg)
+    specs: Dict[str, Any] = {
+        "embed": L.embed_specs(cfg.vocab_size, d),
+        "out": L.unembed_specs(d, cfg.vocab_size),
+        "ln_f": {"w": L.norm_spec(d)},
+        "layers": _stack_specs(_layer_specs(cfg), n_self),
+    }
+    if n_cross:
+        specs["cross_layers"] = _stack_specs(_layer_specs(cfg, cross=True),
+                                             n_cross)
+    if cfg.family == "audio":
+        enc_cfg = cfg
+        specs["encoder"] = {
+            "layers": _stack_specs(_layer_specs(enc_cfg), cfg.encoder_layers),
+            "ln_f": {"w": L.norm_spec(d)},
+            "pos": ParamSpec((cfg.num_frames, d), ("frames", "embed"),
+                             scale=0.02),
+        }
+    return specs
+
+
+def _layer_layout(cfg) -> Tuple[int, int]:
+    """(num self layers, num cross layers) from the published total."""
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        n_cross = cfg.num_layers // cfg.cross_attn_every
+        return cfg.num_layers - n_cross, n_cross
+    return cfg.num_layers, 0
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _self_block(cfg, rules, p, x, positions, memory=None):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + L.attn_train(p["attn"], h, cfg, rules, causal=True,
+                         positions=positions)
+    if "xattn" in p and memory is not None:
+        h = L.rms_norm(x, p["ln_x"], cfg.norm_eps)
+        x = x + L.cross_attention(p["xattn"], h, memory, cfg, rules)
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y, aux = L.moe_apply(p["moe"], h, cfg.moe, rules)
+    else:
+        y, aux = L.mlp_apply(p["mlp"], h, rules), 0.0
+    return x + y, aux
+
+
+def _cross_block(cfg, rules, p, x, memory):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + jnp.tanh(p["gate"]) * L.cross_attention(p["attn"], h, memory,
+                                                    cfg, rules)
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + L.mlp_apply(p["mlp"], h, rules)
+
+
+def _scan_self_layers(cfg, rules, stacked, x, positions, memory=None):
+    block = functools.partial(_self_block, cfg, rules)
+    if cfg.remat:
+        block = jax.checkpoint(block)
+
+    def body(carry, p):
+        x, aux = carry
+        x, a = block(p, x, positions, memory)
+        # residual stream at the layer boundary: seq-sharded under SP —
+        # this is what the scan (and remat) actually stores per layer
+        x = constrain(x, rules, ("batch", "res_seq", None))
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, 0.0), stacked)
+    return x, aux
+
+
+def _take_layers(stacked, lo: int, hi: int):
+    return jax.tree_util.tree_map(lambda a: a[lo:hi], stacked)
+
+
+def forward(params, cfg, rules, tokens: Array,
+            memory: Optional[Array] = None,
+            positions: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Full-sequence forward -> (logits, aux_loss).
+
+    memory: (B, M, d) cross-attention memory (image embeds / encoder
+    output); required for vlm/audio.
+    """
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    x = L.embed_lookup(params["embed"], tokens, rules)
+    n_self, n_cross = _layer_layout(cfg)
+
+    if n_cross:
+        per = n_self // n_cross
+        aux = 0.0
+        for g in range(n_cross):
+            x, a = _scan_self_layers(
+                cfg, rules, _take_layers(params["layers"], g * per,
+                                         (g + 1) * per), x, positions)
+            aux += a
+            cp = _take_layers(params["cross_layers"], g, g + 1)
+            cp = jax.tree_util.tree_map(lambda t: t[0], cp)
+            x = _cross_block(cfg, rules, cp, x, memory)
+        # trailing self layers not covered by the group structure
+        if n_cross * per < n_self:
+            x, a = _scan_self_layers(
+                cfg, rules, _take_layers(params["layers"], n_cross * per,
+                                         n_self), x, positions)
+            aux += a
+    else:
+        mem = memory if cfg.family == "audio" else None
+        x, aux = _scan_self_layers(cfg, rules, params["layers"], x, positions,
+                                   memory=mem)
+
+    x = L.rms_norm(x, params["ln_f"]["w"], cfg.norm_eps)
+    logits = L.unembed(params["out"], x, rules)
+    return logits, aux
+
+
+def encode(params, cfg, rules, frames: Array) -> Array:
+    """Whisper-style encoder over stubbed frame embeddings (B, F, d)."""
+    x = frames + params["encoder"]["pos"][None, :frames.shape[1]]
+    positions = jnp.arange(frames.shape[1])[None, :]
+
+    def body(carry, p):
+        x, _ = carry
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = x + L.attn_train(p["attn"], h, cfg, rules, causal=False,
+                             positions=positions)
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h, rules)
+        return (x, 0.0), None
+
+    (x, _), _ = jax.lax.scan(body, (x, 0.0), params["encoder"]["layers"])
+    return L.rms_norm(x, params["encoder"]["ln_f"]["w"], cfg.norm_eps)
+
+
+def loss_fn(params, cfg, rules, batch: Dict[str, Array]) -> Array:
+    """Mean token cross-entropy (+ MoE aux)."""
+    memory = _resolve_memory(params, cfg, rules, batch)
+    logits, aux = forward(params, cfg, rules, batch["tokens"], memory=memory)
+    return L.softmax_xent(logits, batch["labels"], rules) + aux
+
+
+def _resolve_memory(params, cfg, rules, batch):
+    if cfg.family == "audio":
+        return encode(params, cfg, rules, batch["frames"])
+    if cfg.family == "vlm":
+        return batch["image_embeds"]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, KV caches)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    n_self, n_cross = _layer_layout(cfg)
+    cache: Dict[str, Any] = {
+        "self": L.init_kv_cache(cfg, batch, max_seq, n_self, dtype)}
+    if n_cross or cfg.family == "audio":
+        cache["memory"] = jnp.zeros(
+            (batch, _memory_len(cfg), cfg.d_model), dtype)
+    return cache
+
+
+def cache_specs(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    n_self, n_cross = _layer_layout(cfg)
+    specs: Dict[str, Any] = {
+        "self": L.kv_cache_specs(cfg, batch, max_seq, n_self, dtype)}
+    if n_cross or cfg.family == "audio":
+        # activations never use the fsdp ("embed") axis — "batch" may
+        # already map the data axis
+        specs["memory"] = ParamSpec((batch, _memory_len(cfg), cfg.d_model),
+                                    ("batch", None, None), dtype=dtype)
+    return specs
+
+
+def _memory_len(cfg) -> int:
+    if cfg.family == "audio":
+        return cfg.num_frames
+    return cfg.num_image_tokens
+
+
+def decode_step(params, cfg, rules, cache, tokens: Array, pos: Array
+                ) -> Tuple[Array, Any]:
+    """tokens: (B, 1) int32; pos: (B,) write positions. -> (logits, cache)."""
+    B = tokens.shape[0]
+    x = L.embed_lookup(params["embed"], tokens, rules)
+    n_self, n_cross = _layer_layout(cfg)
+    memory = cache.get("memory")
+
+    def body(carry, p_and_kv):
+        x, = carry
+        p, kc, vc = p_and_kv
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, kc, vc = L.attn_decode(p["attn"], h, cfg, rules, kc, vc, pos)
+        x = x + a
+        if cfg.family == "audio":
+            h = L.rms_norm(x, p["ln_x"], cfg.norm_eps)
+            x = x + L.cross_attention(p["xattn"], h, memory, cfg, rules)
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y, _ = L.moe_apply(p["moe"], h, cfg.moe, rules)
+        else:
+            y = L.mlp_apply(p["mlp"], h, rules)
+        return (x + y,), (kc, vc)
+
+    if n_cross:
+        per = n_self // n_cross
+        new_k, new_v = [], []
+        for g in range(n_cross):
+            sl = _take_layers(params["layers"], g * per, (g + 1) * per)
+            kc = cache["self"]["k"][g * per:(g + 1) * per]
+            vc = cache["self"]["v"][g * per:(g + 1) * per]
+            (x,), (kc, vc) = jax.lax.scan(body, (x,), (sl, kc, vc))
+            new_k.append(kc)
+            new_v.append(vc)
+            cp = jax.tree_util.tree_map(
+                lambda t: t[0], _take_layers(params["cross_layers"], g, g + 1))
+            x = _cross_block(cfg, rules, cp, x, memory)
+        if n_cross * per < n_self:
+            sl = _take_layers(params["layers"], n_cross * per, n_self)
+            kc = cache["self"]["k"][n_cross * per:]
+            vc = cache["self"]["v"][n_cross * per:]
+            (x,), (kc, vc) = jax.lax.scan(body, (x,), (sl, kc, vc))
+            new_k.append(kc)
+            new_v.append(vc)
+        cache = dict(cache)
+        cache["self"] = {"k": jnp.concatenate(new_k),
+                         "v": jnp.concatenate(new_v)}
+    else:
+        # the KV cache rides in the scan CARRY and is updated in place
+        # (dynamic_update_index per layer) — scanning it through xs/ys
+        # stacks a second full-cache output buffer that XLA cannot alias
+        # with the input (+50% decode working set, the minicpm-32k HBM
+        # violator in the baseline grid)
+        def body_carry(carry, pl):
+            x, kf, vf = carry
+            p, l = pl
+            kc = jax.lax.dynamic_index_in_dim(kf, l, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vf, l, 0, keepdims=False)
+            (x,), (kc, vc) = body((x,), (p, kc, vc))
+            kf = jax.lax.dynamic_update_index_in_dim(kf, kc, l, 0)
+            vf = jax.lax.dynamic_update_index_in_dim(vf, vc, l, 0)
+            return (x, kf, vf), None
+
+        (x, kf, vf), _ = jax.lax.scan(
+            body_carry, (x, cache["self"]["k"], cache["self"]["v"]),
+            (params["layers"], jnp.arange(n_self)))
+        cache = dict(cache)
+        cache["self"] = {"k": kf, "v": vf}
+
+    x = L.rms_norm(x, params["ln_f"]["w"], cfg.norm_eps)
+    logits = L.unembed(params["out"], x, rules)
+    return logits[:, 0], cache

@@ -1,0 +1,191 @@
+"""Zamba2 — Mamba2 backbone + one SHARED full-attention block applied
+every `shared_attn_every` layers (Glorioso et al., arXiv:2411.15242).
+
+The shared block has a single parameter set reused at every
+application (the arch's parameter-efficiency trick).  For the
+long-context serving cell the shared block switches to a sliding-window
+KV cache of cfg.long_attn_window (full attention over 512k tokens for
+one block would dominate memory; the Mamba2 state is constant-size, so
+the arch remains long-context capable — recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.module import ParamSpec
+from repro.models.transformer import _stack_specs
+
+Array = jax.Array
+
+
+def _mamba_layer_specs(cfg) -> Dict[str, Any]:
+    return {
+        "ln": L.norm_spec(cfg.d_model),
+        "mixer": M.mamba2_specs(cfg),
+    }
+
+
+def param_specs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "embed": L.embed_specs(cfg.vocab_size, d),
+        "out": L.unembed_specs(d, cfg.vocab_size),
+        "ln_f": {"w": L.norm_spec(d)},
+        "layers": _stack_specs(_mamba_layer_specs(cfg), cfg.num_layers),
+        "shared_attn": {
+            "ln1": L.norm_spec(d),
+            "attn": L.attention_specs(cfg),
+            "ln2": L.norm_spec(d),
+            "mlp": L.mlp_specs(d, cfg.d_ff),
+        },
+    }
+
+
+from repro.models.module import constrain
+
+
+def _mamba_block(cfg, rules, p, x, ssm, conv):
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    o, (ssm, conv) = M.mamba2_apply(p["mixer"], h, cfg, rules, ssm, conv)
+    x = constrain(x + o, rules, ("batch", "res_seq", None))
+    return x, ssm, conv
+
+
+def _shared_block_train(cfg, rules, p, x, positions):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + L.attn_train(p["attn"], h, cfg, rules, causal=True,
+                         positions=positions)
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + L.mlp_apply(p["mlp"], h, rules)
+
+
+def forward(params, cfg, rules, tokens: Array, state=None
+            ) -> Tuple[Array, Any]:
+    B, S = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens, rules)
+    positions = jnp.arange(S)[None, :]
+    every = cfg.shared_attn_every or cfg.num_layers
+    n_groups = max(1, cfg.num_layers // every)
+    if state is None:
+        state = M.init_mamba_state(cfg, B, cfg.num_layers)
+
+    block = functools.partial(_mamba_block, cfg, rules)
+    if cfg.remat:
+        block = jax.checkpoint(block)
+
+    new_ssm, new_conv = [], []
+    for g in range(n_groups):
+        lo, hi = g * every, min((g + 1) * every, cfg.num_layers)
+        x = _shared_block_train(cfg, rules, params["shared_attn"], x,
+                                positions)
+        sl = jax.tree_util.tree_map(lambda a: a[lo:hi], params["layers"])
+
+        def body(carry, p_st):
+            x, = carry
+            p, ssm, conv = p_st
+            x, ssm, conv = block(p, x, ssm, conv)
+            return (x,), (ssm, conv)
+
+        (x,), (ssm_g, conv_g) = jax.lax.scan(
+            body, (x,), (sl, state["ssm"][lo:hi], state["conv"][lo:hi]))
+        new_ssm.append(ssm_g)
+        new_conv.append(conv_g)
+
+    x = L.rms_norm(x, params["ln_f"]["w"], cfg.norm_eps)
+    logits = L.unembed(params["out"], x, rules)
+    return logits, {"ssm": jnp.concatenate(new_ssm),
+                    "conv": jnp.concatenate(new_conv)}
+
+
+def loss_fn(params, cfg, rules, batch: Dict[str, Array]) -> Array:
+    logits, _ = forward(params, cfg, rules, batch["tokens"])
+    return L.softmax_xent(logits, batch["labels"], rules)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _attn_window(cfg, max_seq: int) -> int:
+    w = cfg.long_attn_window
+    if w and max_seq > w:
+        return w
+    return max_seq
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    every = cfg.shared_attn_every or cfg.num_layers
+    n_groups = max(1, cfg.num_layers // every)
+    W = _attn_window(cfg, max_seq)
+    return {
+        "mamba": M.init_mamba_state(cfg, batch, cfg.num_layers),
+        "attn": L.init_kv_cache(cfg, batch, W, n_groups, dtype),
+    }
+
+
+def cache_specs(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    every = cfg.shared_attn_every or cfg.num_layers
+    n_groups = max(1, cfg.num_layers // every)
+    W = _attn_window(cfg, max_seq)
+    return {
+        "mamba": M.mamba_state_specs(cfg, batch, cfg.num_layers),
+        "attn": L.kv_cache_specs(cfg, batch, W, n_groups, dtype),
+    }
+
+
+def decode_step(params, cfg, rules, cache, tokens: Array, pos: Array
+                ) -> Tuple[Array, Any]:
+    B = tokens.shape[0]
+    x = L.embed_lookup(params["embed"], tokens, rules)
+    every = cfg.shared_attn_every or cfg.num_layers
+    n_groups = max(1, cfg.num_layers // every)
+    W = cache["attn"]["k"].shape[2]
+    # sliding window: write slot = pos mod W once the window is full
+    wpos = jnp.where(pos < W, pos, pos % W)
+
+    new_k, new_v, new_ssm, new_conv = [], [], [], []
+    for g in range(n_groups):
+        lo, hi = g * every, min((g + 1) * every, cfg.num_layers)
+        p = params["shared_attn"]
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, kc, vc = L.attn_decode(p["attn"], h, cfg, rules,
+                                  cache["attn"]["k"][g],
+                                  cache["attn"]["v"][g], pos,
+                                  write_pos=wpos,
+                                  valid_upto=jnp.minimum(pos, W - 1))
+        x = x + a
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h, rules)
+        new_k.append(kc[None])
+        new_v.append(vc[None])
+
+        sl = jax.tree_util.tree_map(lambda a: a[lo:hi], params["layers"])
+
+        def body(carry, p_st):
+            x, = carry
+            pl, ssm, conv = p_st
+            h = L.rms_norm(x, pl["ln"], cfg.norm_eps)
+            o, (ssm, conv) = M.mamba2_apply(pl["mixer"], h, cfg, rules, ssm,
+                                            conv)
+            return (x + o,), (ssm, conv)
+
+        (x,), (ssm_g, conv_g) = jax.lax.scan(
+            body, (x,), (sl, cache["mamba"]["ssm"][lo:hi],
+                         cache["mamba"]["conv"][lo:hi]))
+        new_ssm.append(ssm_g)
+        new_conv.append(conv_g)
+
+    x = L.rms_norm(x, params["ln_f"]["w"], cfg.norm_eps)
+    logits = L.unembed(params["out"], x, rules)
+    cache = {
+        "mamba": {"ssm": jnp.concatenate(new_ssm),
+                  "conv": jnp.concatenate(new_conv)},
+        "attn": {"k": jnp.concatenate(new_k), "v": jnp.concatenate(new_v)},
+    }
+    return logits[:, 0], cache

@@ -1,0 +1,11 @@
+from repro.optim.optimizers import adamw_init, adamw_update, sgdm_init, sgdm_update
+from repro.optim.schedule import cosine_schedule, wsd_schedule
+from repro.optim.pscope_dl import (PScopeDLConfig, make_pscope_train_step,
+                                   make_standard_train_step, init_train_state)
+
+__all__ = [
+    "adamw_init", "adamw_update", "sgdm_init", "sgdm_update",
+    "cosine_schedule", "wsd_schedule",
+    "PScopeDLConfig", "make_pscope_train_step", "make_standard_train_step",
+    "init_train_state",
+]

@@ -1,0 +1,78 @@
+"""Optimizers (no optax in this environment).
+
+API: *_init(params) -> state; *_update(grads, state, params, lr, ...)
+-> (new_params, new_state).  All tree-based, dtype-preserving; moments
+kept in `moment_dtype` (fp32 default, bf16 for the 235B config to fit
+HBM — see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _tmap(f, *trees, **kw):
+    return jax.tree_util.tree_map(f, *trees, **kw)
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return {"m": _tmap(zeros, params), "v": _tmap(zeros, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.0) -> Tuple[Any, Dict[str, Any]]:
+    t = state["t"] + 1
+    tf = t.astype(jnp.float32)
+    c1 = 1.0 - b1 ** tf
+    c2 = 1.0 - b2 ** tf
+
+    def upd(g, m, v, p):
+        gf = g.astype(m.dtype)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        step = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+        if weight_decay:
+            step = step + weight_decay * p.astype(m.dtype)
+        return (p.astype(jnp.float32) - lr * step.astype(jnp.float32)
+                ).astype(p.dtype), m2, v2
+
+    out = _tmap(upd, grads, state["m"], state["v"], params)
+    new_params = _tmap(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = _tmap(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = _tmap(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "t": t}
+
+
+def sgdm_init(params, moment_dtype=jnp.float32) -> Dict[str, Any]:
+    return {"m": _tmap(lambda p: jnp.zeros(p.shape, moment_dtype), params)}
+
+
+def sgdm_update(grads, state, params, lr, momentum=0.9
+                ) -> Tuple[Any, Dict[str, Any]]:
+    def upd(g, m, p):
+        m2 = momentum * m + g.astype(m.dtype)
+        return (p.astype(jnp.float32) - lr * m2.astype(jnp.float32)
+                ).astype(p.dtype), m2
+
+    out = _tmap(upd, grads, state["m"], params)
+    new_params = _tmap(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = _tmap(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m}
+
+
+def global_norm(tree) -> Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return _tmap(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype),
+                 tree), norm

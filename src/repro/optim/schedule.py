@@ -1,0 +1,34 @@
+"""LR schedules, including the WSD (warmup-stable-decay) schedule of
+MiniCPM (arXiv:2404.06395), required by the minicpm-2b config."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def wsd_schedule(base_lr: float, warmup: int, stable: int, decay: int,
+                 min_ratio: float = 0.01):
+    """Warmup -> Stable (constant) -> Decay (exponential-ish linear)."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = base_lr * (min_ratio ** prog)
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < warmup + stable, base_lr, dec))
+        return out
+
+    return lr

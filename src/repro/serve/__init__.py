@@ -1,0 +1,3 @@
+from repro.serve.serve_loop import ServeConfig, BatchedServer
+
+__all__ = ["ServeConfig", "BatchedServer"]

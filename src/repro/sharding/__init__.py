@@ -1,0 +1,5 @@
+from repro.sharding.logical import (LOGICAL_RULES, make_rules, batch_axes,
+                                    dp_axis_names, rules_for_config)
+
+__all__ = ["LOGICAL_RULES", "make_rules", "batch_axes", "dp_axis_names",
+           "rules_for_config"]

@@ -1,0 +1,104 @@
+"""Logical sharding axes -> mesh axes.
+
+Parallelism modes:
+  tp       — tensor-parallel only; params replicated over DP axes.
+             Right for <= ~5B params (fits HBM replicated).
+  fsdp_tp  — ZeRO-3: the `embed` dim of every large weight is sharded
+             over the `data` axis in addition to TP over `model`.
+             Mandatory for the 30B/235B MoE configs on 16 GB chips.
+
+Logical axes used by the model zoo:
+  layers     scan dimension (never sharded)
+  embed      d_model dim of weights — FSDP target
+  heads/mlp/vocab/expert  TP targets (over `model`)
+  kv_heads   KV heads; left unsharded (GQA kv count < model size)
+  head_dim/state/conv/frames  never sharded
+  batch      DP axes for activations
+  seq        activation sequence dim (sharded over `model` for
+             long-context decode KV via `kv_seq`)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+DP_AXES = ("pod", "data")
+
+
+def make_rules(mode: str = "fsdp_tp", multi_pod: bool = True,
+               shard_kv_seq: bool = True) -> Dict[Optional[str], Any]:
+    dp: Any = DP_AXES if multi_pod else "data"
+    rules: Dict[Optional[str], Any] = {
+        None: None,
+        "layers": None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": None,
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "expert_mlp": None,
+        "state": None,
+        "conv": None,
+        "frames": None,
+        # activations
+        "batch": dp,
+        "seq": None,
+        "attn_seq": None,       # "model" = sequence-parallel attention
+        # residual stream between blocks: "model" = Megatron-style
+        # activation sequence parallelism (norms/residuals run seq-
+        # sharded; XLA inserts the all-gather at the first TP matmul and
+        # the reduce-scatter after the block) — cuts the per-layer saved
+        # activations by the TP degree
+        "res_seq": None,
+        "kv_seq": "model" if shard_kv_seq else None,
+        "act_embed": None,
+        "act_heads": "model",
+        "act_mlp": "model",
+        "act_vocab": "model",
+        "act_expert": "model",
+        # MoE dispatch buffers (E, C, d): capacity slots sharded over
+        # `data` so the buffers scale with the DP degree
+        "moe_cap": "data",
+    }
+    if mode == "fsdp_tp":
+        rules["embed"] = "data"
+    elif mode == "tp":
+        pass
+    else:
+        raise ValueError(f"unknown sharding mode {mode!r}")
+    return rules
+
+
+def rules_for_config(cfg, mode: str, multi_pod: bool, tp_size: int = 16,
+                     seq_parallel: bool = False
+                     ) -> Dict[Optional[str], Any]:
+    """Per-arch rules: archs whose head count does not divide the model
+    axis fall back from head-TP to sequence-parallel attention (weights
+    replicated over `model`, the seq dim of q/k/v sharded instead — XLA
+    all-gathers the small GQA KV per block)."""
+    rules = make_rules(mode, multi_pod=multi_pod)
+    if seq_parallel:
+        rules["res_seq"] = "model"
+    heads_ok = cfg.num_heads % tp_size == 0
+    if not heads_ok:
+        rules["heads"] = None
+        rules["act_heads"] = None
+        rules["attn_seq"] = "model"
+    if cfg.family in ("ssm", "hybrid"):
+        # rwkv/mamba heads (d_inner/head_dim) always divide here; keep
+        # head-TP for the recurrent mixers even when the shared attn
+        # block fell back to SP (zamba2: 32 attn heads % 16 == 0 anyway)
+        pass
+    return rules
+
+
+LOGICAL_RULES = make_rules()
+
+
+def batch_axes(multi_pod: bool = True):
+    return DP_AXES if multi_pod else ("data",)
+
+
+def dp_axis_names(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in DP_AXES)

@@ -1,0 +1,8 @@
+from repro.train.checkpoint import (save_checkpoint, restore_checkpoint,
+                                    latest_step, AsyncCheckpointer)
+from repro.train.compression import topk_compress, topk_decompress_add
+from repro.train.elastic import reshard_tree
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer", "topk_compress", "topk_decompress_add",
+           "reshard_tree"]

@@ -1,0 +1,157 @@
+"""Fault-tolerant checkpointing (no orbax in this environment).
+
+Layout:  <dir>/step_<N>/
+            meta.json            (step, user metadata, leaf manifest)
+            arrays.npz           (flattened pytree, '/'-joined keys)
+         <dir>/step_<N>.tmp/ ... atomically renamed on completion —
+a crash mid-write never corrupts the latest checkpoint; restore picks
+the newest COMPLETE step directory.
+
+Restore is mesh-independent: arrays land on host then are device_put
+with the target sharding — this is what makes elastic resizing
+(restore on a different mesh) work.  `AsyncCheckpointer` overlaps the
+host-side write with training (one step of copy-then-write pipelining).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    tree: Dict[str, Any] = {}
+    for key, val in flat.items():
+        node = tree
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+_BYTE_VIEWS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+               "float8_e5m2": np.uint8}
+
+
+def save_checkpoint(directory: str, step: int, tree, metadata: Optional[dict]
+                    = None) -> str:
+    """Atomic host-side save. Returns the final path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    # npz has no ml_dtypes support: store raw byte views + dtype manifest
+    dtypes = {k: str(v.dtype) for k, v in flat.items()}
+    stored = {k: (v.view(_BYTE_VIEWS[str(v.dtype)])
+                  if str(v.dtype) in _BYTE_VIEWS else v)
+              for k, v in flat.items()}
+    np.savez(os.path.join(tmp, "arrays.npz"), **stored)
+    meta = {"step": step, "keys": sorted(flat), "dtypes": dtypes,
+            "metadata": metadata or {}}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(directory, name, "meta.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: Optional[int] = None,
+                       shardings=None) -> Tuple[Any, dict]:
+    """Returns (tree, metadata). If `shardings` (same-structure pytree of
+    jax.sharding.Sharding) is given, leaves are device_put accordingly —
+    works across mesh shapes (elastic resume)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    import ml_dtypes
+    dtypes = meta.get("dtypes", {})
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {}
+        for k in z.files:
+            arr = z[k]
+            want = dtypes.get(k, str(arr.dtype))
+            if str(arr.dtype) != want:
+                arr = arr.view(np.dtype(want))
+            flat[k] = arr
+    tree = _unflatten(flat)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda leaf, sh: jax.device_put(leaf, sh), tree, shardings)
+    return tree, meta
+
+
+def prune_old(directory: str, keep: int = 3) -> None:
+    steps = sorted(
+        int(m.group(1)) for name in os.listdir(directory)
+        if (m := re.fullmatch(r"step_(\d+)", name)))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Overlaps the host write with training: device_get happens on the
+    caller thread (cheap on CPU, DMA on TPU), np.savez on a worker."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def save(self, step: int, tree, metadata: Optional[dict] = None):
+        self.wait()
+        host_tree = jax.device_get(tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, metadata)
+                prune_old(self.directory, self.keep)
+            except BaseException as e:   # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err

@@ -1,0 +1,38 @@
+"""Elastic scaling: resume the same logical state on a different mesh.
+
+The checkpoint format is host-numpy (mesh-independent); resharding is
+`device_put` against the new mesh's NamedShardings.  The data pipeline
+is step-indexed (batch content is a pure function of the global step),
+so a resized job replays no data and skips none.  A node failure is
+handled the same way: restart with the survivors' mesh, restore, go.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding
+
+
+def reshard_tree(tree, mesh, pspecs) -> Any:
+    """device_put every leaf with NamedSharding(mesh, pspec)."""
+    return jax.tree_util.tree_map(
+        lambda leaf, spec: jax.device_put(leaf, NamedSharding(mesh, spec)),
+        tree, pspecs)
+
+
+def failure_plan(mesh_shape, failed_hosts: int, hosts: int):
+    """Pick the largest viable mesh after losing `failed_hosts` hosts.
+
+    Policy: drop whole data-parallel slices (pSCOPE workers) — the CALL
+    framework tolerates a changed worker count p without retuning
+    (Lemma 2's gamma bound only improves as shards grow), so we shrink
+    the `data` axis and keep `model` intact.
+    """
+    alive = hosts - failed_hosts
+    if not mesh_shape:
+        return ()
+    data = mesh_shape[0]
+    per_host = max(1, data // hosts)
+    new_data = max(1, per_host * alive)
+    return (new_data,) + tuple(mesh_shape[1:])

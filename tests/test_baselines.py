@@ -1,0 +1,80 @@
+"""Every paper baseline decreases the composite objective."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Regularizer, LOGISTIC
+from repro.core.baselines import (fista_history, pgd_history,
+                                  prox_svrg_history, dpsgd_history,
+                                  dpsvrg_history, admm_history,
+                                  owlqn_history, dbcd_history, cocoa_history)
+from repro.core.partition import uniform_partition, stack_partition
+from repro.data.synthetic import make_sparse_classification
+
+
+@pytest.fixture(scope="module")
+def prob():
+    X, y, _ = make_sparse_classification(384, 32, density=0.3, seed=0)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    reg = Regularizer(1e-3, 1e-3)
+    idx = uniform_partition(jax.random.PRNGKey(0), 384, 4)
+    Xp, yp = stack_partition(X, y, idx)
+    return X, y, Xp, yp, reg, jnp.zeros(32)
+
+
+def _assert_decreases(hist, by=0.03):
+    assert np.isfinite(hist[-1])
+    assert hist[-1] < hist[0] - by, hist[-3:]
+
+
+def test_fista(prob):
+    X, y, _, _, reg, w0 = prob
+    _assert_decreases(fista_history(LOGISTIC, reg, X, y, w0, iters=60)[1])
+
+
+def test_pgd(prob):
+    X, y, _, _, reg, w0 = prob
+    _assert_decreases(pgd_history(LOGISTIC, reg, X, y, w0, iters=60)[1])
+
+
+def test_prox_svrg(prob):
+    X, y, _, _, reg, w0 = prob
+    _assert_decreases(prox_svrg_history(
+        LOGISTIC, reg, X, y, w0, eta=0.5, inner_steps=128,
+        outer_steps=5)[1])
+
+
+def test_dpsgd(prob):
+    X, y, Xp, yp, reg, w0 = prob
+    _assert_decreases(dpsgd_history(LOGISTIC, reg, Xp, yp, w0, eta0=0.5,
+                                    steps=200)[1])
+
+
+def test_dpsvrg(prob):
+    X, y, Xp, yp, reg, w0 = prob
+    _assert_decreases(dpsvrg_history(LOGISTIC, reg, Xp, yp, w0, eta=0.5,
+                                     inner_steps=64, outer_steps=4)[1])
+
+
+def test_admm(prob):
+    X, y, Xp, yp, reg, w0 = prob
+    _assert_decreases(admm_history(LOGISTIC, reg, Xp, yp, w0, rho=1.0,
+                                   outer_steps=30)[1], by=0.02)
+
+
+def test_owlqn(prob):
+    X, y, _, _, reg, w0 = prob
+    _assert_decreases(owlqn_history(LOGISTIC, reg, X, y, w0, iters=25)[1])
+
+
+def test_dbcd(prob):
+    X, y, _, _, reg, w0 = prob
+    _assert_decreases(dbcd_history(LOGISTIC, reg, X, y, w0, p=4,
+                                   outer_steps=60)[1])
+
+
+def test_cocoa(prob):
+    X, y, _, _, reg, w0 = prob
+    _assert_decreases(cocoa_history(LOGISTIC, reg, X, y, w0, p=4,
+                                    outer_steps=40)[1], by=0.02)

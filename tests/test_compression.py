@@ -1,0 +1,41 @@
+"""Top-k gradient compression with error feedback."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.train.compression import (topk_compress, compressed_bytes)
+
+
+def test_topk_keeps_largest():
+    g = {"w": jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05])}
+    ef = {"w": jnp.zeros(5)}
+    sent, ef2 = topk_compress(g, ef, ratio=0.4)   # k = 2
+    s = np.asarray(sent["w"])
+    assert s[1] == -5.0 and s[3] == 3.0
+    assert s[0] == 0.0 and s[2] == 0.0 and s[4] == 0.0
+    # residual holds exactly what was not sent
+    np.testing.assert_allclose(np.asarray(ef2["w"]),
+                               [0.1, 0.0, 0.2, 0.0, -0.05], atol=1e-7)
+
+
+def test_error_feedback_no_information_loss():
+    """sum of sent tensors over rounds == sum of gradients (EF property)."""
+    rng = np.random.RandomState(0)
+    ef = {"w": jnp.zeros(64)}
+    total_sent = np.zeros(64)
+    total_grad = np.zeros(64)
+    for t in range(50):
+        g = {"w": jnp.asarray(rng.randn(64).astype(np.float32))}
+        sent, ef = topk_compress(g, ef, ratio=0.1)
+        total_sent += np.asarray(sent["w"])
+        total_grad += np.asarray(g["w"])
+    resid = np.abs(total_grad - total_sent)
+    # what's missing is exactly the final residual (bounded)
+    np.testing.assert_allclose(total_sent + np.asarray(ef["w"]), total_grad,
+                               atol=1e-4)
+
+
+def test_compressed_bytes_accounting():
+    tree = {"a": jnp.zeros(1000, jnp.float32), "b": jnp.zeros(100, jnp.bfloat16)}
+    n = compressed_bytes(tree, ratio=0.01)
+    assert n == 10 * (4 + 4) + 1 * (4 + 2)

@@ -1,0 +1,99 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps (interpret)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("d", [64, 128, 1000, 4096, 12345])
+@pytest.mark.parametrize("lam1", [0.0, 1e-3])
+def test_lazy_prox_shapes(d, lam1):
+    rng = np.random.RandomState(d)
+    u = jnp.asarray(rng.randn(d).astype(np.float32))
+    z = jnp.asarray(rng.randn(d).astype(np.float32) * 0.02)
+    q = jnp.asarray(rng.randint(0, 64, d).astype(np.int32))
+    got = ops.lazy_prox(u, z, q, eta=0.1, lam1=lam1, lam2=5e-3)
+    want = ref.lazy_prox_ref(u, z, q, eta=0.1, lam1=lam1, lam2=5e-3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_lazy_prox_matches_sequential_truth():
+    rng = np.random.RandomState(0)
+    u = jnp.asarray(rng.randn(256).astype(np.float32))
+    z = jnp.asarray(rng.randn(256).astype(np.float32) * 0.05)
+    q = jnp.asarray(rng.randint(0, 40, 256).astype(np.int32))
+    got = ops.lazy_prox(u, z, q, eta=0.05, lam1=1e-2, lam2=1e-2)
+    want = ref.lazy_prox_sequential_ref(u, z, q, eta=0.05, lam1=1e-2,
+                                        lam2=1e-2, max_steps=40)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(128,), (1000,), (64, 33), (3, 5, 7)])
+def test_fused_prox_svrg_shapes(shape):
+    rng = np.random.RandomState(1)
+    mk = lambda: jnp.asarray(rng.randn(*shape).astype(np.float32))
+    u, gu, gw, z = mk(), mk(), mk(), mk()
+    got = ops.fused_prox_svrg(u, gu, gw, z, eta=0.2, lam1=1e-2, lam2=1e-2)
+    want = ref.fused_prox_svrg_ref(u, gu, gw, z, eta=0.2, lam1=1e-2,
+                                   lam2=1e-2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(st.floats(1e-3, 1.0), st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+@settings(max_examples=20, deadline=None)
+def test_fused_prox_svrg_hyperparams(eta, lam1, lam2):
+    rng = np.random.RandomState(7)
+    mk = lambda: jnp.asarray(rng.randn(300).astype(np.float32))
+    u, gu, gw, z = mk(), mk(), mk(), mk()
+    got = ops.fused_prox_svrg(u, gu, gw, z, eta=eta, lam1=lam1, lam2=lam2)
+    want = ref.fused_prox_svrg_ref(u, gu, gw, z, eta=eta, lam1=lam1,
+                                   lam2=lam2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,H,KVH,S,D", [
+    (1, 4, 4, 128, 64),     # MHA
+    (2, 4, 2, 256, 64),     # GQA
+    (1, 8, 1, 128, 32),     # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_grid(B, H, KVH, S, D, causal):
+    rng = np.random.RandomState(B + H)
+    q = jnp.asarray(rng.randn(B, H, S, D).astype(np.float32)) * 0.3
+    k = jnp.asarray(rng.randn(B, KVH, S, D).astype(np.float32)) * 0.3
+    v = jnp.asarray(rng.randn(B, KVH, S, D).astype(np.float32))
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.RandomState(3)
+    q = jnp.asarray(rng.randn(1, 2, 128, 64), jnp.bfloat16) * 0.3
+    k = jnp.asarray(rng.randn(1, 2, 128, 64), jnp.bfloat16) * 0.3
+    v = jnp.asarray(rng.randn(1, 2, 128, 64), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=0.1, atol=0.05)
+
+
+def test_flash_attention_uneven_blocks():
+    """seq not a multiple of the default block -> block clamping path."""
+    rng = np.random.RandomState(5)
+    q = jnp.asarray(rng.randn(1, 2, 64, 32).astype(np.float32))
+    k = jnp.asarray(rng.randn(1, 2, 64, 32).astype(np.float32))
+    v = jnp.asarray(rng.randn(1, 2, 64, 32).astype(np.float32))
+    got = ops.flash_attention(q, k, v, causal=True)   # blocks clamp to 64
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)

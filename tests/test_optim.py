@@ -1,0 +1,61 @@
+"""Optimizers and schedules."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import (adamw_init, adamw_update, sgdm_init,
+                                    sgdm_update, clip_by_global_norm)
+from repro.optim.schedule import cosine_schedule, wsd_schedule
+
+
+def test_adamw_converges_quadratic():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+    for _ in range(300):
+        g = {"w": params["w"] - target}
+        params, state = adamw_update(g, state, params, lr=5e-2)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_adamw_bias_correction_first_step():
+    params = {"w": jnp.zeros(1)}
+    state = adamw_init(params)
+    g = {"w": jnp.asarray([0.5])}
+    new_params, _ = adamw_update(g, state, params, lr=0.1)
+    # first-step bias-corrected update ~= -lr * sign(g)
+    np.testing.assert_allclose(np.asarray(new_params["w"]), [-0.1], atol=1e-5)
+
+
+def test_sgdm():
+    params = {"w": jnp.asarray([10.0])}
+    state = sgdm_init(params)
+    for _ in range(200):
+        g = {"w": params["w"]}
+        params, state = sgdm_update(g, state, params, lr=1e-2)
+    assert abs(float(params["w"][0])) < 1.0
+
+
+def test_clip_global_norm():
+    tree = {"a": jnp.ones(4) * 3.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(norm) - 6.0) < 1e-5
+    np.testing.assert_allclose(float(jnp.linalg.norm(clipped["a"])), 1.0,
+                               atol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1e-3) < 1e-9
+    assert float(lr(100)) < float(lr(50)) < float(lr(10))
+
+
+def test_wsd_schedule_phases():
+    lr = wsd_schedule(1e-3, warmup=10, stable=50, decay=20)
+    assert float(lr(5)) < 1e-3                       # warming
+    assert abs(float(lr(30)) - 1e-3) < 1e-9          # stable
+    assert abs(float(lr(59)) - 1e-3) < 1e-9
+    assert float(lr(75)) < 1e-3                      # decaying
+    assert float(lr(80)) <= 1e-3 * 0.0101            # floor

@@ -1,0 +1,77 @@
+"""Partition-goodness theory (Section 4)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Regularizer, LOGISTIC
+from repro.core.partition import (uniform_partition, label_skew_partition,
+                                  replicated_partition, stack_partition,
+                                  local_global_gap, gamma_estimate,
+                                  quadratic_gamma_exact)
+from repro.core.baselines.fista import fista_history
+from repro.data.synthetic import make_sparse_classification
+
+
+@pytest.fixture(scope="module")
+def setup():
+    X, y, _ = make_sparse_classification(384, 24, density=0.4, seed=0)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    reg = Regularizer(1e-2, 1e-3)
+    _, hist = fista_history(LOGISTIC, reg, X, y, jnp.zeros(24), iters=1500,
+                            record_every=1500)
+    return X, y, reg, hist[-1]
+
+
+def _gap(X, y, reg, p_star, idx, a):
+    Xp, yp = stack_partition(X, y, idx)
+    return local_global_gap(LOGISTIC, reg, Xp, yp, a, None, p_star,
+                            iters=500)
+
+
+def test_gap_nonnegative_and_zero_for_pistar(setup):
+    X, y, reg, p_star = setup
+    a = jnp.ones(24) * 0.3
+    gap = _gap(X, y, reg, p_star, replicated_partition(384, 4), a)
+    assert abs(gap) < 1e-5          # Lemma 1: l_{pi*}(a) = 0 for all a
+    gap_u = _gap(X, y, reg, p_star, uniform_partition(
+        jax.random.PRNGKey(0), 384, 4), a)
+    assert gap_u > -1e-6
+
+
+def test_partition_ordering(setup):
+    """pi* <= uniform < fully-split (Section 7.4 ordering)."""
+    X, y, reg, p_star = setup
+    a = jnp.ones(24) * 0.3
+    g_star = _gap(X, y, reg, p_star, replicated_partition(384, 4), a)
+    g_unif = _gap(X, y, reg, p_star, uniform_partition(
+        jax.random.PRNGKey(0), 384, 4), a)
+    g_split = _gap(X, y, reg, p_star, label_skew_partition(
+        np.asarray(y), 4, 1.0), a)
+    assert g_star <= g_unif + 1e-6
+    assert g_unif < g_split
+
+
+def test_quadratic_gamma_closed_form():
+    """Lemma 5: gamma = max_i mean_k (A(i)-A_k(i))^2 / A_k(i)."""
+    A = np.array([[1.0, 4.0], [3.0, 4.0], [2.0, 4.0], [2.0, 4.0]])
+    got = quadratic_gamma_exact(A)
+    mean = A.mean(0)
+    want = max(np.mean((mean[i] - A[:, i]) ** 2 / A[:, i])
+               for i in range(2))
+    assert abs(got - want) < 1e-12
+    # identical workers -> gamma = 0 (pi* case)
+    assert quadratic_gamma_exact(np.ones((4, 3))) == 0.0
+
+
+def test_gamma_estimate_ranks_partitions(setup):
+    X, y, reg, p_star = setup
+    Xp_u, yp_u = stack_partition(X, y, uniform_partition(
+        jax.random.PRNGKey(0), 384, 4))
+    Xp_s, yp_s = stack_partition(X, y, label_skew_partition(
+        np.asarray(y), 4, 1.0))
+    g_u = gamma_estimate(LOGISTIC, reg, Xp_u, yp_u, jnp.zeros(24), p_star,
+                         eps=0.05, num_samples=4, iters=300)
+    g_s = gamma_estimate(LOGISTIC, reg, Xp_s, yp_s, jnp.zeros(24), p_star,
+                         eps=0.05, num_samples=4, iters=300)
+    assert g_u < g_s

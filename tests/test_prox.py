@@ -1,0 +1,76 @@
+"""Proximal operator unit + property tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prox import (Regularizer, soft_threshold, prox_l1,
+                             prox_elastic_net, prox_group_l1)
+
+finite_f = st.floats(-10, 10, allow_nan=False, width=32)
+
+
+@given(st.lists(finite_f, min_size=1, max_size=32),
+       st.floats(1e-4, 2.0), st.floats(0.0, 2.0))
+@settings(max_examples=50, deadline=None)
+def test_soft_threshold_is_prox_of_l1(us, eta, lam):
+    """prox output minimizes lam*eta*|v| + 0.5 (v-u)^2 elementwise."""
+    u = jnp.asarray(us, jnp.float32)
+    v = prox_l1(u, eta, lam)
+    # optimality: 0 in subdifferential
+    for vi, ui in zip(np.asarray(v), np.asarray(u)):
+        if vi != 0:
+            assert abs(vi + eta * lam * np.sign(vi) - ui) < 1e-4
+        else:
+            assert abs(ui) <= eta * lam + 1e-5
+
+
+@given(st.lists(finite_f, min_size=2, max_size=16),
+       st.lists(finite_f, min_size=2, max_size=16),
+       st.floats(1e-3, 1.0), st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+@settings(max_examples=50, deadline=None)
+def test_prox_nonexpansive(us, vs, eta, lam1, lam2):
+    n = min(len(us), len(vs))
+    u = jnp.asarray(us[:n], jnp.float32)
+    v = jnp.asarray(vs[:n], jnp.float32)
+    pu = prox_elastic_net(u, eta, lam1, lam2)
+    pv = prox_elastic_net(v, eta, lam1, lam2)
+    assert float(jnp.linalg.norm(pu - pv)) <= float(
+        jnp.linalg.norm(u - v)) + 1e-5
+
+
+def test_elastic_net_closed_form():
+    u = jnp.asarray([3.0, -0.5, 0.05, -2.0])
+    out = prox_elastic_net(u, eta=0.1, lam1=1.0, lam2=1.0)
+    expect = soft_threshold(u, 0.1) / 1.1
+    np.testing.assert_allclose(out, expect, rtol=1e-6)
+
+
+def test_regularizer_tree_prox_and_value():
+    reg = Regularizer(lam1=0.5, lam2=0.1)
+    tree = {"a": jnp.asarray([1.0, -2.0]), "b": {"c": jnp.asarray([0.01])}}
+    val = float(reg.value(tree))
+    expect = 0.5 * 0.5 * (1 + 4 + 0.0001) + 0.1 * (1 + 2 + 0.01)
+    assert abs(val - expect) < 1e-5
+    out = reg.prox(tree, 0.1)
+    assert out["a"].shape == (2,) and out["b"]["c"].shape == (1,)
+
+
+def test_subgrad_residual_zero_at_optimum():
+    # 1-d problem: min 0.5(w-1)^2 + lam2|w| -> w* = 1 - lam2 (for lam2<1)
+    lam2 = 0.3
+    reg = Regularizer(0.0, lam2)
+    w_star = jnp.asarray([1.0 - lam2])
+    grad_f = w_star - 1.0
+    res = float(reg.subgrad_zero_residual({"w": w_star}, {"w": grad_f}))
+    assert res < 1e-6
+
+
+def test_group_l1_zeros_small_groups():
+    x = jnp.asarray([[0.01, 0.01], [3.0, 4.0]])
+    out = prox_group_l1(x, eta=1.0, lam=1.0, axis=-1)
+    assert float(jnp.abs(out[0]).sum()) == 0.0
+    # large group shrunk toward origin by lam*eta/||x||
+    np.testing.assert_allclose(np.asarray(out[1]),
+                               np.asarray(x[1]) * (1 - 1.0 / 5.0), rtol=1e-5)

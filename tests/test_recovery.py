@@ -1,0 +1,80 @@
+"""Lemma 11 recovery rules: closed form == literal iteration (all five
+z-sign cases), and the block-lazy inner loop == the dense oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.recovery import (recovery_catch_up, sequential_catch_up,
+                                 lazy_inner_loop, dense_inner_loop_linear)
+from repro.core.svrg import logistic_h_prime
+from repro.data.synthetic import (make_sparse_classification,
+                                  make_block_sparse, pad_features)
+
+
+def _check(u, z, q, eta, lam1, lam2, max_steps):
+    got = recovery_catch_up(u, z, q, eta, lam1, lam2)
+    want = sequential_catch_up(u, z, q, eta, lam1, lam2, max_steps)
+    scale = float(jnp.max(jnp.abs(want))) + 1e-6
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4 * scale, rtol=2e-4)
+
+
+@given(st.floats(1e-3, 0.5), st.floats(0.0, 0.5), st.floats(1e-4, 1.0),
+       st.integers(0, 120), st.floats(-5, 5), st.floats(-3, 3))
+@settings(max_examples=80, deadline=None)
+def test_recovery_matches_sequential(eta, lam1, lam2, q, u0, zscale):
+    u = jnp.asarray([u0], jnp.float32)
+    z = jnp.asarray([zscale * lam2], jnp.float32)
+    _check(u, z, jnp.asarray([q], jnp.int32), eta, lam1, lam2, 120)
+
+
+@pytest.mark.parametrize("zcase", ["lt", "eq_pos", "eq_neg", "gt", "lt_neg"])
+@pytest.mark.parametrize("usign", [1.0, 0.0, -1.0])
+def test_recovery_all_lemma11_cases(zcase, usign):
+    """The 5 z-regimes x 3 initial-sign cases of Lemma 11, explicitly."""
+    eta, lam1, lam2 = 0.07, 0.03, 0.11
+    z = {"lt": 0.3 * lam2, "eq_pos": lam2, "eq_neg": -lam2,
+         "gt": 3.0 * lam2, "lt_neg": -3.0 * lam2}[zcase]
+    d = 40
+    u = jnp.full((d,), usign * 0.8, jnp.float32)
+    q = jnp.arange(d, dtype=jnp.int32)          # every skip count 0..39
+    _check(u, jnp.full((d,), z, jnp.float32), q, eta, lam1, lam2, d)
+
+
+def test_recovery_pure_l1():
+    """lam1 = 0 (rho = 1) linear branch."""
+    eta, lam2 = 0.1, 0.05
+    u = jnp.asarray([1.0, -1.0, 0.2, 0.0], jnp.float32)
+    z = jnp.asarray([0.01, -0.01, 0.2, 0.3], jnp.float32)
+    q = jnp.asarray([50, 50, 50, 50], jnp.int32)
+    _check(u, z, q, eta, 0.0, lam2, 50)
+
+
+def test_recovery_q_zero_identity():
+    u = jnp.asarray([1.0, -2.0, 0.0], jnp.float32)
+    z = jnp.asarray([0.1, 0.1, 0.1], jnp.float32)
+    out = recovery_catch_up(u, z, jnp.zeros(3, jnp.int32), 0.1, 0.01, 0.05)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(u))
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_lazy_inner_loop_equals_dense(seed):
+    X, y, _ = make_sparse_classification(48, 192, density=0.06, seed=seed)
+    X = pad_features(X, 64)
+    Xb, bids = make_block_sparse(X, block_size=64)
+    d = X.shape[1]
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.randn(d).astype(np.float32) * 0.1)
+    z = jnp.asarray(rng.randn(d).astype(np.float32) * 0.05)
+    idx = jnp.asarray(rng.randint(0, 48, size=30).astype(np.int32))
+    args = (0.1, 1e-3, 1e-2)
+    u_dense = dense_inner_loop_linear(logistic_h_prime, args[1], args[2],
+                                      args[0], w, w, z, jnp.asarray(X),
+                                      jnp.asarray(y), idx)
+    u_lazy = lazy_inner_loop(logistic_h_prime, args[1], args[2], args[0],
+                             w, w, z, jnp.asarray(Xb), jnp.asarray(y),
+                             jnp.asarray(bids), idx, 64)
+    np.testing.assert_allclose(np.asarray(u_lazy), np.asarray(u_dense),
+                               atol=1e-6)

@@ -1,0 +1,83 @@
+"""HLO cost model: trip-count-aware FLOPs/bytes and collective parse."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import roofline as rf
+
+
+def test_scan_flops_scaled_by_trip_count():
+    W = jnp.zeros((128, 128), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return c @ W, None
+        y, _ = jax.lax.scan(body, x, None, length=9)
+        return y
+
+    c = jax.jit(f).lower(jax.ShapeDtypeStruct((128, 128),
+                                              jnp.float32)).compile()
+    costs = rf.analyze_hlo(c.as_text())
+    want = 2 * 128 * 128 * 128 * 9
+    assert abs(costs.flops - want) / want < 0.01
+    # sanity: the raw body-once number from XLA is ~9x smaller
+    assert float(c.cost_analysis()["flops"]) < costs.flops / 4
+
+
+def test_unrolled_matches_scan_totals():
+    W = jnp.zeros((64, 64), jnp.float32)
+
+    def f_scan(x):
+        y, _ = jax.lax.scan(lambda c, _: (c @ W, None), x, None, length=5)
+        return y
+
+    def f_unroll(x):
+        for _ in range(5):
+            x = x @ W
+        return x
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    fs = rf.analyze_hlo(jax.jit(f_scan).lower(x).compile().as_text()).flops
+    fu = rf.analyze_hlo(jax.jit(f_unroll).lower(x).compile().as_text()).flops
+    assert abs(fs - fu) / fu < 0.01
+
+
+def test_collective_parse_list_and_iota():
+    hlo = """
+ENTRY %main (p: f32[8,8]) -> f32[8,8] {
+  %p = f32[8,8] parameter(0)
+  %ar = f32[8,8] all-reduce(%p), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[8,8] all-gather(%ar), replica_groups=[2,4]<=[8], dimensions={0}
+  ROOT %cp = f32[8,8] collective-permute(%ag), source_target_pairs={{0,1}}
+}
+"""
+    costs = rf.analyze_hlo(hlo, chips_per_pod=4)
+    assert costs.op_counts["all-reduce"] == 1
+    assert costs.op_counts["all-gather"] == 1
+    assert costs.op_counts["collective-permute"] == 1
+    # all-reduce over {0..3}: 2 * 256B * 3/4
+    assert abs(costs.op_bytes["all-reduce"] - 2 * 256 * 0.75) < 1e-6
+
+
+def test_cross_pod_detection_iota_transpose():
+    # [2,2]<=[2,2]T(1,0): ids = [[0,1],[2,3]] transposed -> 0,2,1,3
+    # first group = {0, 2}: spans pods when chips_per_pod = 2
+    hlo = """
+ENTRY %main (p: f32[4]) -> f32[4] {
+  %p = f32[4] parameter(0)
+  ROOT %ar = f32[4] all-reduce(%p), replica_groups=[2,2]<=[2,2]T(1,0), to_apply=%a
+}
+"""
+    costs = rf.analyze_hlo(hlo, chips_per_pod=2)
+    assert costs.coll_cross > 0 and costs.coll_intra == 0
+
+
+def test_model_flops_moe_active_only():
+    from repro import configs
+    from repro.configs.base import SHAPES
+    cfg = configs.get("qwen3-moe-30b-a3b")
+    n_act = rf.active_param_count(cfg)
+    assert 2e9 < n_act < 5e9        # ~3B active of 30B total
+    f = rf.model_flops(cfg, SHAPES["train_4k"], backward=True)
+    assert f == pytest.approx(6 * n_act * 256 * 4096)
