@@ -1,16 +1,21 @@
 """Shared benchmark utilities: problem setup, time/epoch accounting,
-CSV emission (`name,us_per_call,derived`)."""
+CSV emission (`name,us_per_call,derived`).
+
+All figures sweep the `core.solvers` registry; `trace_row` turns the
+`Trace` a registry run returns into one CSV row so every figure reports
+the same derived metrics (final gap, time/comm-to-eps, rounds, NNZ).
+"""
 from __future__ import annotations
 
-import time
-from typing import Callable, Dict, List
+from typing import Dict, List
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core import Regularizer, LOGISTIC, LASSO
 from repro.core.baselines.fista import fista_history
+from repro.core.partition import build_partition
+from repro.core.solvers import Trace
 from repro.data.synthetic import make_dataset
 
 
@@ -26,29 +31,35 @@ def build_problem(name: str, model: str, scale: float = 0.05, seed: int = 0):
     return X, y, obj, reg
 
 
+def build_partitioned_problem(name: str, model: str, p: int = 8,
+                              scheme: str = "uniform", scale: float = 0.05,
+                              seed: int = 0):
+    """Returns (objective, regularizer, Partition) ready for solvers.run."""
+    X, y, obj, reg = build_problem(name, model, scale=scale, seed=seed)
+    part = build_partition(scheme, X, y, p, seed=seed)
+    return obj, reg, part
+
+
+def trace_row(trace: Trace, prefix: str, p_star: float,
+              eps: float = 1e-3) -> Dict:
+    """One `name,us_per_call,derived` row from a registry Trace."""
+    per = trace.seconds[-1] / max(trace.rounds, 1)
+    tts = trace.time_to(p_star, eps)
+    comm = trace.comm_to(p_star, eps)
+    return {
+        "name": f"{prefix}/{trace.solver}",
+        "us_per_call": f"{per * 1e6:.0f}",
+        "derived": (f"final_gap={trace.gap(p_star):.2e};"
+                    f"tts@{eps:g}={tts if np.isfinite(tts) else 'inf'};"
+                    f"comm@{eps:g}={comm if np.isfinite(comm) else 'inf'};"
+                    f"rounds={trace.rounds};nnz={trace.nnz[-1]}"),
+    }
+
+
 def reference_optimum(obj, reg, X, y, iters: int = 4000) -> float:
     _, hist = fista_history(obj, reg, X, y, jnp.zeros(X.shape[1]),
                             iters=iters, record_every=iters)
     return hist[-1]
-
-
-def time_to_suboptimality(history: List[float], times: List[float],
-                          p_star: float, eps: float = 1e-3):
-    """First wall-time at which P(w) - P* <= eps (np.inf if never)."""
-    for h, t in zip(history, times):
-        if h - p_star <= eps:
-            return t
-    return float("inf")
-
-
-class Timer:
-    def __init__(self):
-        self.t0 = time.perf_counter()
-        self.marks: List[float] = [0.0]
-
-    def mark(self):
-        self.marks.append(time.perf_counter() - self.t0)
-        return self.marks[-1]
 
 
 def emit(rows: List[Dict]):

@@ -1,79 +1,53 @@
 """Figure 1 analogue: pSCOPE vs baselines, LR-elastic-net and Lasso, on
-the four Table-1 dataset analogues.  Reports epochs-normalized
-convergence and wall time to 1e-3 suboptimality.
+the four Table-1 dataset analogues.
+
+Sweeps every solver in the `core.solvers` registry through the single
+`solvers.run` entry point — adding a solver to the registry adds it to
+this figure with the default budget below; per-solver budgets are
+overrides in `solver_configs`.  Reports the shared Trace-derived
+metrics (final gap, wall/communication cost to 1e-3 suboptimality).
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
-import numpy as np
-import jax
-import jax.numpy as jnp
-
-from benchmarks.common import (build_problem, reference_optimum,
-                               time_to_suboptimality)
-from repro.core import PScopeConfig, run
-from repro.core.baselines import (fista_history, pgd_history,
-                                  prox_svrg_history, dpsgd_history,
-                                  dpsvrg_history, admm_history,
-                                  owlqn_history, dbcd_history,
-                                  cocoa_history)
-from repro.core.partition import uniform_partition, stack_partition
+from benchmarks.common import (build_partitioned_problem, reference_optimum,
+                               trace_row)
+from repro.core import solvers
+from repro.core.solvers import SolverConfig
 
 P_WORKERS = 8
 EPS = 1e-3
 
 
+def solver_configs(n_k: int) -> Dict[str, SolverConfig]:
+    """Per-solver budgets matched to the seed benchmark settings."""
+    return {
+        # pSCOPE: M = 3 local epochs per outer round (eta per Cor. 1 scale)
+        "pscope": SolverConfig(rounds=16, eta=1.2, inner_epochs=3.0),
+        "fista": SolverConfig(rounds=120),
+        "pgd": SolverConfig(rounds=120),
+        "prox_svrg": SolverConfig(rounds=12, eta=0.5, inner_epochs=2.0),
+        "dpsgd": SolverConfig(rounds=20, record_every=20, eta=0.5, batch=8),
+        "dpsvrg": SolverConfig(rounds=12, eta=0.5,
+                               extras={"inner_steps": n_k}),
+        "admm": SolverConfig(rounds=40, extras={"rho": 1.0}),
+        "owlqn": SolverConfig(rounds=60),
+        "dbcd": SolverConfig(rounds=120),
+        "cocoa": SolverConfig(rounds=60),
+    }
+
+
 def run_dataset(ds: str, model: str, scale: float = 0.05) -> List[Dict]:
-    X, y, obj, reg = build_problem(ds, model, scale=scale)
-    n, d = X.shape
-    p_star = reference_optimum(obj, reg, X, y)
-    idx = uniform_partition(jax.random.PRNGKey(0), n, P_WORKERS)
-    Xp, yp = stack_partition(X, y, idx)
-    w0 = jnp.zeros(d)
-    n_k = Xp.shape[1]
+    obj, reg, part = build_partitioned_problem(ds, model, p=P_WORKERS,
+                                               scale=scale)
+    p_star = reference_optimum(obj, reg, part.X, part.y)
+    cfgs = solver_configs(part.n_k)
     rows = []
-
-    def record(name, fn, epochs_per_round):
-        t0 = time.perf_counter()
-        _, hist = fn()
-        dt = time.perf_counter() - t0
-        per = dt / max(len(hist) - 1, 1)
-        times = [per * i for i in range(len(hist))]
-        tts = time_to_suboptimality(hist, times, p_star, EPS)
-        gap = hist[-1] - p_star
-        rows.append({
-            "name": f"fig1/{ds}/{model}/{name}",
-            "us_per_call": f"{per * 1e6:.0f}",
-            "derived": (f"final_gap={gap:.2e};tts@{EPS:g}="
-                        f"{tts if np.isfinite(tts) else 'inf'};"
-                        f"rounds={len(hist) - 1};"
-                        f"epochs_per_round={epochs_per_round:g}"),
-        })
-
-    # pSCOPE: M = 3 local epochs per outer round (eta per Cor. 1 scale)
-    cfg = PScopeConfig(eta=1.2, inner_steps=3 * n_k, inner_batch=1,
-                       outer_steps=16)
-    record("pscope", lambda: run(obj, reg, Xp, yp, w0, cfg), 3.0)
-    record("fista", lambda: fista_history(obj, reg, X, y, w0, iters=120), 1.0)
-    record("pgd", lambda: pgd_history(obj, reg, X, y, w0, iters=120), 1.0)
-    record("prox_svrg",
-           lambda: prox_svrg_history(obj, reg, X, y, w0, eta=0.5,
-                                     inner_steps=2 * n, outer_steps=12), 3.0)
-    record("dpsgd", lambda: dpsgd_history(obj, reg, Xp, yp, w0, eta0=0.5,
-                                          steps=400, batch=8,
-                                          record_every=20), 8.0 * 8 / n)
-    record("dpsvrg",
-           lambda: dpsvrg_history(obj, reg, Xp, yp, w0, eta=0.5,
-                                  inner_steps=n_k, outer_steps=12), 2.0)
-    record("admm", lambda: admm_history(obj, reg, Xp, yp, w0, rho=1.0,
-                                        outer_steps=40), 20.0)
-    record("owlqn", lambda: owlqn_history(obj, reg, X, y, w0, iters=60), 1.0)
-    record("dbcd", lambda: dbcd_history(obj, reg, X, y, w0, p=P_WORKERS,
-                                        outer_steps=120), 1.0)
-    record("cocoa", lambda: cocoa_history(obj, reg, X, y, w0, p=P_WORKERS,
-                                          outer_steps=60), 10.0)
+    for name in solvers.available():
+        cfg = cfgs.get(name, SolverConfig(rounds=30))
+        trace = solvers.run(name, obj, reg, part, cfg)
+        rows.append(trace_row(trace, f"fig1/{ds}/{model}", p_star, EPS))
     return rows
 
 

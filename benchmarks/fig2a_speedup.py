@@ -4,21 +4,19 @@ On this single-core container, wall-clock parallel speedup cannot be
 observed directly; we report the paper's speedup metric in
 computation-normalized form: rounds-to-epsilon x per-round work
 (n_k = n/p inner steps each), i.e. total sequential gradient
-evaluations, plus measured wall time for reference.
+evaluations, plus measured wall time for reference.  pSCOPE runs
+through the `core.solvers` registry (`solvers.run("pscope", ...)`).
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from benchmarks.common import (build_problem, reference_optimum,
-                               time_to_suboptimality)
-from repro.core import PScopeConfig, run
-from repro.core.partition import uniform_partition, stack_partition
+from benchmarks.common import build_problem, reference_optimum
+from repro.core import solvers
+from repro.core.partition import build_partition
+from repro.core.solvers import SolverConfig
 
 EPS = 1e-6
 
@@ -26,30 +24,26 @@ EPS = 1e-6
 def main() -> List[Dict]:
     rows = []
     X, y, obj, reg = build_problem("cov", "logistic", scale=0.05)
-    n, d = X.shape
     p_star = reference_optimum(obj, reg, X, y, iters=6000)
     base_work = None
     for p in (1, 2, 4, 8):
-        idx = uniform_partition(jax.random.PRNGKey(0), n, p)
-        Xp, yp = stack_partition(X, y, idx)
-        n_k = Xp.shape[1]
-        cfg = PScopeConfig(eta=0.5, inner_steps=2 * n_k, inner_batch=1,
-                           outer_steps=30)
-        t0 = time.perf_counter()
-        _, hist = run(obj, reg, Xp, yp, jnp.zeros(d), cfg)
-        dt = time.perf_counter() - t0
-        sub = np.asarray(hist) - p_star
+        part = build_partition("uniform", X, y, p)
+        cfg = SolverConfig(rounds=30, eta=0.5, inner_epochs=2.0)
+        trace = solvers.run("pscope", obj, reg, part, cfg)
+        sub = np.asarray(trace.suboptimality(p_star))
         rounds = int(np.argmax(sub <= EPS)) if np.any(sub <= EPS) else len(sub)
         # critical-path work per worker: rounds x (n_k full grad + 2 M VR)
-        work = rounds * (n_k + 2 * cfg.inner_steps)
+        inner_steps = int(cfg.inner_epochs * part.n_k)
+        work = rounds * (part.n_k + 2 * inner_steps)
         if base_work is None:
             base_work = work
         speedup = base_work / work if work else float("inf")
         rows.append({
             "name": f"fig2a/speedup/p{p}",
-            "us_per_call": f"{dt / max(rounds,1) * 1e6:.0f}",
+            "us_per_call": f"{trace.seconds[-1] / max(rounds, 1) * 1e6:.0f}",
             "derived": (f"rounds_to_{EPS:g}={rounds};"
-                        f"critical_path_grads={work};speedup={speedup:.2f}"),
+                        f"critical_path_grads={work};speedup={speedup:.2f};"
+                        f"comm_rounds={trace.comm[-1]:g}"),
         })
     return rows
 

@@ -1,12 +1,25 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only substr]
+    PYTHONPATH=src python -m benchmarks.run --list-solvers
 
-Emits ``name,us_per_call,derived`` CSV (one row per measurement).
+Every solver-comparison figure sweeps the `core.solvers` registry via
+its single `solvers.run` entry point; `--list-solvers` prints the
+registry.  Emits ``name,us_per_call,derived`` CSV (one row per
+measurement).
 """
 import argparse
 import sys
 import traceback
+
+
+def list_solvers() -> None:
+    from repro.core import solvers
+    print(f"{'name':10s} {'dist':5s} {'paper ref':42s} communication")
+    for name in solvers.available():
+        spec = solvers.get(name)
+        dist = "p-way" if spec.distributed else "flat"
+        print(f"{name:10s} {dist:5s} {spec.paper_ref:42s} {spec.comm_model}")
 
 
 def main() -> None:
@@ -14,7 +27,13 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="include the large avazu/kdd-like datasets")
     ap.add_argument("--only", default="")
+    ap.add_argument("--list-solvers", action="store_true",
+                    help="print the solver registry and exit")
     args = ap.parse_args()
+
+    if args.list_solvers:
+        list_solvers()
+        return
 
     from benchmarks import (fig1_convergence, table2_timing, fig2a_speedup,
                             fig2b_partition, recovery_bench, roofline_report)

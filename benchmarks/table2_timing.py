@@ -1,51 +1,44 @@
-"""Table 2 analogue: wall time to 1e-3 suboptimality, pSCOPE vs DBCD."""
+"""Table 2 analogue: wall time to 1e-3 suboptimality, pSCOPE vs DBCD.
+
+Both solvers run through the `core.solvers` registry; time-to-eps comes
+straight from the Trace's streaming wall clock (no post-hoc per-round
+averaging).
+"""
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from benchmarks.common import (build_problem, reference_optimum,
-                               time_to_suboptimality)
-from repro.core import PScopeConfig, run
-from repro.core.baselines import dbcd_history
-from repro.core.partition import uniform_partition, stack_partition
+from benchmarks.common import build_partitioned_problem, reference_optimum
+from repro.core import solvers
+from repro.core.solvers import SolverConfig
+
+EPS = 1e-3
 
 
 def main() -> List[Dict]:
     rows = []
     for ds in ("cov", "rcv1"):
         for model in ("logistic", "lasso"):
-            X, y, obj, reg = build_problem(ds, model, scale=0.05)
-            n, d = X.shape
-            p_star = reference_optimum(obj, reg, X, y)
-            idx = uniform_partition(jax.random.PRNGKey(0), n, 8)
-            Xp, yp = stack_partition(X, y, idx)
-            w0 = jnp.zeros(d)
-            n_k = Xp.shape[1]
+            obj, reg, part = build_partitioned_problem(ds, model, p=8,
+                                                       scale=0.05)
+            p_star = reference_optimum(obj, reg, part.X, part.y)
 
-            cfg = PScopeConfig(eta=1.2, inner_steps=3 * n_k, inner_batch=1,
-                               outer_steps=16)
-            t0 = time.perf_counter()
-            _, h = run(obj, reg, Xp, yp, w0, cfg)
-            per = (time.perf_counter() - t0) / 16
-            tts_ps = time_to_suboptimality(
-                h, [per * i for i in range(len(h))], p_star)
+            tr_ps = solvers.run("pscope", obj, reg, part,
+                                SolverConfig(rounds=16, eta=1.2,
+                                             inner_epochs=3.0))
+            tr_db = solvers.run("dbcd", obj, reg, part,
+                                SolverConfig(rounds=150))
 
-            t0 = time.perf_counter()
-            _, h2 = dbcd_history(obj, reg, X, y, w0, p=8, outer_steps=150)
-            per2 = (time.perf_counter() - t0) / 150
-            tts_db = time_to_suboptimality(
-                h2, [per2 * i for i in range(len(h2))], p_star)
-
+            tts_ps = tr_ps.time_to(p_star, EPS)
+            tts_db = tr_db.time_to(p_star, EPS)
             ratio = (tts_db / tts_ps if np.isfinite(tts_db)
                      and np.isfinite(tts_ps) and tts_ps > 0 else float("inf"))
             rows.append({
                 "name": f"table2/{ds}/{model}",
-                "us_per_call": f"{per * 1e6:.0f}",
+                "us_per_call":
+                    f"{tr_ps.seconds[-1] / max(tr_ps.rounds, 1) * 1e6:.0f}",
                 "derived": (f"pscope_tts={tts_ps:.3g};dbcd_tts="
                             f"{tts_db:.3g};speedup={ratio:.3g}"),
             })

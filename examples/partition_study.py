@@ -1,22 +1,23 @@
 #!/usr/bin/env python
 """Fig. 2(b) study: how data partition quality controls convergence.
 
-Builds the paper's four partitions (pi*, uniform, 75/25 skew, full class
-split), estimates the local-global gap l_pi(a) and gamma for each, runs
-pSCOPE under each, and prints the side-by-side table — the ordering is
-the paper's headline theory result.
+Sweeps the paper's four partitions (pi*, uniform, 75/25 skew, full class
+split) from `core.partition.PARTITION_SCHEMES`, estimates the
+local-global gap l_pi(a) (Definition 4) and gamma (Definition 5) for
+each, runs pSCOPE under each via the solver registry, and prints the
+side-by-side table — the ordering is the paper's headline theory result
+(see docs/partition_theory.md).
 
     PYTHONPATH=src python examples/partition_study.py
 """
-import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import Regularizer, LOGISTIC, PScopeConfig, run
+from repro.core import Regularizer, LOGISTIC, solvers
 from repro.core.baselines import fista_history
-from repro.core.partition import (uniform_partition, label_skew_partition,
-                                  replicated_partition, stack_partition,
-                                  local_global_gap)
+from repro.core.partition import (PARTITION_SCHEMES, build_partition,
+                                  gamma_estimate, local_global_gap)
+from repro.core.solvers import SolverConfig
 from repro.data.synthetic import make_sparse_classification
 
 
@@ -29,24 +30,21 @@ def main():
     p_star = fh[-1]
     a = w_star + 0.4 * jax.random.normal(jax.random.PRNGKey(7), (48,))
 
-    parts = {
-        "pi* (replicated)": replicated_partition(1024, 8),
-        "pi1 (uniform)": uniform_partition(jax.random.PRNGKey(0), 1024, 8),
-        "pi2 (75/25 skew)": label_skew_partition(np.asarray(y), 8, 0.75),
-        "pi3 (class split)": label_skew_partition(np.asarray(y), 8, 1.0),
-    }
+    print(f"{'partition':12s} {'l_pi(a)':>12s} {'gamma_est':>12s} "
+          f"{'gap@T=8':>12s}")
+    for scheme in PARTITION_SCHEMES:
+        part = build_partition(scheme, X, y, 8)
+        gap_metric = local_global_gap(LOGISTIC, reg, part.Xp, part.yp, a,
+                                      w_star, p_star, iters=400)
+        gamma = gamma_estimate(LOGISTIC, reg, part.Xp, part.yp, w_star,
+                               p_star, num_samples=4, iters=200)
+        trace = solvers.run("pscope", LOGISTIC, reg, part,
+                            SolverConfig(rounds=8, eta=0.5,
+                                         inner_epochs=2.0))
+        print(f"{scheme:12s} {gap_metric:12.3e} {gamma:12.3e} "
+              f"{trace.gap(p_star):12.3e}")
 
-    print(f"{'partition':18s} {'l_pi(a)':>12s} {'gap@T=8':>12s}")
-    for name, idx in parts.items():
-        Xp, yp = stack_partition(X, y, idx)
-        gap_metric = local_global_gap(LOGISTIC, reg, Xp, yp, a, w_star,
-                                      p_star, iters=400)
-        cfg = PScopeConfig(eta=0.5, inner_steps=2 * Xp.shape[1],
-                           inner_batch=1, outer_steps=8)
-        _, hist = run(LOGISTIC, reg, Xp, yp, jnp.zeros(48), cfg)
-        print(f"{name:18s} {gap_metric:12.3e} {hist[-1] - p_star:12.3e}")
-
-    print("\nbetter partition (smaller l_pi) => faster convergence "
+    print("\nbetter partition (smaller l_pi / gamma) => faster convergence "
           "(Theorem 2).")
 
 

@@ -2,18 +2,19 @@
 """Quickstart: distributed sparse logistic regression with pSCOPE.
 
 Reproduces the paper's core loop end-to-end on synthetic rcv1-like data
-with 8 simulated workers, comparing against FISTA and showing the
-linear convergence of Theorem 2 plus the L1 sparsity of the solution.
+with 8 simulated workers via the unified solver registry
+(`repro.core.solvers`), comparing against FISTA and showing the linear
+convergence of Theorem 2 plus the L1 sparsity of the solution.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
-import jax
 import jax.numpy as jnp
 
-from repro.core import Regularizer, LOGISTIC, PScopeConfig, run
+from repro.core import Regularizer, LOGISTIC, solvers
 from repro.core.baselines import fista_history
-from repro.core.partition import uniform_partition, stack_partition
+from repro.core.partition import build_partition
+from repro.core.solvers import SolverConfig
 from repro.data.synthetic import make_dataset
 
 
@@ -32,22 +33,24 @@ def main():
     p_star = fh[-1]
     print(f"P(w*) = {p_star:.8f}  (FISTA reference)")
 
-    # the paper's Algorithm 1: uniform partition, 8 workers
-    idx = uniform_partition(jax.random.PRNGKey(0), n, 8)
-    Xp, yp = stack_partition(X, y, idx)
-    cfg = PScopeConfig(eta=0.5, inner_steps=3 * Xp.shape[1], inner_batch=1,
-                       outer_steps=12)
-    w, hist = run(LOGISTIC, reg, Xp, yp, jnp.zeros(d), cfg)
+    # the paper's Algorithm 1: uniform partition, 8 workers, via the
+    # registry's single entry point
+    part = build_partition("uniform", X, y, 8)
+    trace = solvers.run("pscope", LOGISTIC, reg, part,
+                        SolverConfig(rounds=12, eta=0.5, inner_epochs=3.0))
 
-    print("\nouter round | P(w_t) - P*")
-    for t, h in enumerate(hist):
-        print(f"   {t:2d}       | {h - p_star:.3e}")
+    print("\nouter round | P(w_t) - P*  | nnz | comm rounds")
+    for t, (gap, nnz, comm) in enumerate(zip(
+            trace.suboptimality(p_star), trace.nnz, trace.comm)):
+        print(f"   {t:2d}       | {gap:.3e}   | {nnz:3d} | {comm:4.0f}")
 
-    nnz = int(jnp.sum(jnp.abs(w) > 1e-8))
+    nnz = trace.nnz[-1]
     print(f"\nsolution sparsity: {nnz}/{d} nonzeros "
           f"({100.0 * nnz / d:.1f}%)")
-    print("communication: 2 vector all-reduces per round "
-          f"(total {2 * cfg.outer_steps}) vs {n // 8}+ for per-step dpSGD")
+    print(f"communication: 2 vector all-reduces per round "
+          f"(total {trace.comm[-1]:.0f}) vs {n // 8}+ for per-step dpSGD")
+    print(f"\nregistered solvers: {', '.join(solvers.available())}")
+    print("swap the first argument of solvers.run() to compare any of them.")
 
 
 if __name__ == "__main__":

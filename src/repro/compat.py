@@ -1,0 +1,37 @@
+"""Version-compatibility shims for the jax API surface.
+
+The repo targets the modern `jax.shard_map` spelling (axis_names /
+check_vma); jax < 0.5 ships it as `jax.experimental.shard_map.shard_map`
+with the (auto / check_rep) spelling.  `shard_map` here accepts the
+modern keyword signature and lowers onto whichever the installed jax
+provides, so core/optim code stays version-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Optional, Set
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[Set[str]] = None,
+              check_vma: bool = True):
+    """`jax.shard_map` with graceful fallback to the pre-0.5 API.
+
+    axis_names: mesh axes the body is MANUAL over (None = all of them).
+    check_vma:  the varying-manual-axes consistency check (check_rep in
+                the old spelling).
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)

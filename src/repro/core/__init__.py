@@ -1,15 +1,26 @@
-"""Core pSCOPE library: the paper's contribution as composable JAX modules."""
+"""Core pSCOPE library: the paper's contribution as composable JAX modules.
+
+`core.solvers` is the uniform entry point: all ten solvers (pSCOPE +
+the nine Section-7.1 baselines) run through `solvers.run(...)` and
+return a `Trace` of streaming metrics.  The modules below are the
+building blocks it drives.
+"""
 from repro.core.prox import Regularizer, prox_l1, prox_elastic_net, soft_threshold
 from repro.core.objectives import LOGISTIC, LASSO, OBJECTIVES, Objective
 from repro.core.pscope import (PScopeConfig, PScopeState, pscope_outer_step,
                                run, run_distributed,
                                make_distributed_outer_step)
 from repro.core import partition, recovery, svrg
+from repro.core.partition import Partition, build_partition, make_partition
+from repro.core import solvers
+from repro.core.solvers import SolverConfig, SolverSpec, Trace
 
 __all__ = [
     "Regularizer", "prox_l1", "prox_elastic_net", "soft_threshold",
     "LOGISTIC", "LASSO", "OBJECTIVES", "Objective",
     "PScopeConfig", "PScopeState", "pscope_outer_step", "run",
     "run_distributed", "make_distributed_outer_step",
-    "partition", "recovery", "svrg",
+    "partition", "recovery", "svrg", "solvers",
+    "Partition", "build_partition", "make_partition",
+    "SolverConfig", "SolverSpec", "Trace",
 ]

@@ -1,6 +1,8 @@
 """Consensus ADMM for distributed composite minimization (DFAL-family).
 
-min (1/p) sum_k F_k(w_k) + R(v)   s.t.  w_k = v.
+Paper ref: Section 7.1 baseline "ADMM" (composite splitting):
+
+    min (1/p) sum_k F_k(w_k) + R(v)   s.t.  w_k = v.
 
 Worker step solves its prox-augmented local problem inexactly with a few
 gradient steps; the v-update is a prox of R; duals ascend.  One
@@ -20,7 +22,8 @@ Array = jax.Array
 
 def admm_history(obj, reg: Regularizer, Xp: Array, yp: Array, w0: Array,
                  rho: float = 1.0, outer_steps: int = 50,
-                 local_gd_steps: int = 20) -> Tuple[Array, List[float]]:
+                 local_gd_steps: int = 20, on_record=None
+                 ) -> Tuple[Array, List[float]]:
     p, n_k, d = Xp.shape
     Xflat = Xp.reshape(-1, d)
     yflat = yp.reshape(-1)
@@ -50,11 +53,19 @@ def admm_history(obj, reg: Regularizer, Xp: Array, yp: Array, w0: Array,
         lam = lam + wk - v_new
         return wk, lam, v_new
 
+    hist: List[float] = []
+
+    def emit(w):
+        val = float(obj_val(w))
+        hist.append(val)
+        if on_record is not None:
+            on_record(w, val)
+
     wk = jnp.tile(w0[None], (p, 1))
     lam = jnp.zeros_like(wk)
     v = w0
-    hist = [float(obj_val(v))]
+    emit(v)
     for _ in range(outer_steps):
         wk, lam, v = outer(wk, lam, v)
-        hist.append(float(obj_val(v)))
+        emit(v)
     return v, hist

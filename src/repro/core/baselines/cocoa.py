@@ -1,6 +1,8 @@
 """proxCoCoA+-style local-subproblem method (Smith et al. 2015).
 
-Feature-partitioned primal variant: worker k owns coordinate block B_k
+Paper ref: Section 7.1 baseline "CoCoA" (the L1 primal-dual framework
+of PAPERS.md).  Feature-partitioned primal variant: worker k owns
+coordinate block B_k
 and each round approximately solves the local quadratic-upper-bound
 subproblem
 
@@ -24,7 +26,8 @@ Array = jax.Array
 
 def cocoa_history(obj, reg: Regularizer, X: Array, y: Array, w0: Array,
                   p: int = 8, outer_steps: int = 60, local_steps: int = 10,
-                  record_every: int = 1) -> Tuple[Array, List[float]]:
+                  record_every: int = 1, on_record=None
+                  ) -> Tuple[Array, List[float]]:
     d = X.shape[1]
     bounds = np.linspace(0, d, p + 1).astype(int)
     masks = np.zeros((p, d), np.float32)
@@ -60,10 +63,18 @@ def cocoa_history(obj, reg: Regularizer, X: Array, y: Array, w0: Array,
         dws = jax.vmap(local)(masks)
         return w + jnp.sum(dws, axis=0)
 
+    hist: List[float] = []
+
+    def emit(w):
+        v = float(obj_val(w))
+        hist.append(v)
+        if on_record is not None:
+            on_record(w, v)
+
     w = w0
-    hist = [float(obj_val(w))]
+    emit(w)
     for i in range(outer_steps):
         w = outer(w)
         if (i + 1) % record_every == 0:
-            hist.append(float(obj_val(w)))
+            emit(w)
     return w, hist

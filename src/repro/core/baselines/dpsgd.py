@@ -1,6 +1,7 @@
 """Distributed proximal SGD (synchronous minibatch model).
 
-Every step: each of p workers samples a local microbatch, gradients are
+Paper ref: Section 7.1 baseline "dpSGD" [Li et al. 2016-style].  Every
+step: each of p workers samples a local microbatch, gradients are
 all-reduced (communication EVERY step — O(n/b) rounds per epoch, the
 paper's complaint about this family), then a global prox step.
 """
@@ -19,7 +20,8 @@ Array = jax.Array
 def dpsgd_history(obj, reg: Regularizer, Xp: Array, yp: Array, w0: Array,
                   eta0: float, steps: int, batch: int = 8,
                   record_every: int = 10, seed: int = 0,
-                  decay: float = 0.0) -> Tuple[Array, List[float]]:
+                  decay: float = 0.0, on_record=None
+                  ) -> Tuple[Array, List[float]]:
     """Xp: (p, n_k, d) worker-major data.  eta_t = eta0 / (1 + decay*t)."""
     p, n_k, _ = Xp.shape
     Xflat = Xp.reshape(-1, Xp.shape[-1])
@@ -38,10 +40,18 @@ def dpsgd_history(obj, reg: Regularizer, Xp: Array, yp: Array, w0: Array,
         eta = eta0 / (1.0 + decay * t)
         return reg.prox(w - eta * g, eta), key
 
+    hist: List[float] = []
+
+    def emit(w):
+        v = float(obj_val(w))
+        hist.append(v)
+        if on_record is not None:
+            on_record(w, v)
+
     w, key = w0, jax.random.PRNGKey(seed)
-    hist = [float(obj_val(w))]
+    emit(w)
     for t in range(steps):
         w, key = step_fn(w, key, jnp.asarray(t, jnp.float32))
         if (t + 1) % record_every == 0:
-            hist.append(float(obj_val(w)))
+            emit(w)
     return w, hist

@@ -1,9 +1,11 @@
 """Distributed minibatch proximal SVRG (AsyProx-SVRG's synchronous core).
 
-Outer epoch computes the full gradient once; every inner step samples a
-minibatch ACROSS all workers and all-reduces the VR gradient — i.e.
-communication every inner step (O(n) bytes per epoch), unlike pSCOPE's
-two rounds per epoch.  Same variance reduction, different schedule.
+Paper ref: Section 7.1 baseline "dpSVRG" [Meng et al. 2017 — the
+synchronous algorithmic core].  Outer epoch computes the full gradient
+once; every inner step samples a minibatch ACROSS all workers and
+all-reduces the VR gradient — i.e. communication every inner step
+(O(n) bytes per epoch), unlike pSCOPE's two rounds per epoch.  Same
+variance reduction as Algorithm 1, different communication schedule.
 """
 from __future__ import annotations
 
@@ -20,7 +22,8 @@ Array = jax.Array
 
 def dpsvrg_history(obj, reg: Regularizer, Xp: Array, yp: Array, w0: Array,
                    eta: float, inner_steps: int, outer_steps: int,
-                   batch: int = 8, seed: int = 0) -> Tuple[Array, List[float]]:
+                   batch: int = 8, seed: int = 0,
+                   on_record=None) -> Tuple[Array, List[float]]:
     p, n_k, _ = Xp.shape
     Xflat = Xp.reshape(-1, Xp.shape[-1])
     yflat = yp.reshape(-1)
@@ -45,9 +48,17 @@ def dpsvrg_history(obj, reg: Regularizer, Xp: Array, yp: Array, w0: Array,
         u, _ = jax.lax.scan(step, w_t, idx)
         return u, key
 
+    hist: List[float] = []
+
+    def emit(w):
+        v = float(obj_val(w))
+        hist.append(v)
+        if on_record is not None:
+            on_record(w, v)
+
     w, key = w0, jax.random.PRNGKey(seed)
-    hist = [float(obj_val(w))]
+    emit(w)
     for _ in range(outer_steps):
         w, key = epoch(w, key)
-        hist.append(float(obj_val(w)))
+        emit(w)
     return w, hist

@@ -1,11 +1,14 @@
 """FISTA (Beck & Teboulle 2009) for composite minimization.
 
-Used both as a paper baseline and as the inner solver for the
-local-objective minimizations in core/partition.py.
+Paper ref: Section 7.1 baseline "FISTA"; the distributed variant
+computes the gradient distributively (one all-reduce per iteration),
+which is mathematically identical to this serial iteration.  Also used
+as the inner solver for the local-objective minimizations of eq. (6) in
+core/partition.py.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,9 +38,13 @@ def fista(smooth_loss: Callable[[Array], Array], reg: Regularizer,
 
 
 def fista_history(obj, reg: Regularizer, X: Array, y: Array, w0: Array,
-                  iters: int = 100, record_every: int = 1
-                  ) -> Tuple[Array, List[float]]:
-    """FISTA with objective history (one entry per iteration block)."""
+                  iters: int = 100, record_every: int = 1,
+                  on_record=None) -> Tuple[Array, List[float]]:
+    """FISTA with objective history (one entry per iteration block).
+
+    `on_record(w, value)` fires at every history append (streaming hook
+    for the `core.solvers.Trace` recorder).
+    """
     L = obj.lipschitz(X) + reg.lam1
 
     def smooth_loss(w):
@@ -48,8 +55,16 @@ def fista_history(obj, reg: Regularizer, X: Array, y: Array, w0: Array,
     grad = jax.jit(jax.grad(smooth_loss))
     obj_val = jax.jit(lambda w: obj.loss(w, X, y) + reg.value(w))
 
+    hist: List[float] = []
+
+    def emit(w):
+        v = float(obj_val(w))
+        hist.append(v)
+        if on_record is not None:
+            on_record(w, v)
+
     w, v, t = w0, w0, 1.0
-    hist = [float(obj_val(w))]
+    emit(w)
     for i in range(iters):
         g = grad(v)
         w_next = reg_l1.prox(v - eta * g, eta)
@@ -57,5 +72,5 @@ def fista_history(obj, reg: Regularizer, X: Array, y: Array, w0: Array,
         v = w_next + ((t - 1.0) / t_next) * (w_next - w)
         w, t = w_next, t_next
         if (i + 1) % record_every == 0:
-            hist.append(float(obj_val(w)))
+            emit(w)
     return w, hist

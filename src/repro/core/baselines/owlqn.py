@@ -1,5 +1,6 @@
 """mOWL-QN: orthant-wise limited-memory quasi-Newton for L1 (Gong & Ye 15).
 
+Paper ref: Section 7.1 baseline "mOWL-QN".
 L-BFGS two-loop recursion on the smooth part (loss + L2), with:
   * pseudo-gradient handling the L1 subdifferential,
   * direction sign-alignment with the pseudo-gradient,
@@ -35,7 +36,8 @@ def _pseudo_gradient(w, g_smooth, lam2):
 
 def owlqn_history(obj, reg: Regularizer, X: Array, y: Array, w0: Array,
                   iters: int = 100, mem: int = 10,
-                  record_every: int = 1) -> Tuple[Array, List[float]]:
+                  record_every: int = 1, on_record=None
+                  ) -> Tuple[Array, List[float]]:
     lam2 = reg.lam2
 
     def smooth(w):
@@ -47,10 +49,19 @@ def owlqn_history(obj, reg: Regularizer, X: Array, y: Array, w0: Array,
     s_hist: deque = deque(maxlen=mem)
     y_hist: deque = deque(maxlen=mem)
 
+    hist: list = []
+
+    def emit(w_np):
+        w32 = jnp.asarray(w_np, jnp.float32)
+        v = float(obj_val(w32))
+        hist.append(v)
+        if on_record is not None:
+            on_record(w32, v)
+
     w = np.asarray(w0, dtype=np.float64)
     _, g = smooth_val_grad(jnp.asarray(w, jnp.float32))
     g = np.asarray(g, np.float64)
-    hist = [float(obj_val(jnp.asarray(w, jnp.float32)))]
+    emit(w)
 
     for it in range(iters):
         pg = np.asarray(_pseudo_gradient(
@@ -103,5 +114,5 @@ def owlqn_history(obj, reg: Regularizer, X: Array, y: Array, w0: Array,
             y_hist.append(y_vec)
         w, g = w_new, g_new
         if (it + 1) % record_every == 0:
-            hist.append(float(obj_val(jnp.asarray(w, jnp.float32))))
+            emit(w)
     return jnp.asarray(w, jnp.float32), hist

@@ -1,4 +1,9 @@
-"""Proximal gradient descent (eq. 2 of the paper)."""
+"""Proximal gradient descent — eq. (2) of the paper.
+
+Paper ref: the prox-GD iteration w <- prox_{eta R}(w - eta grad F(w))
+that pSCOPE's Theorem 2 is benchmarked against; the distributed variant
+all-reduces the gradient once per iteration.
+"""
 from __future__ import annotations
 
 from typing import List, Tuple
@@ -12,8 +17,8 @@ Array = jax.Array
 
 
 def pgd_history(obj, reg: Regularizer, X: Array, y: Array, w0: Array,
-                iters: int = 100, record_every: int = 1
-                ) -> Tuple[Array, List[float]]:
+                iters: int = 100, record_every: int = 1,
+                on_record=None) -> Tuple[Array, List[float]]:
     L = obj.lipschitz(X) + reg.lam1
     eta = 1.0 / L
 
@@ -24,10 +29,18 @@ def pgd_history(obj, reg: Regularizer, X: Array, y: Array, w0: Array,
     grad = jax.jit(jax.grad(smooth_loss))
     obj_val = jax.jit(lambda w: obj.loss(w, X, y) + reg.value(w))
 
+    hist: List[float] = []
+
+    def emit(w):
+        v = float(obj_val(w))
+        hist.append(v)
+        if on_record is not None:
+            on_record(w, v)
+
     w = w0
-    hist = [float(obj_val(w))]
+    emit(w)
     for i in range(iters):
         w = reg_l1.prox(w - eta * grad(w), eta)
         if (i + 1) % record_every == 0:
-            hist.append(float(obj_val(w)))
+            emit(w)
     return w, hist

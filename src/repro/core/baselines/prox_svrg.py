@@ -1,7 +1,9 @@
 """Serial proximal SVRG (Xiao & Zhang 2014).
 
-pSCOPE with p = 1 degenerates to this method (Corollary 2); the test
-suite asserts exact trajectory equality between the two code paths.
+Paper ref: Corollary 2 — pSCOPE with p = 1 degenerates to exactly this
+method; the test suite asserts trajectory equality between the two code
+paths.  Each epoch: one full gradient (the anchor z), then `inner_steps`
+variance-reduced prox steps (eq. 4/5 of the paper's inner iteration).
 """
 from __future__ import annotations
 
@@ -18,8 +20,8 @@ Array = jax.Array
 
 def prox_svrg_history(obj, reg: Regularizer, X: Array, y: Array, w0: Array,
                       eta: float, inner_steps: int, outer_steps: int,
-                      inner_batch: int = 1, seed: int = 0
-                      ) -> Tuple[Array, List[float]]:
+                      inner_batch: int = 1, seed: int = 0,
+                      on_record=None) -> Tuple[Array, List[float]]:
     n = X.shape[0]
     obj_val = jax.jit(lambda w: obj.loss(w, X, y) + reg.value(w))
     grad_full = jax.jit(lambda w: jax.grad(obj.loss_fn)(w, X, y))
@@ -39,9 +41,17 @@ def prox_svrg_history(obj, reg: Regularizer, X: Array, y: Array, w0: Array,
         u, _ = jax.lax.scan(step, w_t, idx)
         return u, key
 
+    hist: List[float] = []
+
+    def emit(w):
+        v = float(obj_val(w))
+        hist.append(v)
+        if on_record is not None:
+            on_record(w, v)
+
     w, key = w0, jax.random.PRNGKey(seed)
-    hist = [float(obj_val(w))]
+    emit(w)
     for _ in range(outer_steps):
         w, key = epoch(w, key)
-        hist.append(float(obj_val(w)))
+        emit(w)
     return w, hist

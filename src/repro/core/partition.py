@@ -2,8 +2,13 @@
 
 Builders return index arrays of shape (p, n_k) selecting each worker's
 shard; `stack_partition` materializes (p, n_k, d) worker-major data.
+`Partition` bundles the flat data, the index array, and the stacked
+worker-major views under a scheme name — it is the partition argument
+every solver in the `core.solvers` registry consumes.  Named schemes
+live in `PARTITION_SCHEMES` (build via `build_partition`), so adding a
+partition scenario to every benchmark is a one-entry change here.
 
-Metrics:
+Metrics (see docs/partition_theory.md for the symbol-by-symbol map):
   * `local_global_gap(a)` — Definition 4:
         l_pi(a) = P(w*) - (1/p) sum_k min_w P_k(w; a),
     where P_k(w; a) = F_k(w) + (grad F(a) - grad F_k(a))^T w + R(w) is
@@ -16,7 +21,8 @@ Metrics:
 """
 from __future__ import annotations
 
-from typing import Tuple
+import dataclasses
+from typing import Callable, Dict, Tuple
 
 import numpy as np
 import jax
@@ -78,6 +84,74 @@ def stack_partition(X, y, idx: np.ndarray) -> Tuple[Array, Array]:
     X = jnp.asarray(X)
     y = jnp.asarray(y)
     return X[idx], y[idx]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Partition:
+    """A dataset split across p workers — the `partition` argument of
+    `core.solvers.run`.
+
+    eq=False: identity comparison only — auto-generated __eq__/__hash__
+    would raise on the array fields.
+
+    Holds both views of the data: flat (n, d) for serial/feature-split
+    solvers, worker-major (p, n_k, d) for instance-distributed solvers,
+    plus the (p, n_k) index array that produced the split.
+    """
+
+    name: str
+    idx: np.ndarray          # (p, n_k): row k lists worker k's instances
+    X: Array                 # flat (n, d)
+    y: Array                 # flat (n,)
+    Xp: Array                # worker-major (p, n_k, d)
+    yp: Array                # worker-major (p, n_k)
+
+    @property
+    def p(self) -> int:
+        return int(self.idx.shape[0])
+
+    @property
+    def n_k(self) -> int:
+        return int(self.idx.shape[1])
+
+    @property
+    def n(self) -> int:
+        return int(self.X.shape[0])
+
+    @property
+    def d(self) -> int:
+        return int(self.X.shape[1])
+
+
+def make_partition(X, y, idx: np.ndarray, name: str = "custom") -> Partition:
+    """Bundle (X, y) and a (p, n_k) index array into a Partition."""
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    Xp, yp = stack_partition(X, y, idx)
+    return Partition(name=name, idx=np.asarray(idx), X=X, y=y, Xp=Xp, yp=yp)
+
+
+# Named schemes: scheme(X, y, p, seed) -> (p, n_k) index array.  These are
+# the paper's four Section-7.4 partitions; registering a new scheme here
+# makes it sweepable by every benchmark and example.
+PARTITION_SCHEMES: Dict[str, Callable] = {
+    "replicated": lambda X, y, p, seed: replicated_partition(len(y), p),
+    "uniform": lambda X, y, p, seed: uniform_partition(
+        jax.random.PRNGKey(seed), len(y), p),
+    "skew75": lambda X, y, p, seed: label_skew_partition(
+        np.asarray(y), p, 0.75),
+    "split": lambda X, y, p, seed: label_skew_partition(
+        np.asarray(y), p, 1.0),
+}
+
+
+def build_partition(scheme: str, X, y, p: int, seed: int = 0) -> Partition:
+    """Build a named partition scheme (see PARTITION_SCHEMES)."""
+    if scheme not in PARTITION_SCHEMES:
+        raise KeyError(f"unknown partition scheme {scheme!r}; "
+                       f"available: {sorted(PARTITION_SCHEMES)}")
+    idx = PARTITION_SCHEMES[scheme](X, y, p, seed)
+    return make_partition(X, y, idx, name=scheme)
 
 
 # ---------------------------------------------------------------------------

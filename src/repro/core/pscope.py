@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import svrg
 from repro.core.prox import Regularizer
 from repro.core.objectives import Objective
@@ -128,19 +129,34 @@ def pscope_outer_step(obj: Objective, reg: Regularizer, cfg: PScopeConfig,
 
 def run(obj: Objective, reg: Regularizer, Xp: Array, yp: Array, w0: Array,
         cfg: PScopeConfig, record_every: int = 1,
-        participation_schedule: Optional[Callable[[int], Array]] = None):
-    """Full pSCOPE driver. Returns (w_T, history of P(w_t))."""
+        participation_schedule: Optional[Callable[[int], Array]] = None,
+        on_record: Optional[Callable[[Array, float], None]] = None):
+    """Full pSCOPE driver. Returns (w_T, history of P(w_t)).
+
+    `on_record(w, value)` fires at every history append (including the
+    initial iterate) so callers — e.g. the `core.solvers.Trace`
+    recorder — can stream wall-clock/NNZ/communication metrics without
+    re-running the objective.
+    """
     state = init_state(w0, cfg.seed)
     Xflat = Xp.reshape(-1, Xp.shape[-1])
     yflat = yp.reshape(-1)
     obj_val = jax.jit(lambda w: obj.loss(w, Xflat, yflat) + reg.value(w))
-    history = [float(obj_val(state.w))]
+
+    def emit(w, history):
+        v = float(obj_val(w))
+        history.append(v)
+        if on_record is not None:
+            on_record(w, v)
+
+    history: list = []
+    emit(state.w, history)
     for t in range(cfg.outer_steps):
         part = (participation_schedule(t)
                 if participation_schedule is not None else None)
         state = pscope_outer_step(obj, reg, cfg, state, Xp, yp, part)
         if (t + 1) % record_every == 0:
-            history.append(float(obj_val(state.w)))
+            emit(state.w, history)
     return state.w, history
 
 
@@ -174,7 +190,7 @@ def make_distributed_outer_step(obj: Objective, reg: Regularizer,
         # phase 3: one all-reduce to average iterates
         return jax.lax.pmean(u, axis)
 
-    shard_body = jax.shard_map(
+    shard_body = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(), P(axis), P(axis)),
         out_specs=P(),
@@ -195,13 +211,22 @@ def make_distributed_outer_step(obj: Objective, reg: Regularizer,
 
 def run_distributed(obj: Objective, reg: Regularizer, X: Array, y: Array,
                     w0: Array, cfg: PScopeConfig, mesh, axis: str = "data",
-                    record_every: int = 1):
+                    record_every: int = 1,
+                    on_record: Optional[Callable[[Array, float], None]] = None):
     step = make_distributed_outer_step(obj, reg, cfg, mesh, axis)
     state = init_state(w0, cfg.seed)
     obj_val = jax.jit(lambda w: obj.loss(w, X, y) + reg.value(w))
-    history = [float(obj_val(state.w))]
+
+    def emit(w, history):
+        v = float(obj_val(w))
+        history.append(v)
+        if on_record is not None:
+            on_record(w, v)
+
+    history: list = []
+    emit(state.w, history)
     for t in range(cfg.outer_steps):
         state = step(state, X, y)
         if (t + 1) % record_every == 0:
-            history.append(float(obj_val(state.w)))
+            emit(state.w, history)
     return state.w, history

@@ -1,0 +1,439 @@
+"""Unified solver registry and the traced CALL benchmark harness.
+
+The paper's headline comparison (Section 7, Figure 1 / Table 2) pits
+pSCOPE — Algorithm 1 under the cooperative autonomous local learning
+(CALL) framework — against nine baselines.  This module gives all ten a
+single instrumented entry point:
+
+    trace = solvers.run("pscope", objective, regularizer, partition)
+
+Every solver is described by a `SolverSpec` (registered via
+`@register`) whose adapter maps the shared `SolverConfig` onto the
+solver's native signature, and every run returns a `Trace`: a streaming
+metrics recorder capturing, at each recorded round,
+
+  * the composite objective P(w_t) = F(w_t) + R(w_t),
+  * the iterate's NNZ (L1 sparsity, the paper's Section 7.3 metric),
+  * cumulative communication rounds (the CALL framework's currency —
+    pSCOPE pays 2 all-reduces per outer round, eq. after Algorithm 1,
+    vs per-step all-reduces for the dpSGD/dpSVRG family),
+  * cumulative wall-clock seconds,
+
+plus, on request, the partition-goodness estimate gamma(pi; eps) of
+Definition 5 (via `core.partition.gamma_estimate`).  Training loops,
+the benchmark figures, and the dry-run grid all consume the same Trace,
+so adding a solver (one `@register` block here) or a partition scenario
+(one entry in `core.partition.PARTITION_SCHEMES`) immediately shows up
+everywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import pscope
+from repro.core.baselines import (admm_history, cocoa_history, dbcd_history,
+                                  dpsgd_history, dpsvrg_history,
+                                  fista_history, owlqn_history, pgd_history,
+                                  prox_svrg_history)
+from repro.core.objectives import Objective
+from repro.core.partition import Partition, gamma_estimate
+from repro.core.prox import Regularizer
+
+Array = jax.Array
+
+NNZ_TOL = 1e-8   # |w_i| above this counts as a nonzero (Section 7.3)
+
+
+# ---------------------------------------------------------------------------
+# Trace: the streaming metrics recorder
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Trace:
+    """Streaming per-round metrics of one solver run.
+
+    All lists are index-aligned; entry 0 is the initial iterate (zero
+    communication, ~zero seconds).  `comm` and `seconds` are cumulative.
+    """
+
+    solver: str
+    objective: str
+    partition: str
+    p: int                     # number of workers
+    d: int                     # dimensionality
+    values: List[float] = dataclasses.field(default_factory=list)
+    nnz: List[int] = dataclasses.field(default_factory=list)
+    comm: List[float] = dataclasses.field(default_factory=list)
+    seconds: List[float] = dataclasses.field(default_factory=list)
+    gamma: Optional[float] = None     # Definition 5 estimate, if requested
+    w_final: Optional[Array] = None
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    _t0: Optional[float] = dataclasses.field(default=None, repr=False)
+
+    # -- recording --------------------------------------------------------
+    def start(self) -> "Trace":
+        self._t0 = time.perf_counter()
+        return self
+
+    def record(self, w, value: float, comm_increment: float = 0.0) -> None:
+        """Append one round: iterate w (array or pytree — the DL train
+        loop passes whole param trees), objective value, communication
+        rounds spent since the previous record."""
+        if self._t0 is None:
+            self.start()
+        self.values.append(float(value))
+        self.nnz.append(sum(int(jnp.sum(jnp.abs(leaf) > NNZ_TOL))
+                            for leaf in jax.tree_util.tree_leaves(w)))
+        prev = self.comm[-1] if self.comm else 0.0
+        self.comm.append(prev + float(comm_increment))
+        self.seconds.append(time.perf_counter() - self._t0)
+
+    def recorder(self, comm_per_record: float) -> Callable[[Array, float], None]:
+        """An `on_record(w, value)` callback charging `comm_per_record`
+        communication rounds to every record after the first."""
+
+        def cb(w: Array, value: float) -> None:
+            inc = comm_per_record if self.values else 0.0
+            self.record(w, value, inc)
+
+        return cb
+
+    # -- derived metrics --------------------------------------------------
+    @property
+    def rounds(self) -> int:
+        return max(len(self.values) - 1, 0)
+
+    @property
+    def final_value(self) -> float:
+        return self.values[-1]
+
+    def gap(self, p_star: float) -> float:
+        """Final suboptimality P(w_T) - P*."""
+        return self.final_value - p_star
+
+    def suboptimality(self, p_star: float) -> List[float]:
+        return [v - p_star for v in self.values]
+
+    def time_to(self, p_star: float, eps: float = 1e-3) -> float:
+        """First wall-clock second at which P(w) - P* <= eps (inf if never)."""
+        for v, t in zip(self.values, self.seconds):
+            if v - p_star <= eps:
+                return t
+        return float("inf")
+
+    def rounds_to(self, p_star: float, eps: float = 1e-3) -> Optional[int]:
+        for i, v in enumerate(self.values):
+            if v - p_star <= eps:
+                return i
+        return None
+
+    def comm_to(self, p_star: float, eps: float = 1e-3) -> float:
+        """Communication rounds spent to reach eps-suboptimality."""
+        for v, c in zip(self.values, self.comm):
+            if v - p_star <= eps:
+                return c
+        return float("inf")
+
+    def validate(self) -> "Trace":
+        """Raise ValueError if the trace is malformed."""
+        n = len(self.values)
+        if n < 1:
+            raise ValueError("empty trace: no rounds recorded")
+        if not (len(self.nnz) == len(self.comm) == len(self.seconds) == n):
+            raise ValueError(
+                f"misaligned trace: values={n} nnz={len(self.nnz)} "
+                f"comm={len(self.comm)} seconds={len(self.seconds)}")
+        if not np.isfinite(self.values[0]):
+            raise ValueError(f"non-finite initial objective {self.values[0]}")
+        if any(b < a - 1e-9 for a, b in zip(self.comm, self.comm[1:])):
+            raise ValueError("communication counter decreased")
+        if any(b < a - 1e-6 for a, b in zip(self.seconds, self.seconds[1:])):
+            raise ValueError("wall clock decreased")
+        return self
+
+
+# ---------------------------------------------------------------------------
+# SolverConfig: the one knob-set every adapter understands
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Shared solver configuration.
+
+    rounds        recorded rounds (outer epochs for the SVRG family,
+                  iteration blocks of `record_every` for per-step methods)
+    record_every  native iterations between records (per-step methods)
+    eta           step size; None picks a 1/(2L) default from the data
+    inner_epochs  local epochs per outer round (SVRG-family inner M)
+    batch         minibatch size for the stochastic methods
+    extras        solver-specific overrides, e.g. {"rho": 2.0} for ADMM;
+                  unknown keys are ignored by other solvers
+    """
+
+    rounds: int = 20
+    record_every: int = 1
+    eta: Optional[float] = None
+    inner_epochs: float = 2.0
+    batch: int = 8
+    seed: int = 0
+    estimate_gamma: bool = False
+    gamma_samples: int = 4
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def with_(self, **kw) -> "SolverConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def _default_eta(obj: Objective, reg: Regularizer, part: Partition,
+                 cfg: SolverConfig) -> float:
+    """eta = 1/(2(L + lam1)) from the smoothness bound when unset
+    (Corollary 1 scale; benchmarks override per figure)."""
+    if cfg.eta is not None:
+        return cfg.eta
+    L = obj.lipschitz(part.X) + reg.lam1
+    return 1.0 / (2.0 * L)
+
+
+def _w0(part: Partition, cfg: SolverConfig) -> Array:
+    w0 = cfg.extras.get("w0")
+    return jnp.zeros(part.d) if w0 is None else jnp.asarray(w0)
+
+
+# ---------------------------------------------------------------------------
+# SolverSpec registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SolverSpec:
+    """One solver behind the uniform run() interface.
+
+    `run_fn(obj, reg, part, cfg, trace)` drives the native implementation,
+    streams records into `trace`, and returns the final iterate.
+    """
+
+    name: str
+    summary: str
+    paper_ref: str             # which equation/algorithm it implements
+    distributed: bool          # consumes worker-major (p, n_k, d) shards
+    comm_model: str            # human-readable communication cost
+    run_fn: Callable[[Objective, Regularizer, Partition, SolverConfig,
+                      Trace], Array]
+
+
+_REGISTRY: Dict[str, SolverSpec] = {}
+
+
+def register(name: str, *, summary: str, paper_ref: str, distributed: bool,
+             comm_model: str) -> Callable:
+    """Decorator registering an adapter under `name`."""
+
+    def deco(fn: Callable) -> Callable:
+        if name in _REGISTRY:
+            raise ValueError(f"solver {name!r} already registered")
+        _REGISTRY[name] = SolverSpec(name=name, summary=summary,
+                                     paper_ref=paper_ref,
+                                     distributed=distributed,
+                                     comm_model=comm_model, run_fn=fn)
+        return fn
+
+    return deco
+
+
+def get(name: str) -> SolverSpec:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown solver {name!r}; "
+                       f"available: {available()}")
+    return _REGISTRY[name]
+
+
+def available() -> Tuple[str, ...]:
+    """Registered solver names, pSCOPE first, then insertion order."""
+    return tuple(_REGISTRY)
+
+
+def run(solver: str, obj: Objective, reg: Regularizer, part: Partition,
+        config: Optional[SolverConfig] = None) -> Trace:
+    """The uniform entry point: run `solver` on (obj, reg, part).
+
+    Returns a validated `Trace`; `trace.w_final` holds the last iterate.
+    """
+    spec = get(solver)
+    cfg = config if config is not None else SolverConfig()
+    trace = Trace(solver=spec.name, objective=obj.name, partition=part.name,
+                  p=part.p, d=part.d)
+    trace.start()
+    trace.w_final = spec.run_fn(obj, reg, part, cfg, trace)
+    if cfg.estimate_gamma:
+        trace.gamma = estimate_partition_gamma(
+            obj, reg, part, num_samples=cfg.gamma_samples, seed=cfg.seed)
+    return trace.validate()
+
+
+def estimate_partition_gamma(obj: Objective, reg: Regularizer,
+                             part: Partition, num_samples: int = 4,
+                             eps: float = 1e-3, seed: int = 0,
+                             fista_iters: int = 2000,
+                             inner_iters: int = 200) -> float:
+    """gamma(pi; eps) of Definition 5 for `part`, solving for w* with
+    FISTA first (see docs/partition_theory.md)."""
+    w_star, fh = fista_history(obj, reg, part.X, part.y, jnp.zeros(part.d),
+                               iters=fista_iters, record_every=fista_iters)
+    return gamma_estimate(obj, reg, part.Xp, part.yp, w_star, fh[-1],
+                          eps=eps, num_samples=num_samples, seed=seed,
+                          iters=inner_iters)
+
+
+# ---------------------------------------------------------------------------
+# Adapters: pSCOPE + the nine Section-7.1 baselines
+# ---------------------------------------------------------------------------
+
+@register("pscope",
+          summary="proximal SCOPE under the CALL framework (this paper)",
+          paper_ref="Algorithm 1; Theorems 1-2",
+          distributed=True,
+          comm_model="2 all-reduces per outer round")
+def _run_pscope(obj, reg, part, cfg, trace):
+    inner = cfg.extras.get(
+        "inner_steps", max(1, int(cfg.inner_epochs * part.n_k)))
+    pcfg = pscope.PScopeConfig(
+        eta=_default_eta(obj, reg, part, cfg), inner_steps=inner,
+        inner_batch=cfg.extras.get("inner_batch", 1),
+        outer_steps=cfg.rounds, seed=cfg.seed)
+    w, _ = pscope.run(obj, reg, part.Xp, part.yp, _w0(part, cfg), pcfg,
+                      on_record=trace.recorder(2.0))
+    return w
+
+
+@register("fista",
+          summary="accelerated proximal gradient (Beck & Teboulle 2009)",
+          paper_ref="Section 7.1 baseline; distributed gradient variant",
+          distributed=False,
+          comm_model="1 all-reduce per iteration")
+def _run_fista(obj, reg, part, cfg, trace):
+    w, _ = fista_history(obj, reg, part.X, part.y, _w0(part, cfg),
+                         iters=cfg.rounds * cfg.record_every,
+                         record_every=cfg.record_every,
+                         on_record=trace.recorder(float(cfg.record_every)))
+    return w
+
+
+@register("pgd",
+          summary="proximal gradient descent",
+          paper_ref="eq. (2)",
+          distributed=False,
+          comm_model="1 all-reduce per iteration")
+def _run_pgd(obj, reg, part, cfg, trace):
+    w, _ = pgd_history(obj, reg, part.X, part.y, _w0(part, cfg),
+                       iters=cfg.rounds * cfg.record_every,
+                       record_every=cfg.record_every,
+                       on_record=trace.recorder(float(cfg.record_every)))
+    return w
+
+
+@register("prox_svrg",
+          summary="serial proximal SVRG (Xiao & Zhang 2014)",
+          paper_ref="Corollary 2 (pSCOPE with p = 1)",
+          distributed=False,
+          comm_model="none (serial)")
+def _run_prox_svrg(obj, reg, part, cfg, trace):
+    inner = cfg.extras.get(
+        "inner_steps", max(1, int(cfg.inner_epochs * part.n)))
+    w, _ = prox_svrg_history(obj, reg, part.X, part.y, _w0(part, cfg),
+                             eta=_default_eta(obj, reg, part, cfg),
+                             inner_steps=inner, outer_steps=cfg.rounds,
+                             inner_batch=cfg.extras.get("inner_batch", 1),
+                             seed=cfg.seed, on_record=trace.recorder(0.0))
+    return w
+
+
+@register("dpsgd",
+          summary="distributed minibatch proximal SGD",
+          paper_ref="Section 7.1 baseline (Li et al. 2016-style)",
+          distributed=True,
+          comm_model="1 all-reduce per step")
+def _run_dpsgd(obj, reg, part, cfg, trace):
+    w, _ = dpsgd_history(obj, reg, part.Xp, part.yp, _w0(part, cfg),
+                         eta0=_default_eta(obj, reg, part, cfg),
+                         steps=cfg.rounds * cfg.record_every,
+                         batch=cfg.batch, record_every=cfg.record_every,
+                         seed=cfg.seed, decay=cfg.extras.get("decay", 0.0),
+                         on_record=trace.recorder(float(cfg.record_every)))
+    return w
+
+
+@register("dpsvrg",
+          summary="distributed minibatch proximal SVRG (AsyProx-SVRG core)",
+          paper_ref="Section 7.1 baseline (Meng et al. 2017, synchronous)",
+          distributed=True,
+          comm_model="1 all-reduce per inner step (+1 per epoch)")
+def _run_dpsvrg(obj, reg, part, cfg, trace):
+    inner = cfg.extras.get(
+        "inner_steps",
+        max(1, int(cfg.inner_epochs * part.n_k / max(cfg.batch, 1))))
+    w, _ = dpsvrg_history(obj, reg, part.Xp, part.yp, _w0(part, cfg),
+                          eta=_default_eta(obj, reg, part, cfg),
+                          inner_steps=inner, outer_steps=cfg.rounds,
+                          batch=cfg.batch, seed=cfg.seed,
+                          on_record=trace.recorder(float(inner + 1)))
+    return w
+
+
+@register("admm",
+          summary="consensus ADMM with inexact local solves",
+          paper_ref="Section 7.1 baseline (DFAL-family splitting)",
+          distributed=True,
+          comm_model="1 gather per outer iteration")
+def _run_admm(obj, reg, part, cfg, trace):
+    w, _ = admm_history(obj, reg, part.Xp, part.yp, _w0(part, cfg),
+                        rho=cfg.extras.get("rho", 1.0),
+                        outer_steps=cfg.rounds,
+                        local_gd_steps=cfg.extras.get("local_gd_steps", 20),
+                        on_record=trace.recorder(1.0))
+    return w
+
+
+@register("owlqn",
+          summary="orthant-wise L-BFGS for L1 (mOWL-QN, Gong & Ye 2015)",
+          paper_ref="Section 7.1 baseline; distributed gradient variant",
+          distributed=False,
+          comm_model="1 all-reduce per iteration (+ line-search evals)")
+def _run_owlqn(obj, reg, part, cfg, trace):
+    w, _ = owlqn_history(obj, reg, part.X, part.y, _w0(part, cfg),
+                         iters=cfg.rounds * cfg.record_every,
+                         mem=cfg.extras.get("mem", 10),
+                         record_every=cfg.record_every,
+                         on_record=trace.recorder(float(cfg.record_every)))
+    return w
+
+
+@register("dbcd",
+          summary="distributed block coordinate descent (Mahajan et al.)",
+          paper_ref="Section 7.1 baseline; Table 2 timing comparison",
+          distributed=False,
+          comm_model="1 prediction sync (O(n)) per round")
+def _run_dbcd(obj, reg, part, cfg, trace):
+    w, _ = dbcd_history(obj, reg, part.X, part.y, _w0(part, cfg),
+                        p=part.p, outer_steps=cfg.rounds * cfg.record_every,
+                        record_every=cfg.record_every,
+                        on_record=trace.recorder(float(cfg.record_every)))
+    return w
+
+
+@register("cocoa",
+          summary="proxCoCoA+-style local-subproblem method (Smith et al.)",
+          paper_ref="Section 7.1 baseline; CoCoA L1 framework of PAPERS.md",
+          distributed=False,
+          comm_model="1 delta-w all-reduce per round")
+def _run_cocoa(obj, reg, part, cfg, trace):
+    w, _ = cocoa_history(obj, reg, part.X, part.y, _w0(part, cfg),
+                         p=part.p, outer_steps=cfg.rounds * cfg.record_every,
+                         local_steps=cfg.extras.get("local_steps", 10),
+                         record_every=cfg.record_every,
+                         on_record=trace.recorder(float(cfg.record_every)))
+    return w

@@ -10,7 +10,9 @@ Responsibilities:
     deadline is excluded from the phase-3 average (partial
     participation) — simulated via the participation mask plumbed into
     core.pscope; the DL step inherits robustness from pmean semantics,
-  * jsonl metrics log.
+  * jsonl metrics log, plus optional streaming into a
+    `core.solvers.Trace` so training shares the benchmark harness's
+    metrics recorder (loss, NNZ of the param tree, wall clock).
 """
 from __future__ import annotations
 
@@ -62,12 +64,15 @@ def run_training(train_step: Callable, init_state: Callable,
                  batch_fn: Callable[[int], Dict[str, Any]],
                  cfg: LoopConfig,
                  failure_hook: Optional[Callable[[int], None]] = None,
-                 shardings=None) -> Dict[str, Any]:
+                 shardings=None, trace=None) -> Dict[str, Any]:
     """Generic loop.
 
     train_step(state_dict, batch, step) -> (state_dict, metrics)
     init_state() -> state_dict (params/opt/...; only called cold)
     batch_fn(step) -> batch (numpy/jax arrays)
+    trace: optional `core.solvers.Trace`; per step it records the param
+    tree and the step's loss (comm charged from metrics["comm_rounds"]
+    when the step reports it, e.g. 2.0 for the pSCOPE DL step).
 
     Returns the final state dict.  Restartable: calling run_training
     again resumes from the newest checkpoint.
@@ -93,6 +98,11 @@ def run_training(train_step: Callable, init_state: Callable,
         metrics = dict(metrics)
         metrics["step_time_s"] = time.time() - t0
         log.write(step, metrics)
+        if trace is not None:
+            w = (state.get("params", state) if isinstance(state, dict)
+                 else state)
+            trace.record(w, float(metrics.get("loss", float("nan"))),
+                         float(metrics.get("comm_rounds", 0.0)))
         step += 1
         if step % cfg.checkpoint_every == 0 or step == cfg.total_steps:
             ckpt.save(step, state, {"wall": time.time()})

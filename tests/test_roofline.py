@@ -22,7 +22,11 @@ def test_scan_flops_scaled_by_trip_count():
     want = 2 * 128 * 128 * 128 * 9
     assert abs(costs.flops - want) / want < 0.01
     # sanity: the raw body-once number from XLA is ~9x smaller
-    assert float(c.cost_analysis()["flops"]) < costs.flops / 4
+    # (cost_analysis() returns a per-device list on jax < 0.5)
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    assert float(ca["flops"]) < costs.flops / 4
 
 
 def test_unrolled_matches_scan_totals():
