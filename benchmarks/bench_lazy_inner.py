@@ -1,0 +1,117 @@
+"""Dense vs lazy inner-epoch sweep — the tentpole perf measurement.
+
+One inner epoch = M prox-SVRG steps on a single worker shard.  The
+dense engine pays O(M * d) elementwise traffic regardless of data
+sparsity; the lazy engine pays O(M * b * nnz) plus one O(d) Lemma-11
+catch-up.  The sweep crosses d in {2^14, 2^16, 2^18} with density in
+{1%, 0.1%} (the rcv1 -> kdd regime of Table 1) and reports wall-clock
+us_per_call plus an analytic bytes-moved model for each path, so the
+roofline crossover (see docs/kernels.md) is visible in the CSV.
+
+Rows are named ``inner_loop/{path}/d{d}/rho{density}`` — the names the
+``--json`` flag of benchmarks/run.py keys BENCH_inner_loop.json on.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.prox import Regularizer
+from repro.core.pscope import _inner_loop, _lazy_inner_loop
+from repro.core.svrg import logistic_h_prime
+from repro.data.sparse import csr_to_dense, make_csr_classification
+
+M = 64            # inner steps per epoch (the acceptance-criteria setting)
+BATCH = 1         # b = 1 reproduces Algorithm 1
+N_ROWS = 64       # shard rows; cost is step-count bound, not data bound
+REPEATS = 5
+
+SWEEP_D = (1 << 14, 1 << 16, 1 << 18)
+SWEEP_DENSITY = (0.01, 0.001)
+
+REG = Regularizer(1e-4, 1e-4)
+ETA = 0.3
+
+
+def _time_fn(fn, *args) -> float:
+    """Median wall seconds per call, after a compile+warmup call."""
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _bytes_dense(d: int, nnz: int) -> int:
+    """Per-epoch HBM model: each step reads the (d,) X row (dense view of
+    the instance), u, w_anchor, z and writes u -> (b + 4) reads + 1
+    write of d floats."""
+    return M * (BATCH + 4 + 1) * d * 4
+
+
+def _bytes_lazy(d: int, nnz: int) -> int:
+    """Per-epoch model: each step moves ~6 gather/scatter passes over the
+    b*nnz touched entries (vals+cols reads, u/z/w gathers, u writes,
+    last stamps) plus the final O(d) catch-up (u, z, last reads + u
+    write)."""
+    per_step = BATCH * nnz * (2 + 6) * 4
+    final = 4 * d * 4
+    return M * per_step + final
+
+
+def bench_point(d: int, density: float, seed: int = 0) -> List[Dict]:
+    csr, y, _ = make_csr_classification(N_ROWS, d, density=density, seed=seed)
+    nnz = csr.max_nnz
+    y = jnp.asarray(y)
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.randn(d).astype(np.float32) * 0.05)
+    z = jnp.asarray(rng.randn(d).astype(np.float32) * 0.01)
+    idx = jnp.asarray(rng.randint(0, N_ROWS, size=(M, BATCH)), jnp.int32)
+
+    X = csr_to_dense(csr)
+
+    dense_fn = jax.jit(lambda u, Xk, yk, ix: _inner_loop(
+        None, REG, ETA, u, w, z, Xk, yk, ix, h_prime=logistic_h_prime))
+    lazy_fn = jax.jit(lambda u, v, c, yk, ix: _lazy_inner_loop(
+        logistic_h_prime, REG, ETA, u, w, z, v, c, yk, ix))
+
+    # correctness guard: a benchmark that drifted from equivalence would
+    # be timing two different algorithms
+    u_d = dense_fn(w, X, y, idx)
+    u_l = lazy_fn(w, csr.vals, csr.cols, y, idx)
+    err = float(jnp.max(jnp.abs(u_d - u_l)))
+    assert err < 1e-4, f"lazy/dense diverged at d={d}: {err}"
+
+    t_dense = _time_fn(dense_fn, w, X, y, idx)
+    t_lazy = _time_fn(lazy_fn, w, csr.vals, csr.cols, y, idx)
+    speedup = t_dense / max(t_lazy, 1e-12)
+
+    tag = f"d{d}/rho{density:g}"
+    return [
+        {"name": f"inner_loop/dense/{tag}",
+         "us_per_call": f"{t_dense * 1e6:.0f}",
+         "derived": f"bytes_moved={_bytes_dense(d, nnz)};M={M};nnz={nnz}"},
+        {"name": f"inner_loop/lazy/{tag}",
+         "us_per_call": f"{t_lazy * 1e6:.0f}",
+         "derived": (f"bytes_moved={_bytes_lazy(d, nnz)};M={M};nnz={nnz};"
+                     f"speedup_vs_dense={speedup:.2f}x")},
+    ]
+
+
+def main(full: bool = False) -> List[Dict]:
+    rows = []
+    for d in SWEEP_D:
+        for density in SWEEP_DENSITY:
+            rows.extend(bench_point(d, density))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")

@@ -25,6 +25,7 @@ def solver_configs(n_k: int) -> Dict[str, SolverConfig]:
     return {
         # pSCOPE: M = 3 local epochs per outer round (eta per Cor. 1 scale)
         "pscope": SolverConfig(rounds=16, eta=1.2, inner_epochs=3.0),
+        "pscope_lazy": SolverConfig(rounds=16, eta=1.2, inner_epochs=3.0),
         "fista": SolverConfig(rounds=120),
         "pgd": SolverConfig(rounds=120),
         "prox_svrg": SolverConfig(rounds=12, eta=0.5, inner_epochs=2.0),

@@ -2,24 +2,53 @@
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only substr]
     PYTHONPATH=src python -m benchmarks.run --list-solvers
+    PYTHONPATH=src python -m benchmarks.run --only lazy_inner --json
 
 Every solver-comparison figure sweeps the `core.solvers` registry via
 its single `solvers.run` entry point; `--list-solvers` prints the
 registry.  Emits ``name,us_per_call,derived`` CSV (one row per
-measurement).
+measurement).  ``--json`` additionally writes BENCH_inner_loop.json —
+a machine-readable snapshot (us_per_call per solver/path) so the perf
+trajectory is diffable across PRs.
 """
 import argparse
+import json
 import sys
 import traceback
 
 
 def list_solvers() -> None:
     from repro.core import solvers
-    print(f"{'name':10s} {'dist':5s} {'paper ref':42s} communication")
+    print(f"{'name':12s} {'dist':5s} {'paper ref':46s} communication")
     for name in solvers.available():
         spec = solvers.get(name)
         dist = "p-way" if spec.distributed else "flat"
-        print(f"{name:10s} {dist:5s} {spec.paper_ref:42s} {spec.comm_model}")
+        print(f"{name:12s} {dist:5s} {spec.paper_ref:46s} {spec.comm_model}")
+
+
+def write_json(rows, path: str) -> None:
+    """BENCH_inner_loop.json: the inner_loop/* rows + a name -> us map.
+
+    Only the lazy_inner suite's rows are snapshotted — the file is the
+    cross-PR inner-loop perf trail, so a `--json` run that selected
+    other suites must not clobber it with unrelated rows.
+    """
+    rows = [r for r in rows if r["name"].startswith("inner_loop/")]
+    if not rows:
+        print(f"no inner_loop rows collected; not writing {path} "
+              "(run with --only lazy_inner)", file=sys.stderr)
+        return
+    us = {}
+    for r in rows:
+        try:
+            us[r["name"]] = float(r.get("us_per_call", ""))
+        except (TypeError, ValueError):
+            continue
+    doc = {"schema": "bench-rows/v1", "us_per_call": us, "rows": rows}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path} ({len(us)} timed rows)", file=sys.stderr)
 
 
 def main() -> None:
@@ -29,6 +58,10 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--list-solvers", action="store_true",
                     help="print the solver registry and exit")
+    ap.add_argument("--json", nargs="?", const="BENCH_inner_loop.json",
+                    default=None, metavar="PATH",
+                    help="also write the rows as JSON "
+                         "(default: BENCH_inner_loop.json)")
     args = ap.parse_args()
 
     if args.list_solvers:
@@ -36,7 +69,8 @@ def main() -> None:
         return
 
     from benchmarks import (fig1_convergence, table2_timing, fig2a_speedup,
-                            fig2b_partition, recovery_bench, roofline_report)
+                            fig2b_partition, recovery_bench, roofline_report,
+                            bench_lazy_inner)
     suites = [
         ("fig1", lambda: fig1_convergence.main(full=args.full)),
         ("table2", table2_timing.main),
@@ -44,6 +78,7 @@ def main() -> None:
         ("fig2b", fig2b_partition.main),
         ("recovery", recovery_bench.main),
         ("roofline", roofline_report.main),
+        ("lazy_inner", lambda: bench_lazy_inner.main(full=args.full)),
     ]
     rows = []
     for name, fn in suites:
@@ -59,6 +94,8 @@ def main() -> None:
     for r in rows:
         print(f"{r['name']},{r.get('us_per_call', '')},"
               f"{r.get('derived', '')}")
+    if args.json:
+        write_json(rows, args.json)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,10 @@
 """Core pSCOPE library: the paper's contribution as composable JAX modules.
 
-`core.solvers` is the uniform entry point: all ten solvers (pSCOPE +
-the nine Section-7.1 baselines) run through `solvers.run(...)` and
-return a `Trace` of streaming metrics.  The modules below are the
-building blocks it drives.
+`core.solvers` is the uniform entry point: every registered solver
+(pSCOPE with its dense and sparse-lazy inner engines + the nine
+Section-7.1 baselines) runs through `solvers.run(...)` and returns a
+`Trace` of streaming metrics.  The modules below are the building
+blocks it drives.
 """
 from repro.core.prox import Regularizer, prox_l1, prox_elastic_net, soft_threshold
 from repro.core.objectives import LOGISTIC, LASSO, OBJECTIVES, Objective

@@ -17,6 +17,23 @@ Two execution modes:
     the inner scan contains no DP collectives (this is the paper's
     communication structure and what the dry-run lowers).
 
+Two inner-loop engines, selected by `PScopeConfig.inner_path`:
+  * "dense" — the microbatch VR gradient and the prox touch all d
+    coordinates every step, with the three elementwise stages (VR
+    combine, descent axpy, elastic-net prox) fused into one VMEM pass
+    by `kernels.ops.fused_prox_svrg` / `fused_prox_svrg_diff`.
+  * "lazy"  — the sparse engine for high-dimensional CSR data
+    (Section 6): per-step work scales with the microbatch's nonzero
+    count, not d.  Coordinates outside a microbatch's support evolve
+    under the autonomous iteration u <- prox(u - eta z), which the
+    Lemma-11 closed form (`kernels.ops.lazy_prox`) replays exactly at
+    the next touch — see `_lazy_inner_loop`.  Requires a linear-model
+    objective (svrg.LINEAR_MODEL_H_PRIME) and data as a
+    `data.sparse.CSRMatrix`.
+
+Both engines produce the same trajectory on the same sample sequence
+(up to fp32 reassociation); tests/test_lazy_pscope.py enforces it.
+
 p = 1 degenerates to proximal SVRG (Xiao & Zhang 2014), Corollary 2.
 """
 from __future__ import annotations
@@ -31,8 +48,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import svrg
-from repro.core.prox import Regularizer
+from repro.core.prox import Regularizer, prox_elastic_net
+from repro.core.recovery import recovery_catch_up
 from repro.core.objectives import Objective
+from repro.data.sparse import CSRMatrix, dense_to_csr
+from repro.kernels import ops
 
 Array = jax.Array
 
@@ -48,6 +68,10 @@ class PScopeConfig:
     # worker k's iterate is excluded from the average (weights renormalized).
     # None = all participate (the paper's setting).
     use_linear_model_fastpath: bool = True
+    # Inner-loop engine: "dense" (full-vector updates, fused Pallas prox)
+    # or "lazy" (support-restricted updates + Lemma-11 catch-up; needs
+    # CSR data and a linear-model objective).
+    inner_path: str = "dense"
 
 
 class PScopeState(NamedTuple):
@@ -61,32 +85,147 @@ def init_state(w0: Array, seed: int = 0) -> PScopeState:
                        key=jax.random.PRNGKey(seed))
 
 
+# ---------------------------------------------------------------------------
+# Dense inner loop (fused elementwise path)
+# ---------------------------------------------------------------------------
+
 def _inner_loop(loss_fn: Callable, reg: Regularizer, eta: float,
                 u0: Array, w_anchor: Array, z: Array,
                 Xk: Array, yk: Array, idx: Array,
                 h_prime: Optional[Callable] = None) -> Array:
-    """M inner prox-SVRG steps on one worker's shard. idx: (M, b)."""
+    """M inner prox-SVRG steps on one worker's shard. idx: (M, b).
+
+    The elementwise tail of every step — combine the VR gradient,
+    take the eta-step, apply the elastic-net prox — runs as a single
+    fused Pallas VMEM pass instead of 3 unfused O(d) ops.
+    """
 
     def step(u, ix):
         Xb = jnp.take(Xk, ix, axis=0)
         yb = jnp.take(yk, ix, axis=0)
         if h_prime is not None:
-            v = svrg.linear_model_vr_gradient(h_prime, u, w_anchor, z, Xb, yb)
+            dv = svrg.linear_model_vr_diff(h_prime, u, w_anchor, Xb, yb)
+            u = ops.fused_prox_svrg_diff(u, dv, z, eta=eta, lam1=reg.lam1,
+                                         lam2=reg.lam2)
         else:
-            v = svrg.vr_gradient(loss_fn, u, w_anchor, z, Xb, yb)
-        u = reg.prox(u - eta * v, eta)
+            g_u, g_w = svrg.vr_gradient_pair(loss_fn, u, w_anchor, Xb, yb)
+            u = ops.fused_prox_svrg(u, g_u, g_w, z, eta=eta, lam1=reg.lam1,
+                                    lam2=reg.lam2)
         return u, None
 
     u, _ = jax.lax.scan(step, u0, idx)
     return u
 
 
+# ---------------------------------------------------------------------------
+# Lazy sparse inner loop (support-restricted + Lemma-11 catch-up)
+# ---------------------------------------------------------------------------
+
+def _lazy_inner_loop(h_prime: Callable, reg: Regularizer, eta: float,
+                     u0: Array, w_anchor: Array, z: Array,
+                     vals_k: Array, cols_k: Array, yk: Array,
+                     idx: Array) -> Array:
+    """M inner steps touching only each microbatch's nonzero columns.
+
+    Bookkeeping: `last[j]` = the inner step coordinate j is current at.
+    A step m first catches the microbatch's columns up by q = m - last
+    skipped autonomous prox steps via the Lemma-11 closed form, then
+    applies the support-restricted VR update, exactly reproducing the
+    dense trajectory; after the scan, `kernels.ops.lazy_prox` catches
+    every coordinate up to step M in one O(d) tile-aligned pass.
+
+    The catch-up replays the STANDARD elastic-net prox iteration
+        u <- S(u - eta z, eta lam2) / (1 + eta lam1)
+    which equals the Lemma-11 linearized iteration at the effective
+    step size eta_eff = eta / (1 + eta lam1)  (S(ax, at) = a S(x, t));
+    for pure L1 the two coincide.  This keeps the lazy engine bit-
+    compatible with the dense path's prox convention.
+
+    Duplicate columns in a microbatch (possible across rows, and within
+    a row for the with-replacement generators) are safe: catch-up and
+    prox are written as gather->set (all duplicates compute the same
+    value), while the gradient accumulates via scatter-add.
+
+    Per-step cost: O(b * max_nnz) gathers/scatters + one tiny kernel
+    call; the only O(d) pass is the final catch-up, once per inner
+    loop.  idx: (M, b).
+    """
+    lam1, lam2 = reg.lam1, reg.lam2
+    eta_eff = eta / (1.0 + eta * lam1)
+    M = idx.shape[0]
+
+    def step(carry, mi):
+        u, last = carry
+        m, ix = mi
+        vb = jnp.take(vals_k, ix, axis=0)        # (b, k)
+        cb = jnp.take(cols_k, ix, axis=0)        # (b, k)
+        yb = jnp.take(yk, ix, axis=0)
+        cflat = cb.reshape(-1)
+        z_t = jnp.take(z, cflat, axis=0)
+
+        # 1. Lemma-11 catch-up of the touched coordinates to step m.
+        # The gathered slice is tiny and unaligned, so it runs the
+        # branch-free jnp formulation (the same math the Pallas kernel
+        # body inlines) and fuses into the scan; the O(d) tile-aligned
+        # final pass below goes through the kernel.
+        q = m - jnp.take(last, cflat, axis=0)
+        u_t = recovery_catch_up(jnp.take(u, cflat, axis=0), z_t, q,
+                                eta_eff, lam1, lam2)
+
+        # 2. support-restricted VR gradient entries (includes the 1/b)
+        w_active = jnp.take(w_anchor, cflat, axis=0).reshape(vb.shape)
+        ge = svrg.sparse_vr_gradient_entries(h_prime, u_t.reshape(vb.shape),
+                                             w_active, vb, yb)
+
+        # 3. the prox-SVRG step on the touched coordinates:
+        #    u_j <- prox_en(u_j - eta (g_j + z_j)); the affine part is a
+        #    duplicate-safe set, the gradient a duplicate-accumulating
+        #    scatter-add, the prox a gather->set.
+        u = u.at[cflat].set(u_t - eta * z_t)
+        u = u.at[cflat].add(-eta * ge.reshape(-1))
+        u = u.at[cflat].set(prox_elastic_net(jnp.take(u, cflat, axis=0),
+                                             eta, lam1, lam2))
+        last = last.at[cflat].set(m + 1)
+        return (u, last), None
+
+    steps = (jnp.arange(M, dtype=jnp.int32), idx)
+    (u, last), _ = jax.lax.scan(step, (u0, jnp.zeros_like(u0, jnp.int32)),
+                                steps)
+    # final catch-up to step M: the one O(d) pass, tile-aligned for the
+    # Pallas kernel
+    return ops.lazy_prox(u, z, M - last, eta=eta_eff, lam1=lam1, lam2=lam2)
+
+
 def _pick_h_prime(obj: Objective, cfg: PScopeConfig):
     if not cfg.use_linear_model_fastpath:
         return None
-    return {"logistic": svrg.logistic_h_prime,
-            "lasso": svrg.lasso_h_prime}.get(obj.name)
+    return svrg.LINEAR_MODEL_H_PRIME.get(obj.name)
 
+
+def _require_lazy_support(obj: Objective, cfg: PScopeConfig):
+    h_prime = svrg.LINEAR_MODEL_H_PRIME.get(obj.name)
+    if h_prime is None:
+        raise ValueError(
+            f"inner_path='lazy' needs a linear-model objective with a "
+            f"registered h' (svrg.LINEAR_MODEL_H_PRIME); got {obj.name!r}")
+    return h_prime
+
+
+def _as_csr_shards(Xp, yp) -> "tuple[CSRMatrix, Array]":
+    """Accept worker-major CSR directly, or convert dense (p, n_k, d)."""
+    if isinstance(Xp, CSRMatrix):
+        return Xp, yp
+    p, n_k, d = Xp.shape
+    flat = dense_to_csr(jnp.reshape(Xp, (p * n_k, d)))
+    shaped = CSRMatrix(vals=flat.vals.reshape(p, n_k, -1),
+                       cols=flat.cols.reshape(p, n_k, -1),
+                       row_nnz=flat.row_nnz.reshape(p, n_k), d=d)
+    return shaped, yp
+
+
+# ---------------------------------------------------------------------------
+# Simulation-mode outer steps (worker axis = leading array dim, vmapped)
+# ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2))
 def pscope_outer_step(obj: Objective, reg: Regularizer, cfg: PScopeConfig,
@@ -117,31 +256,102 @@ def pscope_outer_step(obj: Objective, reg: Regularizer, cfg: PScopeConfig,
         Xp, yp, idx)
 
     # --- phase 3: cooperative averaging (the second "all-reduce") ---------
+    return PScopeState(w=_average(u_final, participation), t=state.t + 1,
+                       key=key)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def pscope_outer_step_lazy(obj: Objective, reg: Regularizer,
+                           cfg: PScopeConfig, state: PScopeState,
+                           csr_p: CSRMatrix, yp: Array,
+                           participation: Optional[Array] = None
+                           ) -> PScopeState:
+    """Sparse outer iteration: csr_p holds worker-major (p, n_k, k) CSR.
+
+    Same three CALL phases as `pscope_outer_step`, but every phase is
+    support-restricted: the anchor gradient is one O(nnz) scatter-add
+    per worker, and the inner loops defer untouched coordinates to the
+    Lemma-11 catch-up.
+    """
+    h_prime = _require_lazy_support(obj, cfg)
+    p, n_k, _ = csr_p.vals.shape
+    d = state.w.shape[0]
+    w_t, key = state.w, state.key
+    key, k_idx = jax.random.split(key)
+
+    # --- phase 1: anchor gradient via sparse scatter-add ------------------
+    local_grads = jax.vmap(
+        lambda v, c, y: svrg.sparse_linear_model_full_gradient(
+            h_prime, w_t, v, c, y, d))(csr_p.vals, csr_p.cols, yp)
+    z = jnp.mean(local_grads, axis=0)
+
+    # --- phase 2: lazy autonomous local learning --------------------------
+    idx = jax.vmap(
+        lambda k: svrg.sample_microbatches(k, n_k, cfg.inner_steps,
+                                           cfg.inner_batch)
+    )(jax.random.split(k_idx, p))
+    inner = functools.partial(_lazy_inner_loop, h_prime, reg, cfg.eta)
+    u_final = jax.vmap(
+        lambda v, c, yk, ixk: inner(w_t, w_t, z, v, c, yk, ixk))(
+            csr_p.vals, csr_p.cols, yp, idx)
+
+    # --- phase 3: cooperative averaging -----------------------------------
+    return PScopeState(w=_average(u_final, participation), t=state.t + 1,
+                       key=key)
+
+
+def _average(u_final: Array, participation: Optional[Array]) -> Array:
     if participation is None:
-        w_next = jnp.mean(u_final, axis=0)
-    else:
-        wts = participation.astype(u_final.dtype)
-        w_next = jnp.sum(u_final * wts[:, None], axis=0) / jnp.maximum(
-            jnp.sum(wts), 1.0)
-
-    return PScopeState(w=w_next, t=state.t + 1, key=key)
+        return jnp.mean(u_final, axis=0)
+    wts = participation.astype(u_final.dtype)
+    return jnp.sum(u_final * wts[:, None], axis=0) / jnp.maximum(
+        jnp.sum(wts), 1.0)
 
 
-def run(obj: Objective, reg: Regularizer, Xp: Array, yp: Array, w0: Array,
+def _objective_value_fn(obj: Objective, reg: Regularizer, Xp, yp,
+                        cfg: PScopeConfig):
+    """jit'd w -> P(w) over the full dataset, matching the data layout."""
+    if isinstance(Xp, CSRMatrix):
+        h_loss = svrg.LINEAR_MODEL_H_LOSS[obj.name]
+        k = Xp.vals.shape[-1]
+        vals = Xp.vals.reshape(-1, k)
+        cols = Xp.cols.reshape(-1, k)
+        yflat = yp.reshape(-1)
+        return jax.jit(lambda w: svrg.sparse_linear_model_loss(
+            h_loss, w, vals, cols, yflat) + reg.value(w))
+    Xflat = Xp.reshape(-1, Xp.shape[-1])
+    yflat = yp.reshape(-1)
+    return jax.jit(lambda w: obj.loss(w, Xflat, yflat) + reg.value(w))
+
+
+def run(obj: Objective, reg: Regularizer, Xp, yp: Array, w0: Array,
         cfg: PScopeConfig, record_every: int = 1,
         participation_schedule: Optional[Callable[[int], Array]] = None,
         on_record: Optional[Callable[[Array, float], None]] = None):
     """Full pSCOPE driver. Returns (w_T, history of P(w_t)).
+
+    `Xp` is worker-major data: a dense (p, n_k, d) array, or a
+    `CSRMatrix` with (p, n_k, k) row-slices.  With
+    cfg.inner_path == "lazy" dense input is auto-converted to CSR so
+    callers can A/B the engines by flipping the config alone.
 
     `on_record(w, value)` fires at every history append (including the
     initial iterate) so callers — e.g. the `core.solvers.Trace`
     recorder — can stream wall-clock/NNZ/communication metrics without
     re-running the objective.
     """
+    if cfg.inner_path == "lazy":
+        Xp, yp = _as_csr_shards(Xp, yp)
+        _require_lazy_support(obj, cfg)
+        step_fn = pscope_outer_step_lazy
+    elif isinstance(Xp, CSRMatrix):
+        raise ValueError("dense inner_path cannot consume CSRMatrix data; "
+                         "set PScopeConfig(inner_path='lazy')")
+    else:
+        step_fn = pscope_outer_step
+
     state = init_state(w0, cfg.seed)
-    Xflat = Xp.reshape(-1, Xp.shape[-1])
-    yflat = yp.reshape(-1)
-    obj_val = jax.jit(lambda w: obj.loss(w, Xflat, yflat) + reg.value(w))
+    obj_val = _objective_value_fn(obj, reg, Xp, yp, cfg)
 
     def emit(w, history):
         v = float(obj_val(w))
@@ -154,7 +364,7 @@ def run(obj: Objective, reg: Regularizer, Xp: Array, yp: Array, w0: Array,
     for t in range(cfg.outer_steps):
         part = (participation_schedule(t)
                 if participation_schedule is not None else None)
-        state = pscope_outer_step(obj, reg, cfg, state, Xp, yp, part)
+        state = step_fn(obj, reg, cfg, state, Xp, yp, part)
         if (t + 1) % record_every == 0:
             emit(state.w, history)
     return state.w, history
@@ -169,30 +379,44 @@ def make_distributed_outer_step(obj: Objective, reg: Regularizer,
                                 axis: str = "data"):
     """Returns a jit'd outer step where the worker axis is a mesh axis.
 
-    Data layout: X (p * n_k, d) sharded over `axis` on dim 0; w replicated.
-    The shard_map body performs exactly two collectives (pmean of the
+    Dense layout: X (p * n_k, d) sharded over `axis` on dim 0; w
+    replicated.  With cfg.inner_path == "lazy" the step instead takes a
+    flat `CSRMatrix` (n, k) whose rows are sharded over `axis`, and the
+    inner scan runs the support-restricted lazy engine.  Either way the
+    shard_map body performs exactly two collectives (pmean of the
     anchor gradient, pmean of the final iterates); the inner scan is
     collective-free — this is the CALL communication structure.
     """
-    h_prime = _pick_h_prime(obj, cfg)
+    lazy = cfg.inner_path == "lazy"
+    h_prime = (_require_lazy_support(obj, cfg) if lazy
+               else _pick_h_prime(obj, cfg))
 
-    def body(w_t, key, Xk, yk):
+    def body(w_t, key, Xk_or_vals, yk, cols_k=None):
         # phase 1: one all-reduce for the anchor (full) gradient
-        z_local = jax.grad(obj.loss_fn)(w_t, Xk, yk)
+        if lazy:
+            z_local = svrg.sparse_linear_model_full_gradient(
+                h_prime, w_t, Xk_or_vals, cols_k, yk, w_t.shape[0])
+        else:
+            z_local = jax.grad(obj.loss_fn)(w_t, Xk_or_vals, yk)
         z = jax.lax.pmean(z_local, axis)
         # phase 2: local inner loop, no DP collectives
         widx = jax.lax.axis_index(axis)
         k_local = jax.random.fold_in(key, widx)
-        idx = svrg.sample_microbatches(k_local, Xk.shape[0],
+        idx = svrg.sample_microbatches(k_local, Xk_or_vals.shape[0],
                                        cfg.inner_steps, cfg.inner_batch)
-        u = _inner_loop(obj.loss_fn, reg, cfg.eta, w_t, w_t, z, Xk, yk, idx,
-                        h_prime=h_prime)
+        if lazy:
+            u = _lazy_inner_loop(h_prime, reg, cfg.eta, w_t, w_t, z,
+                                 Xk_or_vals, cols_k, yk, idx)
+        else:
+            u = _inner_loop(obj.loss_fn, reg, cfg.eta, w_t, w_t, z,
+                            Xk_or_vals, yk, idx, h_prime=h_prime)
         # phase 3: one all-reduce to average iterates
         return jax.lax.pmean(u, axis)
 
+    n_data = 3 if lazy else 2
     shard_body = compat.shard_map(
         body, mesh=mesh,
-        in_specs=(P(), P(), P(axis), P(axis)),
+        in_specs=(P(), P()) + (P(axis),) * n_data,
         out_specs=P(),
         # the inner scan carry starts replicated (u0 = w_t) and becomes
         # device-varying through per-shard sampling; disable the VMA
@@ -200,22 +424,38 @@ def make_distributed_outer_step(obj: Objective, reg: Regularizer,
         check_vma=False,
     )
 
-    @jax.jit
-    def outer_step(state: PScopeState, X: Array, y: Array) -> PScopeState:
-        key, sub = jax.random.split(state.key)
-        w_next = shard_body(state.w, sub, X, y)
-        return PScopeState(w=w_next, t=state.t + 1, key=key)
+    if lazy:
+        @jax.jit
+        def outer_step(state: PScopeState, csr: CSRMatrix,
+                       y: Array) -> PScopeState:
+            key, sub = jax.random.split(state.key)
+            w_next = shard_body(state.w, sub, csr.vals, y, csr.cols)
+            return PScopeState(w=w_next, t=state.t + 1, key=key)
+    else:
+        @jax.jit
+        def outer_step(state: PScopeState, X: Array, y: Array) -> PScopeState:
+            key, sub = jax.random.split(state.key)
+            w_next = shard_body(state.w, sub, X, y)
+            return PScopeState(w=w_next, t=state.t + 1, key=key)
 
     return outer_step
 
 
-def run_distributed(obj: Objective, reg: Regularizer, X: Array, y: Array,
+def run_distributed(obj: Objective, reg: Regularizer, X, y: Array,
                     w0: Array, cfg: PScopeConfig, mesh, axis: str = "data",
                     record_every: int = 1,
                     on_record: Optional[Callable[[Array, float], None]] = None):
+    """Distributed driver; `X` is dense (n, d) or a flat CSRMatrix (n, k)."""
+    if cfg.inner_path == "lazy" and not isinstance(X, CSRMatrix):
+        X = dense_to_csr(X)
     step = make_distributed_outer_step(obj, reg, cfg, mesh, axis)
     state = init_state(w0, cfg.seed)
-    obj_val = jax.jit(lambda w: obj.loss(w, X, y) + reg.value(w))
+    if isinstance(X, CSRMatrix):
+        h_loss = svrg.LINEAR_MODEL_H_LOSS[obj.name]
+        obj_val = jax.jit(lambda w: svrg.sparse_linear_model_loss(
+            h_loss, w, X.vals, X.cols, y) + reg.value(w))
+    else:
+        obj_val = jax.jit(lambda w: obj.loss(w, X, y) + reg.value(w))
 
     def emit(w, history):
         v = float(obj_val(w))

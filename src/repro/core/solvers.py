@@ -293,19 +293,41 @@ def estimate_partition_gamma(obj: Objective, reg: Regularizer,
 # Adapters: pSCOPE + the nine Section-7.1 baselines
 # ---------------------------------------------------------------------------
 
+def _pscope_config(obj, reg, part, cfg, inner_path: str):
+    inner = cfg.extras.get(
+        "inner_steps", max(1, int(cfg.inner_epochs * part.n_k)))
+    return pscope.PScopeConfig(
+        eta=_default_eta(obj, reg, part, cfg), inner_steps=inner,
+        inner_batch=cfg.extras.get("inner_batch", 1),
+        outer_steps=cfg.rounds, seed=cfg.seed, inner_path=inner_path)
+
+
 @register("pscope",
           summary="proximal SCOPE under the CALL framework (this paper)",
           paper_ref="Algorithm 1; Theorems 1-2",
           distributed=True,
           comm_model="2 all-reduces per outer round")
 def _run_pscope(obj, reg, part, cfg, trace):
-    inner = cfg.extras.get(
-        "inner_steps", max(1, int(cfg.inner_epochs * part.n_k)))
-    pcfg = pscope.PScopeConfig(
-        eta=_default_eta(obj, reg, part, cfg), inner_steps=inner,
-        inner_batch=cfg.extras.get("inner_batch", 1),
-        outer_steps=cfg.rounds, seed=cfg.seed)
+    # extras={"inner_path": "lazy"} flips the same solver onto the sparse
+    # engine; "pscope_lazy" below is the registry-level A/B entry.
+    pcfg = _pscope_config(obj, reg, part, cfg,
+                          cfg.extras.get("inner_path", "dense"))
     w, _ = pscope.run(obj, reg, part.Xp, part.yp, _w0(part, cfg), pcfg,
+                      on_record=trace.recorder(2.0))
+    return w
+
+
+@register("pscope_lazy",
+          summary="pSCOPE with the sparse lazy-prox inner engine",
+          paper_ref="Algorithm 1 + Section 6 (Lemma 11 recovery)",
+          distributed=True,
+          comm_model="2 all-reduces per outer round")
+def _run_pscope_lazy(obj, reg, part, cfg, trace):
+    from repro.data.pipeline import csr_partition
+    from repro.data.sparse import dense_to_csr
+    csr_p, yp = csr_partition(dense_to_csr(part.X), part.y, part.idx)
+    pcfg = _pscope_config(obj, reg, part, cfg, "lazy")
+    w, _ = pscope.run(obj, reg, csr_p, yp, _w0(part, cfg), pcfg,
                       on_record=trace.recorder(2.0))
     return w
 

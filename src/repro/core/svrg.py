@@ -60,6 +60,20 @@ def linear_model_vr_gradient(h_prime: Callable, u: Array, w_anchor: Array,
     return Xb.T @ (s_u - s_w) / b + z
 
 
+def linear_model_vr_diff(h_prime: Callable, u: Array, w_anchor: Array,
+                         Xb: Array, yb: Array) -> Array:
+    """grad f_B(u) - grad f_B(w) for linear models, WITHOUT the +z term.
+
+    Feeds `kernels.ops.fused_prox_svrg_diff`, which fuses the +z, the
+    eta-scaled descent step and the elastic-net prox into one VMEM pass
+    (the dense-fastpath hot loop of core/pscope).
+    """
+    b = Xb.shape[0]
+    s_u = h_prime(Xb @ u, yb)
+    s_w = h_prime(Xb @ w_anchor, yb)
+    return Xb.T @ (s_u - s_w) / b
+
+
 def logistic_h_prime(z, y):
     # d/dz log(1+exp(-y z)) = -y * sigmoid(-y z)
     return -y * jax.nn.sigmoid(-y * z)
@@ -67,3 +81,70 @@ def logistic_h_prime(z, y):
 
 def lasso_h_prime(z, y):
     return z - y
+
+
+def logistic_h_loss(z, y):
+    return jnp.logaddexp(0.0, -y * z)
+
+
+def lasso_h_loss(z, y):
+    return 0.5 * (z - y) ** 2
+
+
+# Linear-model scalarizations f_i(w) = h(x_i^T w, y_i): the contract the
+# sparse lazy path relies on (per-instance gradients supported on the
+# instance's nonzero columns).  Objectives outside this registry must use
+# the dense autodiff path.
+LINEAR_MODEL_H_PRIME = {"logistic": logistic_h_prime, "lasso": lasso_h_prime}
+LINEAR_MODEL_H_LOSS = {"logistic": logistic_h_loss, "lasso": lasso_h_loss}
+
+
+# ---------------------------------------------------------------------------
+# Support-restricted (CSR) gradients: cost O(microbatch nnz), never O(d).
+# ---------------------------------------------------------------------------
+
+def sparse_vr_gradient_entries(h_prime: Callable, u_active: Array,
+                               w_active: Array, vals_b: Array,
+                               yb: Array) -> Array:
+    """Per-nonzero-entry VR data-gradient contributions of one microbatch.
+
+    `u_active` / `w_active` are the (b, k) gathers of the iterate and the
+    anchor at the microbatch's active columns (the caller already holds
+    them for the catch-up step, so no second gather is needed).  Returns
+    ge (b, k) with
+
+        [grad f_B(u) - grad f_B(w)]_j = sum over entries (i, l) with
+        cols_b[i, l] == j of ge[i, l]
+
+    i.e. the support-restricted VR gradient is materialized by a single
+    scatter-add of `ge` at `cols_b` — duplicate columns (within a row or
+    across the microbatch) accumulate correctly.  The anchor-gradient
+    +z term is NOT included; the caller fuses it (dense: the Pallas
+    fused kernel; lazy: the touched-coordinate update in core/pscope).
+    """
+    b = vals_b.shape[0]
+    du = jnp.sum(vals_b * u_active, axis=-1)
+    dw = jnp.sum(vals_b * w_active, axis=-1)
+    coef = (h_prime(du, yb) - h_prime(dw, yb)) / b
+    return coef[..., None] * vals_b
+
+
+def sparse_linear_model_full_gradient(h_prime: Callable, w: Array,
+                                      vals: Array, cols: Array,
+                                      y: Array, d: int) -> Array:
+    """grad F(w) = X^T h'(Xw, y) / n from CSR arrays; O(total nnz).
+
+    This is the phase-1 anchor gradient of the lazy outer step — the
+    only O(d)-output computation, produced by one scatter-add.
+    """
+    n = vals.shape[0]
+    s = h_prime(jnp.sum(vals * jnp.take(w, cols, axis=0), axis=-1), y)
+    g = jnp.zeros((d,), vals.dtype)
+    return g.at[cols.reshape(-1)].add((vals * s[:, None]).reshape(-1)) / n
+
+
+def sparse_linear_model_loss(h_loss: Callable, w: Array, vals: Array,
+                             cols: Array, y: Array) -> Array:
+    """F(w) = mean h(x_i^T w, y_i) from CSR arrays; O(total nnz)."""
+    return jnp.mean(h_loss(
+        jnp.sum(vals * jnp.take(w, cols, axis=0), axis=-1), y))

@@ -1,7 +1,10 @@
 """Data pipeline: deterministic, shardable, restartable iterators.
 
-Two consumers:
+Three consumers:
   * ERM benchmarks — worker-major partitions from core/partition.py.
+  * The sparse lazy-prox engine — `csr_partition` builds worker-major
+    padded-CSR shards (the `core.pscope` lazy inner loop's data layout)
+    from a flat `CSRMatrix` + a (p, n_k) partition index array.
   * LM training — `TokenDataset` (synthetic token streams at the target
     vocab) + `ShardedBatchIterator` that yields globally-consistent
     batches sharded over the DP axes, with a restore-from-step API for
@@ -15,6 +18,20 @@ from typing import Iterator, Optional, Tuple
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+from repro.data.sparse import CSRMatrix, shard_rows
+
+
+def csr_partition(csr: CSRMatrix, y, idx) -> Tuple[CSRMatrix, jax.Array]:
+    """Worker-major CSR shards: idx (p, n_k) -> ((p, n_k, k) CSR, (p, n_k) y).
+
+    The sparse analogue of `core.partition.stack_partition`; the result
+    feeds `core.pscope.run` with `inner_path="lazy"` directly, or — with
+    leading axis sharded over a mesh axis — the distributed shard_map
+    outer step.
+    """
+    idx = np.asarray(idx)
+    return shard_rows(csr, idx), jnp.asarray(y)[idx]
 
 
 @dataclasses.dataclass

@@ -1,0 +1,211 @@
+"""Padded-CSR sparse data container for the lazy-prox inner-loop engine.
+
+The paper's datasets (rcv1 / avazu / kdd2012) are high-dimensional with
+~0.1-1% density; materializing them densely costs O(n*d) memory and
+makes every inner prox-SVRG step O(d).  `CSRMatrix` stores each row as
+a fixed-width padded slice so the whole dataset is three rectangular
+arrays (TPU-friendly: static shapes, gather/scatter along the last
+axis):
+
+    vals     (..., max_nnz) float32   nonzero values, zero padded
+    cols     (..., max_nnz) int32     column of each value; padding
+                                      entries point at column 0 with
+                                      value 0 (a mathematical no-op for
+                                      dots and scatter-adds — the lazy
+                                      catch-up treats any touched
+                                      coordinate exactly, so spuriously
+                                      "touching" column 0 is harmless)
+    row_nnz  (...,)         int32     true nonzeros per row
+
+Leading dimensions are free: (n, k) for a flat dataset, (p, n_k, k)
+for worker-major shards (see `shard_rows`), so the same container
+flows through vmap simulation and shard_map distribution.
+
+Duplicate columns inside a row are permitted (the fast generators
+sample with replacement); semantically the dense row holds the *sum*
+of duplicate values, which is what `to_dense`, `matvec` and the
+scatter-add consumers in `core.svrg` all implement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class CSRMatrix:
+    """Row-padded CSR matrix; `d` (the column count) is static metadata.
+
+    eq=False: identity comparison only — auto-generated __eq__/__hash__
+    would raise on the array fields (same convention as
+    core.partition.Partition).
+    """
+
+    vals: Array      # (..., max_nnz) float32
+    cols: Array      # (..., max_nnz) int32
+    row_nnz: Array   # (...,) int32
+    d: int
+
+    # -- pytree protocol (d is aux data so jit treats it as static) -------
+    def tree_flatten(self):
+        return (self.vals, self.cols, self.row_nnz), self.d
+
+    @classmethod
+    def tree_unflatten(cls, d, children):
+        vals, cols, row_nnz = children
+        return cls(vals=vals, cols=cols, row_nnz=row_nnz, d=d)
+
+    # -- shape helpers ----------------------------------------------------
+    @property
+    def max_nnz(self) -> int:
+        return int(self.vals.shape[-1])
+
+    @property
+    def n(self) -> int:
+        return int(np.prod(self.vals.shape[:-1]))
+
+    @property
+    def density(self) -> float:
+        return float(np.asarray(jnp.sum(self.row_nnz))) / max(self.n * self.d, 1)
+
+    def rows(self, idx) -> Tuple[Array, Array]:
+        """Gather a row batch: returns (vals, cols) of shape idx.shape + (k,)."""
+        return jnp.take(self.vals, idx, axis=0), jnp.take(self.cols, idx, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# converters
+# ---------------------------------------------------------------------------
+
+def dense_to_csr(X, pad_to: Optional[int] = None) -> CSRMatrix:
+    """Convert a dense (n, d) array (numpy or jax) to padded CSR.
+
+    `pad_to` forces a minimum slice width (e.g. to share one compiled
+    inner loop across datasets of different density).
+    """
+    Xn = np.asarray(X)
+    n, d = Xn.shape
+    nnz_rows = [np.nonzero(Xn[i])[0] for i in range(n)]
+    k = max(1, max((len(r) for r in nnz_rows), default=1))
+    if pad_to is not None:
+        k = max(k, pad_to)
+    vals = np.zeros((n, k), np.float32)
+    cols = np.zeros((n, k), np.int32)
+    row_nnz = np.zeros((n,), np.int32)
+    for i, r in enumerate(nnz_rows):
+        vals[i, :len(r)] = Xn[i, r]
+        cols[i, :len(r)] = r
+        row_nnz[i] = len(r)
+    return CSRMatrix(vals=jnp.asarray(vals), cols=jnp.asarray(cols),
+                     row_nnz=jnp.asarray(row_nnz), d=d)
+
+
+def csr_to_dense(csr: CSRMatrix) -> Array:
+    """Materialize (..., d); duplicate columns accumulate (see module doc)."""
+    lead = csr.vals.shape[:-1]
+    flat_vals = csr.vals.reshape(-1, csr.max_nnz)
+    flat_cols = csr.cols.reshape(-1, csr.max_nnz)
+    rows = flat_vals.shape[0]
+    out = jnp.zeros((rows, csr.d), csr.vals.dtype)
+    row_ix = jnp.broadcast_to(jnp.arange(rows)[:, None], flat_cols.shape)
+    out = out.at[row_ix, flat_cols].add(flat_vals)
+    return out.reshape(*lead, csr.d)
+
+
+def shard_rows(csr: CSRMatrix, idx) -> CSRMatrix:
+    """Worker-major view: idx (p, n_k) -> CSRMatrix with (p, n_k, k) arrays.
+
+    The sparse analogue of `core.partition.stack_partition`.
+    """
+    idx = jnp.asarray(idx)
+    return CSRMatrix(vals=csr.vals[idx], cols=csr.cols[idx],
+                     row_nnz=csr.row_nnz[idx], d=csr.d)
+
+
+# ---------------------------------------------------------------------------
+# sparse linear algebra (shared with core/svrg.py)
+# ---------------------------------------------------------------------------
+
+def matvec(csr: CSRMatrix, w: Array) -> Array:
+    """X @ w without materializing X: (...,) dots via gather."""
+    return jnp.sum(csr.vals * jnp.take(w, csr.cols, axis=0), axis=-1)
+
+
+def rmatvec_mean(csr: CSRMatrix, s: Array) -> Array:
+    """X^T s / n — the (d,) mean-gradient scatter-add for linear models.
+
+    s has the row shape (...,); cost O(total nnz), not O(n*d).
+    """
+    contrib = (csr.vals * s[..., None]).reshape(-1)
+    g = jnp.zeros((csr.d,), csr.vals.dtype)
+    return g.at[csr.cols.reshape(-1)].add(contrib) / csr.n
+
+
+# ---------------------------------------------------------------------------
+# direct CSR generators: O(n * nnz) — never touch O(n * d) memory
+# ---------------------------------------------------------------------------
+
+def _csr_design(rng: np.random.RandomState, n: int, d: int, density: float
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Unit-norm random rows with k = max(1, d*density) nonzeros each.
+
+    Columns are sampled with replacement (O(1) per draw; duplicate
+    probability ~ k/d is negligible at the densities we target, and
+    duplicates are semantically fine — see module doc).
+    """
+    k = max(1, int(d * density))
+    cols = rng.randint(0, d, size=(n, k)).astype(np.int32)
+    vals = rng.randn(n, k).astype(np.float32)
+    vals /= np.maximum(np.linalg.norm(vals, axis=1, keepdims=True), 1e-12)
+    return vals, cols
+
+
+def _csr_truth(rng: np.random.RandomState, d: int, support_frac: float
+               ) -> np.ndarray:
+    w = np.zeros(d, np.float32)
+    k = max(1, int(d * support_frac))
+    sup = rng.choice(d, size=k, replace=False) if d <= (1 << 20) else \
+        np.unique(rng.randint(0, d, size=2 * k))[:k]
+    w[sup] = rng.randn(len(sup)).astype(np.float32) * 2.0
+    return w
+
+
+def _margin(vals: np.ndarray, cols: np.ndarray, w: np.ndarray) -> np.ndarray:
+    return np.sum(vals * w[cols], axis=1)
+
+
+def make_csr_classification(n: int, d: int, density: float = 0.001,
+                            seed: int = 0, label_noise: float = 0.05,
+                            support_frac: float = 0.1
+                            ) -> Tuple[CSRMatrix, np.ndarray, np.ndarray]:
+    """Balanced +-1 labels from a sparse separator, generated directly in CSR."""
+    rng = np.random.RandomState(seed)
+    vals, cols = _csr_design(rng, n, d, density)
+    w_true = _csr_truth(rng, d, support_frac)
+    y = np.sign(_margin(vals, cols, w_true) + 1e-9).astype(np.float32)
+    flip = rng.rand(n) < label_noise
+    y[flip] *= -1.0
+    k = vals.shape[1]
+    csr = CSRMatrix(vals=jnp.asarray(vals), cols=jnp.asarray(cols),
+                    row_nnz=jnp.full((n,), k, dtype=jnp.int32), d=d)
+    return csr, y, w_true
+
+
+def make_csr_regression(n: int, d: int, density: float = 0.001, seed: int = 0,
+                        noise: float = 0.01, support_frac: float = 0.1
+                        ) -> Tuple[CSRMatrix, np.ndarray, np.ndarray]:
+    rng = np.random.RandomState(seed)
+    vals, cols = _csr_design(rng, n, d, density)
+    w_true = _csr_truth(rng, d, support_frac)
+    y = (_margin(vals, cols, w_true) + noise * rng.randn(n)).astype(np.float32)
+    k = vals.shape[1]
+    csr = CSRMatrix(vals=jnp.asarray(vals), cols=jnp.asarray(cols),
+                    row_nnz=jnp.full((n,), k, dtype=jnp.int32), d=d)
+    return csr, y, w_true

@@ -98,6 +98,24 @@ def make_dataset(name: str, task: str = None, seed: int = 0, scale: float = 1.0
     return make_sparse_classification(n, spec.d, spec.density, seed)
 
 
+def make_csr_dataset(name: str, task: str = None, seed: int = 0,
+                     scale: float = 1.0):
+    """Table-1 analogue dataset directly in padded-CSR form.
+
+    Unlike `make_dataset` this never materializes the dense (n, d)
+    design matrix — O(n * nnz) memory — which is what makes the
+    avazu/kdd-scale `--full` benchmark runs feasible.  Returns
+    (CSRMatrix, y, w_true).
+    """
+    from repro.data import sparse as _sp
+    spec = DATASET_SPECS[name]
+    n = max(64, int(spec.n * scale))
+    task = task or spec.task
+    if task == "regression":
+        return _sp.make_csr_regression(n, spec.d, spec.density, seed)
+    return _sp.make_csr_classification(n, spec.d, spec.density, seed)
+
+
 def make_block_sparse(X: np.ndarray, block_size: int = 128
                       ) -> Tuple[np.ndarray, np.ndarray]:
     """Convert dense (n, d) to block-CSR-ish (values, block_ids).

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.lazy_prox import lazy_prox_pallas
-from repro.kernels.fused_prox_svrg import fused_prox_svrg_pallas
+from repro.kernels.fused_prox_svrg import (fused_prox_svrg_pallas,
+                                           fused_prox_svrg_diff_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
 
 _LANES = 128
@@ -72,6 +73,25 @@ def fused_prox_svrg(u: jax.Array, g_u: jax.Array, g_w: jax.Array,
     zt, _ = _to_tiles(z.astype(jnp.float32))
     out = fused_prox_svrg_pallas(ut, gut, gwt, zt, eta=eta, lam1=lam1,
                                  lam2=lam2, interpret=_interpret())
+    return _from_tiles(out, d, u.shape).astype(u.dtype)
+
+
+def fused_prox_svrg_diff(u: jax.Array, dv: jax.Array, z: jax.Array, *,
+                         eta: float, lam1: float, lam2: float) -> jax.Array:
+    """3-operand fused update: prox_en(u - eta*(dv + z)); any shape.
+
+    dv is the precombined VR gradient difference grad f_B(u) - grad
+    f_B(w) (linear-model fastpath) — one fewer (d,) HBM read than the
+    4-operand variant.
+    """
+    if not _use_pallas():
+        return _ref.fused_prox_svrg_diff_ref(u, dv, z, eta=eta, lam1=lam1,
+                                             lam2=lam2)
+    ut, d = _to_tiles(u.astype(jnp.float32))
+    dvt, _ = _to_tiles(dv.astype(jnp.float32))
+    zt, _ = _to_tiles(z.astype(jnp.float32))
+    out = fused_prox_svrg_diff_pallas(ut, dvt, zt, eta=eta, lam1=lam1,
+                                      lam2=lam2, interpret=_interpret())
     return _from_tiles(out, d, u.shape).astype(u.dtype)
 
 

@@ -25,6 +25,11 @@ def fused_prox_svrg_ref(u, g_u, g_w, z, *, eta, lam1, lam2):
     return prox_elastic_net(u - eta * v, eta, lam1, lam2)
 
 
+def fused_prox_svrg_diff_ref(u, dv, z, *, eta, lam1, lam2):
+    """Oracle for the 3-operand diff variant (dv = g_u - g_w precombined)."""
+    return prox_elastic_net(u - eta * (dv + z), eta, lam1, lam2)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, scale=None):
     """Oracle for kernels/flash_attention: exact softmax attention, fp32.
 

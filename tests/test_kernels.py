@@ -45,6 +45,30 @@ def test_fused_prox_svrg_shapes(shape):
                                rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.parametrize("shape", [(128,), (1000,), (64, 33)])
+def test_fused_prox_svrg_diff_shapes(shape):
+    rng = np.random.RandomState(2)
+    mk = lambda: jnp.asarray(rng.randn(*shape).astype(np.float32))
+    u, dv, z = mk(), mk(), mk()
+    got = ops.fused_prox_svrg_diff(u, dv, z, eta=0.2, lam1=1e-2, lam2=1e-2)
+    want = ref.fused_prox_svrg_diff_ref(u, dv, z, eta=0.2, lam1=1e-2,
+                                        lam2=1e-2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fused_diff_equals_four_operand():
+    """The 3-operand kernel is the 4-operand one at dv = g_u - g_w."""
+    rng = np.random.RandomState(4)
+    mk = lambda: jnp.asarray(rng.randn(512).astype(np.float32))
+    u, gu, gw, z = mk(), mk(), mk(), mk()
+    got3 = ops.fused_prox_svrg_diff(u, gu - gw, z, eta=0.3, lam1=1e-3,
+                                    lam2=5e-3)
+    got4 = ops.fused_prox_svrg(u, gu, gw, z, eta=0.3, lam1=1e-3, lam2=5e-3)
+    np.testing.assert_allclose(np.asarray(got3), np.asarray(got4),
+                               rtol=1e-5, atol=1e-6)
+
+
 @given(st.floats(1e-3, 1.0), st.floats(0.0, 1.0), st.floats(0.0, 1.0))
 @settings(max_examples=20, deadline=None)
 def test_fused_prox_svrg_hyperparams(eta, lam1, lam2):

@@ -1,0 +1,187 @@
+"""The sparse lazy-prox inner engine == the dense engine, everywhere.
+
+The contract (core/pscope.py): on the same microbatch sample sequence,
+the lazy support-restricted inner loop with Lemma-11 catch-up produces
+the dense trajectory exactly (up to fp32 reassociation) — for every
+regularizer regime (pure L1, elastic net, ridge, unregularized), both
+objectives, b = 1 and b > 1 microbatches, in vmap simulation and in
+shard_map distribution.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import LOGISTIC, LASSO, PScopeConfig, Regularizer
+from repro.core import pscope
+from repro.core.partition import uniform_partition, stack_partition
+from repro.data import dense_to_csr, csr_partition
+from repro.data.sparse import CSRMatrix
+from repro.data.synthetic import (make_sparse_classification,
+                                  make_sparse_regression)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_both(obj, reg, X, y, p=4, eta=0.4, inner_steps=40, inner_batch=1,
+              outer_steps=3, seed=0):
+    """Run dense and lazy pSCOPE on identical shards/seeds; return iterates."""
+    n, d = X.shape
+    idx = uniform_partition(jax.random.PRNGKey(seed), n, p)
+    Xp, yp = stack_partition(jnp.asarray(X), jnp.asarray(y), idx)
+    csr_p, ycsr = csr_partition(dense_to_csr(X), y, idx)
+    base = dict(eta=eta, inner_steps=inner_steps, inner_batch=inner_batch,
+                outer_steps=outer_steps, seed=seed)
+    w_d, h_d = pscope.run(obj, reg, Xp, yp, jnp.zeros(d),
+                          PScopeConfig(**base))
+    w_l, h_l = pscope.run(obj, reg, csr_p, ycsr, jnp.zeros(d),
+                          PScopeConfig(**base, inner_path="lazy"))
+    return np.asarray(w_d), np.asarray(w_l), h_d, h_l
+
+
+REGULARIZER_REGIMES = {
+    "pure_l1": Regularizer(0.0, 1e-3),
+    "elastic_net": Regularizer(1e-2, 1e-3),
+    "ridge": Regularizer(1e-2, 0.0),
+    "unregularized": Regularizer(0.0, 0.0),
+}
+
+
+@pytest.mark.parametrize("regime", sorted(REGULARIZER_REGIMES))
+def test_lazy_matches_dense_logistic(regime):
+    X, y, _ = make_sparse_classification(192, 256, density=0.03, seed=0)
+    reg = REGULARIZER_REGIMES[regime]
+    w_d, w_l, h_d, h_l = _run_both(LOGISTIC, reg, X, y)
+    np.testing.assert_allclose(w_l, w_d, atol=5e-6, rtol=1e-4)
+    np.testing.assert_allclose(h_l, h_d, rtol=1e-5)
+
+
+@pytest.mark.parametrize("regime", ["pure_l1", "elastic_net"])
+def test_lazy_matches_dense_lasso(regime):
+    X, y, _ = make_sparse_regression(192, 256, density=0.03, seed=1)
+    reg = REGULARIZER_REGIMES[regime]
+    w_d, w_l, _, _ = _run_both(LASSO, reg, X, y, eta=0.3)
+    np.testing.assert_allclose(w_l, w_d, atol=5e-6, rtol=1e-4)
+
+
+def test_lazy_matches_dense_microbatch():
+    """b > 1: duplicate columns across microbatch rows must accumulate."""
+    X, y, _ = make_sparse_classification(192, 128, density=0.08, seed=2)
+    w_d, w_l, _, _ = _run_both(LOGISTIC, Regularizer(1e-3, 1e-3), X, y,
+                               inner_batch=4)
+    np.testing.assert_allclose(w_l, w_d, atol=5e-6, rtol=1e-4)
+
+
+@given(st.floats(1e-4, 5e-2), st.floats(0.0, 5e-2), st.floats(0.05, 0.8),
+       st.integers(0, 3))
+@settings(max_examples=10, deadline=None)
+def test_lazy_matches_dense_property(lam2, lam1, eta, seed):
+    """Property check over the (lam1, lam2, eta, seed) hyperparameter box."""
+    X, y, _ = make_sparse_classification(96, 160, density=0.04, seed=seed)
+    w_d, w_l, _, _ = _run_both(LOGISTIC, Regularizer(lam1, lam2), X, y,
+                               p=2, eta=eta, inner_steps=24,
+                               outer_steps=2, seed=seed)
+    scale = float(np.max(np.abs(w_d))) + 1e-6
+    np.testing.assert_allclose(w_l, w_d, atol=2e-5 * scale, rtol=2e-4)
+
+
+def test_lazy_rejects_non_linear_objective():
+    from repro.core.objectives import Objective
+    weird = Objective("custom", lambda w, X, y: jnp.sum(w ** 4),
+                      lambda X: 1.0)
+    X, y, _ = make_sparse_classification(64, 32, density=0.2, seed=0)
+    Xp, yp = X[None], y[None]
+    with pytest.raises(ValueError, match="linear-model"):
+        pscope.run(weird, Regularizer(0.0, 1e-3), jnp.asarray(Xp),
+                   jnp.asarray(yp), jnp.zeros(32),
+                   PScopeConfig(outer_steps=1, inner_path="lazy"))
+
+
+def test_dense_path_rejects_csr_input():
+    X, y, _ = make_sparse_classification(64, 32, density=0.2, seed=0)
+    csr_p, ycsr = csr_partition(dense_to_csr(X), y,
+                                np.arange(64).reshape(2, 32))
+    assert isinstance(csr_p, CSRMatrix)
+    with pytest.raises(ValueError, match="CSRMatrix"):
+        pscope.run(LOGISTIC, Regularizer(0.0, 1e-3), csr_p, ycsr,
+                   jnp.zeros(32), PScopeConfig(outer_steps=1))
+
+
+def test_lazy_solver_registry_entry():
+    """pscope_lazy runs through solvers.run and tracks pscope's result."""
+    from repro.core import solvers
+    from repro.core.partition import build_partition
+    from repro.core.solvers import SolverConfig
+    X, y, _ = make_sparse_classification(192, 96, density=0.05, seed=0)
+    part = build_partition("uniform", X, y, 4)
+    reg = Regularizer(1e-3, 1e-3)
+    cfg = SolverConfig(rounds=3, inner_epochs=1.0)
+    tr_dense = solvers.run("pscope", LOGISTIC, reg, part, cfg)
+    tr_lazy = solvers.run("pscope_lazy", LOGISTIC, reg, part, cfg)
+    np.testing.assert_allclose(tr_lazy.values, tr_dense.values, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(tr_lazy.w_final),
+                               np.asarray(tr_dense.w_final),
+                               atol=5e-6, rtol=1e-4)
+
+
+def test_lazy_inner_path_via_config_extras():
+    """extras={'inner_path': 'lazy'} flips the registered pscope solver."""
+    from repro.core import solvers
+    from repro.core.partition import build_partition
+    from repro.core.solvers import SolverConfig
+    X, y, _ = make_sparse_classification(128, 64, density=0.05, seed=1)
+    part = build_partition("uniform", X, y, 2)
+    reg = Regularizer(0.0, 1e-3)
+    tr = solvers.run("pscope", LOGISTIC, reg, part,
+                     SolverConfig(rounds=2, inner_epochs=0.5,
+                                  extras={"inner_path": "lazy"}))
+    assert np.isfinite(tr.values[-1])
+    assert tr.values[-1] < tr.values[0]
+
+
+def test_shard_map_lazy_equals_simulation_and_dense():
+    """Distributed lazy path == vmap simulation == distributed dense
+    (same seeds), run on 4 subprocess-isolated host devices."""
+    code = """
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import Regularizer, LOGISTIC, PScopeConfig
+        from repro.core.pscope import run, run_distributed
+        from repro.core.partition import stack_partition
+        from repro.data import dense_to_csr, csr_partition
+        from repro.data.synthetic import make_sparse_classification
+
+        X, y, _ = make_sparse_classification(256, 128, density=0.05, seed=0)
+        Xj, yj = jnp.asarray(X), jnp.asarray(y)
+        reg = Regularizer(1e-3, 1e-3)
+        kw = dict(eta=0.5, inner_steps=64, inner_batch=2, outer_steps=5)
+        mesh = jax.make_mesh((4,), ("data",))
+        csr = dense_to_csr(X)
+        _, h_lazy = run_distributed(LOGISTIC, reg, csr, yj, jnp.zeros(128),
+                                    PScopeConfig(**kw, inner_path="lazy"),
+                                    mesh, axis="data")
+        _, h_dense = run_distributed(LOGISTIC, reg, Xj, yj, jnp.zeros(128),
+                                     PScopeConfig(**kw), mesh, axis="data")
+        idx = np.arange(256).reshape(4, 64)
+        csr_p, ycsr = csr_partition(csr, y, idx)
+        _, h_sim = run(LOGISTIC, reg, csr_p, ycsr, jnp.zeros(128),
+                       PScopeConfig(**kw, inner_path="lazy"))
+        print("RESULT", h_lazy[-1], h_dense[-1], h_sim[-1])
+        assert h_lazy[-1] < h_lazy[0] - 0.02
+        assert abs(h_lazy[-1] - h_dense[-1]) < 1e-5
+        assert abs(h_lazy[-1] - h_sim[-1]) < 5e-3
+        print("OK")
+    """
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(ROOT, "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          env=env, capture_output=True, text=True,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2500:]
+    assert "OK" in proc.stdout

@@ -11,13 +11,14 @@ from repro.core.partition import (PARTITION_SCHEMES, Partition,
 from repro.core.solvers import SolverConfig, Trace
 from repro.data.synthetic import make_sparse_classification
 
-ALL_SOLVERS = ("pscope", "fista", "pgd", "prox_svrg", "dpsgd", "dpsvrg",
-               "admm", "owlqn", "dbcd", "cocoa")
+ALL_SOLVERS = ("pscope", "pscope_lazy", "fista", "pgd", "prox_svrg",
+               "dpsgd", "dpsvrg", "admm", "owlqn", "dbcd", "cocoa")
 
 # per-solver budgets sized so each clearly decreases the objective while
 # keeping the whole parametrized sweep CPU-cheap
 CONFIGS = {
     "pscope": SolverConfig(rounds=5, inner_epochs=1.0),
+    "pscope_lazy": SolverConfig(rounds=5, inner_epochs=1.0),
     "fista": SolverConfig(rounds=40),
     "pgd": SolverConfig(rounds=40),
     "prox_svrg": SolverConfig(rounds=4, inner_epochs=0.5),
@@ -38,7 +39,7 @@ def prob():
 
 
 def test_registry_is_complete():
-    """All ten paper solvers (pSCOPE + 9 baselines) are registered."""
+    """pSCOPE (both inner engines) + the 9 baselines are registered."""
     assert set(solvers.available()) == set(ALL_SOLVERS)
     assert solvers.available()[0] == "pscope"
 
