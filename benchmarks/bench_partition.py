@@ -1,0 +1,110 @@
+"""Partition-engine benchmark: estimator batching + optimizer payoff.
+
+Two measurement families, both emitted as ``partition/*`` rows (the
+names ``benchmarks/run.py --json`` keys BENCH_partition.json on — the
+partition-engine analogue of BENCH_inner_loop.json):
+
+  * ``partition/estimator/{loop,batched}`` — the Definition-5 gamma
+    estimate on a Section-7.4 scheme at p=8 workers x S=8 anchors:
+    the removed sequential implementation (p*S Python FISTA runs,
+    re-traced every call) vs the one-XLA-call batched estimator of
+    `repro.partition.metrics`.  The batched row's derived field
+    records the speedup and the max deviation from the loop result
+    (the equivalence guard — a benchmark that drifted from
+    equivalence would be timing two different algorithms).
+
+  * ``partition/optimizer/<scheme>`` — the greedy swap optimizer's
+    surrogate-gamma trajectory from each skewed seed partition:
+    gamma~ before/after, accepted swaps, candidate evaluations.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import LOGISTIC, Regularizer
+from repro.core.baselines.fista import fista_history
+from repro.data.synthetic import make_sparse_classification
+from repro.partition import (build_partition, gamma_estimate,
+                             refine_partition)
+from repro.partition.metrics import gamma_estimate_loop
+
+P_WORKERS = 8     # the acceptance-criteria grid: p=8 workers ...
+S_ANCHORS = 8     # ... x S=8 Monte-Carlo anchors
+FISTA_ITERS = 200
+N, D = 512, 32
+
+
+def _data():
+    X, y, _ = make_sparse_classification(N, D, density=0.4, seed=0)
+    return jnp.asarray(X), jnp.asarray(y)
+
+
+def bench_estimator(X, y) -> List[Dict]:
+    reg = Regularizer(1e-2, 1e-3)
+    w_star, fh = fista_history(LOGISTIC, reg, X, y, jnp.zeros(D),
+                               iters=1500, record_every=1500)
+    p_star = fh[-1]
+    part = build_partition("split", X, y, P_WORKERS)
+    kw = dict(eps=0.05, num_samples=S_ANCHORS, iters=FISTA_ITERS)
+
+    # warm the batched path so its row times the steady state; the loop
+    # path has no steady state to warm — it re-traces p*S FISTA closures
+    # on every call, which is exactly the cost being replaced
+    g_batched = gamma_estimate(LOGISTIC, reg, part.Xp, part.yp, w_star,
+                               p_star, **kw)
+    t0 = time.perf_counter()
+    g_batched = gamma_estimate(LOGISTIC, reg, part.Xp, part.yp, w_star,
+                               p_star, **kw)
+    t_batched = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    g_loop = gamma_estimate_loop(LOGISTIC, reg, part.Xp, part.yp, w_star,
+                                 p_star, **kw)
+    t_loop = time.perf_counter() - t0
+
+    err = abs(g_batched - g_loop)
+    speedup = t_loop / max(t_batched, 1e-12)
+    tag = f"p{P_WORKERS}/S{S_ANCHORS}"
+    return [
+        {"name": f"partition/estimator/loop/{tag}",
+         "us_per_call": f"{t_loop * 1e6:.0f}",
+         "derived": f"gamma={g_loop:.6e};iters={FISTA_ITERS}"},
+        {"name": f"partition/estimator/batched/{tag}",
+         "us_per_call": f"{t_batched * 1e6:.0f}",
+         "derived": (f"gamma={g_batched:.6e};iters={FISTA_ITERS};"
+                     f"speedup_vs_loop={speedup:.1f}x;"
+                     f"abs_err_vs_loop={err:.2e}")},
+    ]
+
+
+def bench_optimizer(X, y) -> List[Dict]:
+    Xn = np.asarray(X)
+    rows = []
+    for scheme in ("split", "dirichlet", "feature_clusters"):
+        part = build_partition(scheme, X, y, P_WORKERS)
+        t0 = time.perf_counter()
+        res = refine_partition(Xn, part.idx, seed=0)
+        dt = time.perf_counter() - t0
+        rows.append({
+            "name": f"partition/optimizer/{scheme}",
+            "us_per_call": f"{dt * 1e6:.0f}",
+            "derived": (f"gamma0={res.gamma_initial:.3e};"
+                        f"gammaT={res.gamma_final:.3e};"
+                        f"accepted={res.accepted};"
+                        f"evaluated={res.evaluated}"),
+        })
+    return rows
+
+
+def main(full: bool = False) -> List[Dict]:
+    X, y = _data()
+    return bench_estimator(X, y) + bench_optimizer(X, y)
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")

@@ -7,9 +7,10 @@
 Every solver-comparison figure sweeps the `core.solvers` registry via
 its single `solvers.run` entry point; `--list-solvers` prints the
 registry.  Emits ``name,us_per_call,derived`` CSV (one row per
-measurement).  ``--json`` additionally writes BENCH_inner_loop.json —
-a machine-readable snapshot (us_per_call per solver/path) so the perf
-trajectory is diffable across PRs.
+measurement).  ``--json`` additionally writes the machine-readable
+perf-trail snapshots (us_per_call per row) so the perf trajectory is
+diffable across PRs: BENCH_inner_loop.json from the ``inner_loop/*``
+rows and BENCH_partition.json from the ``partition/*`` rows.
 """
 import argparse
 import json
@@ -26,29 +27,47 @@ def list_solvers() -> None:
         print(f"{name:12s} {dist:5s} {spec.paper_ref:46s} {spec.comm_model}")
 
 
-def write_json(rows, path: str) -> None:
-    """BENCH_inner_loop.json: the inner_loop/* rows + a name -> us map.
+# cross-PR perf trails: row-name prefix -> snapshot file.  Each file
+# only ever absorbs its own prefix, so a `--json` run that selected
+# other suites cannot clobber an unrelated trail.
+JSON_TRAILS = {
+    "inner_loop/": "BENCH_inner_loop.json",
+    "partition/": "BENCH_partition.json",
+}
 
-    Only the lazy_inner suite's rows are snapshotted — the file is the
-    cross-PR inner-loop perf trail, so a `--json` run that selected
-    other suites must not clobber it with unrelated rows.
+
+def write_json(rows, path) -> None:
+    """Write every perf trail whose prefix collected rows.
+
+    `path` overrides the destination when exactly one trail matched
+    (the historical --json PATH behavior); with several trails matched
+    the per-trail default filenames are used.
     """
-    rows = [r for r in rows if r["name"].startswith("inner_loop/")]
-    if not rows:
-        print(f"no inner_loop rows collected; not writing {path} "
-              "(run with --only lazy_inner)", file=sys.stderr)
+    matched = {}
+    for prefix, default_path in JSON_TRAILS.items():
+        trail_rows = [r for r in rows if r["name"].startswith(prefix)]
+        if trail_rows:
+            matched[default_path] = trail_rows
+    if not matched:
+        trails = ", ".join(JSON_TRAILS)
+        print(f"no perf-trail rows collected (prefixes: {trails}); "
+              "not writing JSON (run with --only lazy_inner or "
+              "--only partition)", file=sys.stderr)
         return
-    us = {}
-    for r in rows:
-        try:
-            us[r["name"]] = float(r.get("us_per_call", ""))
-        except (TypeError, ValueError):
-            continue
-    doc = {"schema": "bench-rows/v1", "us_per_call": us, "rows": rows}
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"wrote {path} ({len(us)} timed rows)", file=sys.stderr)
+    for default_path, trail_rows in matched.items():
+        out = path if (path and len(matched) == 1) else default_path
+        us = {}
+        for r in trail_rows:
+            try:
+                us[r["name"]] = float(r.get("us_per_call", ""))
+            except (TypeError, ValueError):
+                continue
+        doc = {"schema": "bench-rows/v1", "us_per_call": us,
+               "rows": trail_rows}
+        with open(out, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {out} ({len(us)} timed rows)", file=sys.stderr)
 
 
 def main() -> None:
@@ -58,10 +77,11 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--list-solvers", action="store_true",
                     help="print the solver registry and exit")
-    ap.add_argument("--json", nargs="?", const="BENCH_inner_loop.json",
-                    default=None, metavar="PATH",
-                    help="also write the rows as JSON "
-                         "(default: BENCH_inner_loop.json)")
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="also snapshot the perf-trail rows as JSON "
+                         "(BENCH_inner_loop.json / BENCH_partition.json; "
+                         "PATH overrides when a single trail matched)")
     args = ap.parse_args()
 
     if args.list_solvers:
@@ -70,7 +90,7 @@ def main() -> None:
 
     from benchmarks import (fig1_convergence, table2_timing, fig2a_speedup,
                             fig2b_partition, recovery_bench, roofline_report,
-                            bench_lazy_inner)
+                            bench_lazy_inner, bench_partition)
     suites = [
         ("fig1", lambda: fig1_convergence.main(full=args.full)),
         ("table2", table2_timing.main),
@@ -79,6 +99,7 @@ def main() -> None:
         ("recovery", recovery_bench.main),
         ("roofline", roofline_report.main),
         ("lazy_inner", lambda: bench_lazy_inner.main(full=args.full)),
+        ("partition", lambda: bench_partition.main(full=args.full)),
     ]
     rows = []
     for name, fn in suites:
@@ -94,8 +115,8 @@ def main() -> None:
     for r in rows:
         print(f"{r['name']},{r.get('us_per_call', '')},"
               f"{r.get('derived', '')}")
-    if args.json:
-        write_json(rows, args.json)
+    if args.json is not None:
+        write_json(rows, args.json or None)
 
 
 if __name__ == "__main__":

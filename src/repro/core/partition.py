@@ -1,222 +1,31 @@
-"""Data partitions and the paper's partition-goodness theory (Section 4).
+"""Compatibility shim: `repro.core.partition` -> the `repro.partition`
+package.
 
-Builders return index arrays of shape (p, n_k) selecting each worker's
-shard; `stack_partition` materializes (p, n_k, d) worker-major data.
-`Partition` bundles the flat data, the index array, and the stacked
-worker-major views under a scheme name — it is the partition argument
-every solver in the `core.solvers` registry consumes.  Named schemes
-live in `PARTITION_SCHEMES` (build via `build_partition`), so adding a
-partition scenario to every benchmark is a one-entry change here.
-
-Metrics (see docs/partition_theory.md for the symbol-by-symbol map):
-  * `local_global_gap(a)` — Definition 4:
-        l_pi(a) = P(w*) - (1/p) sum_k min_w P_k(w; a),
-    where P_k(w; a) = F_k(w) + (grad F(a) - grad F_k(a))^T w + R(w) is
-    the local objective (eq. 6).  Each inner min is solved with FISTA.
-  * `gamma_estimate` — Definition 5's gamma(pi; eps) estimated as the
-    sup of l_pi(a)/||a-w*||^2 over sampled a with ||a-w*||^2 >= eps.
-  * `quadratic_gamma_exact` — the closed form of Lemma 4/5 for
-    (diagonal) quadratic partitions: gamma = max_i (1/p) sum_k
-    (A(i,i)-A_k(i,i))^2 / A_k(i,i).  Used to cross-check the estimator.
+The single-file module grew into a subsystem (lazy CSR-carrying
+`Partition`, batched gamma estimator, Lemma-5 surrogate, swap
+optimizer, scheme registry) and now lives at `repro.partition`; every
+pre-refactor name keeps working from here.  New code should import
+from `repro.partition` directly.
 """
-from __future__ import annotations
+from repro.partition import (  # noqa: F401
+    PARTITION_SCHEMES, Partition, RefineResult, SchemeSpec,
+    StreamingAssigner, available_schemes, build_partition,
+    dirichlet_partition, dup_heavy_partition, feature_cluster_partition,
+    gamma_estimate, gamma_surrogate, gamma_surrogate_from_diags,
+    get_scheme, label_skew_partition, local_global_gap, local_global_gaps,
+    make_partition, quadratic_gamma_exact, refine_partition,
+    register_scheme, replicated_partition, stack_partition,
+    uniform_partition, worker_curvature_diags,
+)
 
-import dataclasses
-from typing import Callable, Dict, Tuple
-
-import numpy as np
-import jax
-import jax.numpy as jnp
-
-from repro.core.objectives import Objective
-from repro.core.prox import Regularizer
-from repro.core.baselines.fista import fista
-
-Array = jax.Array
-
-
-# ---------------------------------------------------------------------------
-# Partition builders (return numpy index arrays, shape (p, n_k))
-# ---------------------------------------------------------------------------
-
-def uniform_partition(key, n: int, p: int) -> np.ndarray:
-    """pi_1: uniform random assignment (Lemma 2's good partition)."""
-    n_k = n // p
-    perm = np.asarray(jax.random.permutation(key, n))
-    return perm[: n_k * p].reshape(p, n_k)
-
-
-def label_skew_partition(y: np.ndarray, p: int, pos_frac_first_half: float
-                         ) -> np.ndarray:
-    """pi_2 / pi_3 of Section 7.4.
-
-    A `pos_frac_first_half` fraction of positive instances goes to the
-    first p/2 workers; the rest to the last p/2 (and symmetrically for
-    negatives).  pos_frac=0.75 -> pi_2; pos_frac=1.0 -> pi_3 (full class
-    separation); pos_frac=0.5 ~ uniform.
-    """
-    y = np.asarray(y)
-    pos = np.where(y > 0)[0]
-    neg = np.where(y <= 0)[0]
-    rng = np.random.RandomState(0)
-    rng.shuffle(pos)
-    rng.shuffle(neg)
-    cut_p = int(len(pos) * pos_frac_first_half)
-    cut_n = int(len(neg) * (1.0 - pos_frac_first_half))
-    first = np.concatenate([pos[:cut_p], neg[:cut_n]])
-    second = np.concatenate([pos[cut_p:], neg[cut_n:]])
-    rng.shuffle(first)
-    rng.shuffle(second)
-    half = p // 2
-    n_k = min(len(first) // half, len(second) // (p - half))
-    shards = [first[i * n_k:(i + 1) * n_k] for i in range(half)]
-    shards += [second[i * n_k:(i + 1) * n_k] for i in range(p - half)]
-    return np.stack(shards)
-
-
-def replicated_partition(n: int, p: int) -> np.ndarray:
-    """pi*: every worker sees the whole dataset (best possible, gamma=0)."""
-    return np.tile(np.arange(n), (p, 1))
-
-
-def stack_partition(X, y, idx: np.ndarray) -> Tuple[Array, Array]:
-    """Materialize worker-major (p, n_k, d), (p, n_k) arrays."""
-    X = jnp.asarray(X)
-    y = jnp.asarray(y)
-    return X[idx], y[idx]
-
-
-@dataclasses.dataclass(frozen=True, eq=False)
-class Partition:
-    """A dataset split across p workers — the `partition` argument of
-    `core.solvers.run`.
-
-    eq=False: identity comparison only — auto-generated __eq__/__hash__
-    would raise on the array fields.
-
-    Holds both views of the data: flat (n, d) for serial/feature-split
-    solvers, worker-major (p, n_k, d) for instance-distributed solvers,
-    plus the (p, n_k) index array that produced the split.
-    """
-
-    name: str
-    idx: np.ndarray          # (p, n_k): row k lists worker k's instances
-    X: Array                 # flat (n, d)
-    y: Array                 # flat (n,)
-    Xp: Array                # worker-major (p, n_k, d)
-    yp: Array                # worker-major (p, n_k)
-
-    @property
-    def p(self) -> int:
-        return int(self.idx.shape[0])
-
-    @property
-    def n_k(self) -> int:
-        return int(self.idx.shape[1])
-
-    @property
-    def n(self) -> int:
-        return int(self.X.shape[0])
-
-    @property
-    def d(self) -> int:
-        return int(self.X.shape[1])
-
-
-def make_partition(X, y, idx: np.ndarray, name: str = "custom") -> Partition:
-    """Bundle (X, y) and a (p, n_k) index array into a Partition."""
-    X = jnp.asarray(X)
-    y = jnp.asarray(y)
-    Xp, yp = stack_partition(X, y, idx)
-    return Partition(name=name, idx=np.asarray(idx), X=X, y=y, Xp=Xp, yp=yp)
-
-
-# Named schemes: scheme(X, y, p, seed) -> (p, n_k) index array.  These are
-# the paper's four Section-7.4 partitions; registering a new scheme here
-# makes it sweepable by every benchmark and example.
-PARTITION_SCHEMES: Dict[str, Callable] = {
-    "replicated": lambda X, y, p, seed: replicated_partition(len(y), p),
-    "uniform": lambda X, y, p, seed: uniform_partition(
-        jax.random.PRNGKey(seed), len(y), p),
-    "skew75": lambda X, y, p, seed: label_skew_partition(
-        np.asarray(y), p, 0.75),
-    "split": lambda X, y, p, seed: label_skew_partition(
-        np.asarray(y), p, 1.0),
-}
-
-
-def build_partition(scheme: str, X, y, p: int, seed: int = 0) -> Partition:
-    """Build a named partition scheme (see PARTITION_SCHEMES)."""
-    if scheme not in PARTITION_SCHEMES:
-        raise KeyError(f"unknown partition scheme {scheme!r}; "
-                       f"available: {sorted(PARTITION_SCHEMES)}")
-    idx = PARTITION_SCHEMES[scheme](X, y, p, seed)
-    return make_partition(X, y, idx, name=scheme)
-
-
-# ---------------------------------------------------------------------------
-# Goodness metrics
-# ---------------------------------------------------------------------------
-
-def _local_objective_min(obj: Objective, reg: Regularizer,
-                         Xk: Array, yk: Array, g_shift: Array,
-                         w_init: Array, iters: int = 400) -> Tuple[Array, Array]:
-    """min_w F_k(w) + g_shift^T w + R(w) via FISTA; returns (w_k*, value)."""
-
-    def smooth_loss(w):
-        return obj.loss(w, Xk, yk) + g_shift @ w
-
-    L = obj.lipschitz(Xk) + 1e-12
-    w_star_k = fista(smooth_loss, reg, w_init, L=L + reg.lam1, iters=iters)
-    val = smooth_loss(w_star_k) + reg.value(w_star_k)
-    return w_star_k, val
-
-
-def local_global_gap(obj: Objective, reg: Regularizer, Xp: Array, yp: Array,
-                     a: Array, w_star: Array, p_star_val: float,
-                     iters: int = 400) -> float:
-    """l_pi(a) of Definition 4 (>= 0, == 0 at a = w*)."""
-    p = Xp.shape[0]
-    g_full = jnp.mean(
-        jax.vmap(lambda X, y: jax.grad(obj.loss_fn)(a, X, y))(Xp, yp), axis=0)
-    total = 0.0
-    for k in range(p):
-        g_k = jax.grad(obj.loss_fn)(a, Xp[k], yp[k])
-        shift = g_full - g_k
-        _, val = _local_objective_min(obj, reg, Xp[k], yp[k], shift,
-                                      w_init=a, iters=iters)
-        total += float(val)
-    return float(p_star_val) - total / p
-
-
-def gamma_estimate(obj: Objective, reg: Regularizer, Xp: Array, yp: Array,
-                   w_star: Array, p_star_val: float, eps: float = 1e-3,
-                   num_samples: int = 16, radius: float = 1.0,
-                   seed: int = 0, iters: int = 300) -> float:
-    """Monte-Carlo estimate of gamma(pi; eps) (Definition 5)."""
-    key = jax.random.PRNGKey(seed)
-    d = w_star.shape[0]
-    best = 0.0
-    for s in range(num_samples):
-        key, sub = jax.random.split(key)
-        direction = jax.random.normal(sub, (d,))
-        direction = direction / jnp.linalg.norm(direction)
-        scale = float(jnp.sqrt(eps)) * (1.0 + s * radius / num_samples)
-        a = w_star + scale * direction
-        gap = local_global_gap(obj, reg, Xp, yp, a, w_star, p_star_val,
-                               iters=iters)
-        ratio = gap / float(jnp.sum((a - w_star) ** 2))
-        best = max(best, ratio)
-    return best
-
-
-def quadratic_gamma_exact(A_diag_workers: np.ndarray) -> float:
-    """Lemma 5 closed form for diagonal quadratics.
-
-    A_diag_workers: (p, d) positive diagonal entries of each worker's
-    local quadratic A_k; gamma = max_i (1/p) sum_k (A(i)-A_k(i))^2/A_k(i).
-    """
-    A = np.asarray(A_diag_workers, dtype=np.float64)
-    mean = A.mean(axis=0)
-    per_coord = ((mean[None, :] - A) ** 2 / A).mean(axis=0)
-    return float(per_coord.max())
+__all__ = [
+    "PARTITION_SCHEMES", "Partition", "RefineResult", "SchemeSpec",
+    "StreamingAssigner", "available_schemes", "build_partition",
+    "dirichlet_partition", "dup_heavy_partition",
+    "feature_cluster_partition", "gamma_estimate", "gamma_surrogate",
+    "gamma_surrogate_from_diags", "get_scheme", "label_skew_partition",
+    "local_global_gap", "local_global_gaps", "make_partition",
+    "quadratic_gamma_exact", "refine_partition", "register_scheme",
+    "replicated_partition", "stack_partition", "uniform_partition",
+    "worker_curvature_diags",
+]

@@ -20,11 +20,11 @@ metrics recorder capturing, at each recorded round,
   * cumulative wall-clock seconds,
 
 plus, on request, the partition-goodness estimate gamma(pi; eps) of
-Definition 5 (via `core.partition.gamma_estimate`).  Training loops,
-the benchmark figures, and the dry-run grid all consume the same Trace,
-so adding a solver (one `@register` block here) or a partition scenario
-(one entry in `core.partition.PARTITION_SCHEMES`) immediately shows up
-everywhere.
+Definition 5 (via the batched `repro.partition.gamma_estimate`).
+Training loops, the benchmark figures, and the dry-run grid all consume
+the same Trace, so adding a solver (one `@register` block here) or a
+partition scenario (one `register_scheme` block in
+`repro.partition.schemes`) immediately shows up everywhere.
 """
 from __future__ import annotations
 
@@ -193,10 +193,12 @@ class SolverConfig:
 def _default_eta(obj: Objective, reg: Regularizer, part: Partition,
                  cfg: SolverConfig) -> float:
     """eta = 1/(2(L + lam1)) from the smoothness bound when unset
-    (Corollary 1 scale; benchmarks override per figure)."""
+    (Corollary 1 scale; benchmarks override per figure).  Uses the
+    partition's CSR-aware bound so sparse-backed data is never
+    densified just to size a step."""
     if cfg.eta is not None:
         return cfg.eta
-    L = obj.lipschitz(part.X) + reg.lam1
+    L = part.smooth_lipschitz(obj) + reg.lam1
     return 1.0 / (2.0 * L)
 
 
@@ -281,7 +283,8 @@ def estimate_partition_gamma(obj: Objective, reg: Regularizer,
                              fista_iters: int = 2000,
                              inner_iters: int = 200) -> float:
     """gamma(pi; eps) of Definition 5 for `part`, solving for w* with
-    FISTA first (see docs/partition_theory.md)."""
+    FISTA first; the p x num_samples grid of local solves runs as one
+    batched XLA call (see docs/partition_theory.md)."""
     w_star, fh = fista_history(obj, reg, part.X, part.y, jnp.zeros(part.d),
                                iters=fista_iters, record_every=fista_iters)
     return gamma_estimate(obj, reg, part.Xp, part.yp, w_star, fh[-1],
@@ -323,11 +326,11 @@ def _run_pscope(obj, reg, part, cfg, trace):
           distributed=True,
           comm_model="2 all-reduces per outer round")
 def _run_pscope_lazy(obj, reg, part, cfg, trace):
-    from repro.data.pipeline import csr_partition
-    from repro.data.sparse import dense_to_csr
-    csr_p, yp = csr_partition(dense_to_csr(part.X), part.y, part.idx)
+    # part.csr_p is the Partition's cached worker-major CSR view: the
+    # dense->CSR conversion happens at most once per Partition, not
+    # once per solver run (regression-tested).
     pcfg = _pscope_config(obj, reg, part, cfg, "lazy")
-    w, _ = pscope.run(obj, reg, csr_p, yp, _w0(part, cfg), pcfg,
+    w, _ = pscope.run(obj, reg, part.csr_p, part.yp, _w0(part, cfg), pcfg,
                       on_record=trace.recorder(2.0))
     return w
 

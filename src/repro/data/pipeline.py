@@ -25,10 +25,12 @@ from repro.data.sparse import CSRMatrix, shard_rows
 def csr_partition(csr: CSRMatrix, y, idx) -> Tuple[CSRMatrix, jax.Array]:
     """Worker-major CSR shards: idx (p, n_k) -> ((p, n_k, k) CSR, (p, n_k) y).
 
-    The sparse analogue of `core.partition.stack_partition`; the result
-    feeds `core.pscope.run` with `inner_path="lazy"` directly, or — with
-    leading axis sharded over a mesh axis — the distributed shard_map
-    outer step.
+    The sparse analogue of `repro.partition.stack_partition`; the
+    result feeds `core.pscope.run` with `inner_path="lazy"` directly,
+    or — with leading axis sharded over a mesh axis — the distributed
+    shard_map outer step.  Registry code should prefer
+    `Partition.csr_p`, which caches this layout per partition instead
+    of rebuilding it per solver run.
     """
     idx = np.asarray(idx)
     return shard_rows(csr, idx), jnp.asarray(y)[idx]

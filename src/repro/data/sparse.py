@@ -45,7 +45,7 @@ class CSRMatrix:
 
     eq=False: identity comparison only — auto-generated __eq__/__hash__
     would raise on the array fields (same convention as
-    core.partition.Partition).
+    repro.partition.Partition).
     """
 
     vals: Array      # (..., max_nnz) float32
@@ -122,7 +122,7 @@ def csr_to_dense(csr: CSRMatrix) -> Array:
 def shard_rows(csr: CSRMatrix, idx) -> CSRMatrix:
     """Worker-major view: idx (p, n_k) -> CSRMatrix with (p, n_k, k) arrays.
 
-    The sparse analogue of `core.partition.stack_partition`.
+    The sparse analogue of `repro.partition.stack_partition`.
     """
     idx = jnp.asarray(idx)
     return CSRMatrix(vals=csr.vals[idx], cols=csr.cols[idx],
@@ -146,6 +146,28 @@ def rmatvec_mean(csr: CSRMatrix, s: Array) -> Array:
     contrib = (csr.vals * s[..., None]).reshape(-1)
     g = jnp.zeros((csr.d,), csr.vals.dtype)
     return g.at[csr.cols.reshape(-1)].add(contrib) / csr.n
+
+
+def gram_diag_mean(csr: CSRMatrix) -> Array:
+    """diag(X^T X) / n_rows per leading slice, without densifying.
+
+    For arrays shaped (..., n_rows, k) returns (..., d): the per-column
+    mean of x_i^2 over the rows of each leading slice — the diagonal
+    curvature statistic of the partition-goodness surrogate
+    (`partition.metrics.gamma_surrogate`).  Cost O(total nnz).
+
+    Duplicate columns inside a row (possible with the with-replacement
+    generators) contribute sum-of-squares rather than square-of-sum
+    here — a slight underestimate of the dense-semantics Gram diagonal,
+    negligible at the target densities.
+    """
+    lead = csr.vals.shape[:-2]
+    n_rows = csr.vals.shape[-2]
+    v2 = (csr.vals ** 2).reshape(-1, n_rows * csr.max_nnz)
+    c = csr.cols.reshape(-1, n_rows * csr.max_nnz)
+    out = jnp.zeros((v2.shape[0], csr.d), csr.vals.dtype)
+    out = jax.vmap(lambda o, ci, vi: o.at[ci].add(vi))(out, c, v2)
+    return out.reshape(*lead, csr.d) / n_rows
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,45 @@
+"""The partition engine: build, measure, and *improve* data partitions.
+
+The paper's headline theorem — better data partition implies faster
+convergence (Theorems 1-2, via gamma(pi; eps) of Definition 5) — lives
+here as a three-layer subsystem:
+
+    container.py   lazily-materializing, CSR-carrying `Partition`
+    metrics.py     batched Definition-4/5 estimator (one XLA call for
+                   the p x S FISTA grid) + the Lemma-5 quadratic
+                   surrogate gamma~ (closed form, O(nnz))
+    optimize.py    greedy swap refinement that monotonically decreases
+                   gamma~, and a streaming assigner for arriving rows
+    schemes.py     the scheme registry (7 base scenarios + the
+                   `optimized:<base>` family)
+
+`repro.core.partition` remains as a compatibility shim re-exporting
+this package's public API under the pre-refactor names.
+"""
+from repro.partition.container import (Partition, make_partition,
+                                       stack_partition)
+from repro.partition.metrics import (gamma_estimate, gamma_surrogate,
+                                     gamma_surrogate_from_diags,
+                                     local_global_gap, local_global_gaps,
+                                     quadratic_gamma_exact,
+                                     worker_curvature_diags)
+from repro.partition.optimize import (RefineResult, StreamingAssigner,
+                                      refine_partition)
+from repro.partition.schemes import (PARTITION_SCHEMES, SchemeSpec,
+                                     available_schemes, build_partition,
+                                     dirichlet_partition, dup_heavy_partition,
+                                     feature_cluster_partition, get_scheme,
+                                     label_skew_partition, register_scheme,
+                                     replicated_partition, uniform_partition)
+
+__all__ = [
+    "Partition", "make_partition", "stack_partition",
+    "gamma_estimate", "gamma_surrogate", "gamma_surrogate_from_diags",
+    "local_global_gap", "local_global_gaps", "quadratic_gamma_exact",
+    "worker_curvature_diags",
+    "RefineResult", "StreamingAssigner", "refine_partition",
+    "PARTITION_SCHEMES", "SchemeSpec", "available_schemes",
+    "build_partition", "dirichlet_partition", "dup_heavy_partition",
+    "feature_cluster_partition", "get_scheme", "label_skew_partition",
+    "register_scheme", "replicated_partition", "uniform_partition",
+]

@@ -1,0 +1,158 @@
+"""The `Partition` container: one dataset split across p workers.
+
+A `Partition` is the partition argument every solver in the
+`core.solvers` registry consumes.  It is *lazily materializing*: it
+stores the flat data (dense `(n, d)` array or padded-CSR `CSRMatrix`)
+plus the `(p, n_k)` index array, and derives every other view on first
+access, caching the result on the instance:
+
+    part.X       flat dense (n, d)        [densified from CSR if needed]
+    part.y       flat labels (n,)
+    part.Xp      worker-major (p, n_k, d) [stacked on first access]
+    part.yp      worker-major (p, n_k)
+    part.csr     flat padded-CSR          [converted once, then cached]
+    part.csr_p   worker-major (p, n_k, k) CSR shards
+
+Caching matters on the registry hot path: `pscope_lazy` used to convert
+dense -> CSR from scratch inside every solver run; now the conversion
+happens at most once per `Partition` (tests/test_partition_engine.py
+pins this with a conversion-count regression test).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+from typing import Optional, Tuple, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data import sparse as sparse_data
+from repro.data.sparse import CSRMatrix
+
+Array = jax.Array
+
+# indirection point so tests can count conversions (see the
+# conversion-count regression test in tests/test_partition_engine.py)
+dense_to_csr = sparse_data.dense_to_csr
+
+
+def stack_partition(X, y, idx: np.ndarray) -> Tuple[Array, Array]:
+    """Materialize worker-major (p, n_k, d), (p, n_k) arrays."""
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    return X[idx], y[idx]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Partition:
+    """A dataset split across p workers — the `partition` argument of
+    `core.solvers.run`.
+
+    eq=False: identity comparison only — auto-generated __eq__/__hash__
+    would raise on the array fields.
+
+    Exactly one of `_X` (dense) / `_csr` (padded CSR) is required at
+    construction; the other representation, and both worker-major
+    views, are derived lazily and cached (cached_property writes into
+    the instance __dict__, which a frozen dataclass permits).
+    """
+
+    name: str
+    idx: np.ndarray                    # (p, n_k): row k = worker k's instances
+    _y: Array                          # flat labels (n,)
+    _X: Optional[Array] = None         # flat dense (n, d), if dense-backed
+    _csr: Optional[CSRMatrix] = None   # flat padded CSR, if sparse-backed
+
+    def __post_init__(self):
+        if self._X is None and self._csr is None:
+            raise ValueError("Partition needs dense X or a CSRMatrix")
+
+    # -- flat views --------------------------------------------------------
+    @property
+    def y(self) -> Array:
+        return self._y
+
+    @cached_property
+    def X(self) -> Array:
+        """Flat dense (n, d); densified from CSR on first access."""
+        if self._X is not None:
+            return self._X
+        return sparse_data.csr_to_dense(self._csr)
+
+    @cached_property
+    def csr(self) -> CSRMatrix:
+        """Flat padded-CSR view; converted from dense at most once."""
+        if self._csr is not None:
+            return self._csr
+        return dense_to_csr(self._X)
+
+    # -- worker-major views ------------------------------------------------
+    @cached_property
+    def Xp(self) -> Array:
+        return self.X[jnp.asarray(self.idx)]
+
+    @cached_property
+    def yp(self) -> Array:
+        return jnp.asarray(self._y)[jnp.asarray(self.idx)]
+
+    @cached_property
+    def csr_p(self) -> CSRMatrix:
+        """Worker-major (p, n_k, k) CSR shards (the lazy engine's layout)."""
+        return sparse_data.shard_rows(self.csr, self.idx)
+
+    # -- shape / curvature helpers ----------------------------------------
+    @property
+    def p(self) -> int:
+        return int(self.idx.shape[0])
+
+    @property
+    def n_k(self) -> int:
+        return int(self.idx.shape[1])
+
+    @property
+    def n(self) -> int:
+        if self._X is not None:
+            return int(self._X.shape[0])
+        return int(self._csr.vals.shape[0])
+
+    @property
+    def d(self) -> int:
+        if self._X is not None:
+            return int(self._X.shape[1])
+        return self._csr.d
+
+    @property
+    def is_sparse(self) -> bool:
+        """True when the partition was constructed from CSR data."""
+        return self._X is None
+
+    def smooth_lipschitz(self, obj) -> float:
+        """Smoothness bound L of the mean loss, without densifying.
+
+        Dense-backed partitions defer to `obj.lipschitz`; CSR-backed
+        ones use the max squared row norm straight from the padded
+        values (duplicate columns — possible with the with-replacement
+        generators — make this a slight underestimate; negligible at
+        the target densities).
+        """
+        if self._X is not None:
+            return obj.lipschitz(self._X)
+        row_sq = float(jnp.max(jnp.sum(self._csr.vals ** 2, axis=-1)))
+        return row_sq / 4.0 if obj.name == "logistic" else row_sq
+
+
+def make_partition(X_or_csr: Union[Array, np.ndarray, CSRMatrix], y,
+                   idx: np.ndarray, name: str = "custom") -> Partition:
+    """Bundle data and a (p, n_k) index array into a lazy Partition.
+
+    `X_or_csr` may be a dense (n, d) array or a `CSRMatrix`; either way
+    both representations are available on the result (the missing one
+    is derived lazily on first access).
+    """
+    y = jnp.asarray(y)
+    idx = np.asarray(idx)
+    if isinstance(X_or_csr, CSRMatrix):
+        return Partition(name=name, idx=idx, _y=y, _csr=X_or_csr)
+    return Partition(name=name, idx=idx, _y=y, _X=jnp.asarray(X_or_csr))

@@ -1,0 +1,289 @@
+"""Partition-goodness metrics (Definitions 4-5, Lemma 5).
+
+Two estimators for how good a partition is (see
+docs/partition_theory.md for the symbol-by-symbol map):
+
+  * The *exact* Monte-Carlo estimator of Definition 5:
+    `local_global_gap` (Definition 4's l_pi(a)) and `gamma_estimate`
+    (sup of l_pi(a)/||a-w*||^2 over sampled anchors).  Each inner
+    min_w P_k(w; a) is a fixed-iteration FISTA solve; the whole
+    (p workers x S anchors) grid runs as ONE jit-compiled XLA call
+    (vmap over workers, vmap over anchors) instead of the p*S
+    sequential Python FISTA runs the pre-refactor loop paid —
+    `benchmarks/bench_partition.py` records the speedup, and
+    `*_loop` reference implementations are kept here for the
+    equivalence tests and the benchmark baseline.
+
+  * The *surrogate* of Lemma 5, `gamma_surrogate`: approximate each
+    worker's local loss by its diagonal quadratic model
+    F_k(w) ~= (1/2) w^T diag(D_k) w with
+
+        D_k(i) = c_obj * (1/n_k) sum_{j in D_k} X[j, i]^2 + lam1,
+
+    (c_obj = 1/4 for logistic — the sigmoid'' <= 1/4 bound — and 1 for
+    least squares), then apply Lemma 5's closed form
+
+        gamma~ = max_i (1/p) sum_k (D(i) - D_k(i))^2 / D_k(i),
+
+    with D = (1/p) sum_k D_k.  No FISTA solves, no anchors: one pass
+    over the data, CSR-aware via `data.sparse.gram_diag_mean` so it
+    never materializes (n, d).  This is the objective the partition
+    optimizer (`partition.optimize`) actively minimizes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import TYPE_CHECKING, Optional, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data import sparse as sparse_data
+from repro.data.sparse import CSRMatrix
+from repro.partition.container import Partition
+
+if TYPE_CHECKING:   # avoid a load-time repro.core <-> repro.partition cycle
+    from repro.core.objectives import Objective
+    from repro.core.prox import Regularizer
+
+Array = jax.Array
+
+# floor added to every surrogate curvature diagonal so coordinates a
+# worker never touches stay finite (they are *maximally* penalized
+# relative to their true curvature, which is the right bias: a worker
+# blind to an active coordinate is a bad partition)
+SURROGATE_DELTA = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Batched Definition-4/5 estimator (one XLA call for the p x S grid)
+# ---------------------------------------------------------------------------
+
+def _worker_lipschitz(obj: Objective, Xp: Array) -> np.ndarray:
+    """Per-worker smoothness bounds L_k, shape (p,) (computed eagerly —
+    p is small and obj.lipschitz returns a Python float)."""
+    return np.asarray([obj.lipschitz(Xp[k]) for k in range(Xp.shape[0])],
+                      dtype=np.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("obj", "reg", "iters"))
+def _batched_local_vals(obj: Objective, reg: Regularizer, Xp: Array,
+                        yp: Array, A: Array, Lk: Array, iters: int) -> Array:
+    """min-values of the local objectives over the (p, S) grid.
+
+    Returns (S,) with entry s = (1/p) sum_k min_w P_k(w; a_s), the inner
+    minima of Definition 4 averaged over workers, every FISTA solve
+    vmapped into one program.
+    """
+
+    def worker_grads(Xk, yk):            # grad F_k at every anchor: (S, d)
+        return jax.vmap(lambda a: jax.grad(obj.loss_fn)(a, Xk, yk))(A)
+
+    G = jax.vmap(worker_grads)(Xp, yp)   # (p, S, d)
+    g_full = jnp.mean(G, axis=0)         # (S, d): grad F at every anchor
+    shifts = g_full[None, :, :] - G      # (p, S, d): the eq.-6 correction
+
+    def solve_one(Xk, yk, L_k, a, shift):
+        """min_w F_k(w) + shift^T w + R(w) via fixed-iteration FISTA,
+        numerically mirroring the sequential `_local_min_loop` path."""
+
+        def smooth(w):
+            return obj.loss_fn(w, Xk, yk) + shift @ w
+
+        L = L_k + 1e-12 + reg.lam1
+        eta = 1.0 / L
+        grad = jax.grad(smooth)
+
+        def body(_, carry):
+            w, v, t = carry
+            w_next = reg.prox(v - eta * grad(v), eta)
+            t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+            v_next = w_next + ((t - 1.0) / t_next) * (w_next - w)
+            return (w_next, v_next, t_next)
+
+        w, _, _ = jax.lax.fori_loop(
+            0, iters, body, (a, a, jnp.asarray(1.0, a.dtype)))
+        return smooth(w) + reg.value(w)
+
+    vals = jax.vmap(                      # over workers ...
+        lambda Xk, yk, L_k, shift_k: jax.vmap(
+            lambda a, sh: solve_one(Xk, yk, L_k, a, sh))(A, shift_k)
+    )(Xp, yp, Lk, shifts)                 # (p, S)
+    return jnp.mean(vals, axis=0)
+
+
+def local_global_gaps(obj: Objective, reg: Regularizer, Xp: Array, yp: Array,
+                      A: Array, p_star_val: float, iters: int = 400,
+                      Lk: Optional[np.ndarray] = None) -> np.ndarray:
+    """l_pi(a) of Definition 4 for a whole batch of anchors A: (S, d).
+
+    One compiled call covers all S anchors and all p workers.
+    """
+    if Lk is None:
+        Lk = _worker_lipschitz(obj, Xp)
+    vals = _batched_local_vals(obj, reg, jnp.asarray(Xp), jnp.asarray(yp),
+                               jnp.asarray(A), jnp.asarray(Lk), iters)
+    return float(p_star_val) - np.asarray(vals, dtype=np.float64)
+
+
+def local_global_gap(obj: Objective, reg: Regularizer, Xp: Array, yp: Array,
+                     a: Array, w_star: Array, p_star_val: float,
+                     iters: int = 400) -> float:
+    """l_pi(a) of Definition 4 (>= 0, == 0 at a = w*), batched over
+    workers.  (`w_star` is unused and kept for signature compatibility.)"""
+    A = jnp.asarray(a)[None, :]
+    return float(local_global_gaps(obj, reg, Xp, yp, A, p_star_val,
+                                   iters=iters)[0])
+
+
+def _anchor_grid(w_star: Array, eps: float, num_samples: int, radius: float,
+                 seed: int) -> Array:
+    """The Definition-5 Monte-Carlo anchors: a_s = w* + scale_s * dir_s
+    with ||a_s - w*|| >= sqrt(eps).  Shared by the batched estimator and
+    the loop reference so both see identical anchors."""
+    key = jax.random.PRNGKey(seed)
+    d = w_star.shape[0]
+    anchors = []
+    for s in range(num_samples):
+        key, sub = jax.random.split(key)
+        direction = jax.random.normal(sub, (d,))
+        direction = direction / jnp.linalg.norm(direction)
+        scale = float(jnp.sqrt(eps)) * (1.0 + s * radius / num_samples)
+        anchors.append(w_star + scale * direction)
+    return jnp.stack(anchors)
+
+
+def gamma_estimate(obj: Objective, reg: Regularizer, Xp: Array, yp: Array,
+                   w_star: Array, p_star_val: float, eps: float = 1e-3,
+                   num_samples: int = 16, radius: float = 1.0,
+                   seed: int = 0, iters: int = 300) -> float:
+    """Monte-Carlo estimate of gamma(pi; eps) (Definition 5).
+
+    All p * num_samples FISTA solves run in one batched XLA call.
+    """
+    A = _anchor_grid(w_star, eps, num_samples, radius, seed)
+    gaps = local_global_gaps(obj, reg, Xp, yp, A, p_star_val, iters=iters)
+    dist_sq = np.asarray(jnp.sum((A - w_star[None, :]) ** 2, axis=1),
+                         dtype=np.float64)
+    return float(np.max(np.maximum(gaps / dist_sq, 0.0), initial=0.0))
+
+
+# ---------------------------------------------------------------------------
+# Sequential reference implementations (pre-refactor semantics)
+# ---------------------------------------------------------------------------
+# Kept for the batched-vs-loop equivalence tests and as the baseline of
+# benchmarks/bench_partition.py; not exported through the compat shim.
+
+def _local_min_loop(obj: Objective, reg: Regularizer, Xk: Array, yk: Array,
+                    g_shift: Array, w_init: Array, iters: int = 400) -> float:
+    """One sequential min_w F_k(w) + g_shift^T w + R(w) via FISTA."""
+    from repro.core.baselines.fista import fista   # lazy: avoid load cycle
+
+    def smooth_loss(w):
+        return obj.loss(w, Xk, yk) + g_shift @ w
+
+    L = obj.lipschitz(Xk) + 1e-12
+    w_star_k = fista(smooth_loss, reg, w_init, L=L + reg.lam1, iters=iters)
+    return float(smooth_loss(w_star_k) + reg.value(w_star_k))
+
+
+def local_global_gap_loop(obj: Objective, reg: Regularizer, Xp: Array,
+                          yp: Array, a: Array, p_star_val: float,
+                          iters: int = 400) -> float:
+    """The removed per-worker Python loop, verbatim (reference only)."""
+    p = Xp.shape[0]
+    g_full = jnp.mean(
+        jax.vmap(lambda X, y: jax.grad(obj.loss_fn)(a, X, y))(Xp, yp), axis=0)
+    total = 0.0
+    for k in range(p):
+        g_k = jax.grad(obj.loss_fn)(a, Xp[k], yp[k])
+        total += _local_min_loop(obj, reg, Xp[k], yp[k], g_full - g_k,
+                                 w_init=a, iters=iters)
+    return float(p_star_val) - total / p
+
+
+def gamma_estimate_loop(obj: Objective, reg: Regularizer, Xp: Array,
+                        yp: Array, w_star: Array, p_star_val: float,
+                        eps: float = 1e-3, num_samples: int = 16,
+                        radius: float = 1.0, seed: int = 0,
+                        iters: int = 300) -> float:
+    """The removed p*S sequential estimator, verbatim (reference only)."""
+    A = _anchor_grid(w_star, eps, num_samples, radius, seed)
+    best = 0.0
+    for s in range(num_samples):
+        a = A[s]
+        gap = local_global_gap_loop(obj, reg, Xp, yp, a, p_star_val,
+                                    iters=iters)
+        ratio = gap / float(jnp.sum((a - w_star) ** 2))
+        best = max(best, ratio)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Lemma-5 quadratic surrogate
+# ---------------------------------------------------------------------------
+
+def quadratic_gamma_exact(A_diag_workers: np.ndarray) -> float:
+    """Lemma 5 closed form for diagonal quadratics.
+
+    A_diag_workers: (p, d) positive diagonal entries of each worker's
+    local quadratic A_k; gamma = max_i (1/p) sum_k (A(i)-A_k(i))^2/A_k(i).
+    """
+    A = np.asarray(A_diag_workers, dtype=np.float64)
+    mean = A.mean(axis=0)
+    per_coord = ((mean[None, :] - A) ** 2 / A).mean(axis=0)
+    return float(per_coord.max())
+
+
+def curvature_scale(obj: Optional[Objective]) -> float:
+    """c_obj of the diagonal quadratic model: h''(z) <= 1/4 for the
+    logistic loss, 1 for least squares / unknown objectives."""
+    return 0.25 if (obj is not None and obj.name == "logistic") else 1.0
+
+
+def worker_curvature_diags(part_or_Xp: Union[Partition, Array, CSRMatrix],
+                           obj: Optional[Objective] = None,
+                           reg: Optional[Regularizer] = None,
+                           delta: float = SURROGATE_DELTA) -> np.ndarray:
+    """(p, d) diagonal curvature models D_k of every worker's loss.
+
+    Accepts a `Partition` (uses the CSR shards when sparse-backed so
+    nothing is densified), a dense worker-major (p, n_k, d) array, or a
+    worker-major `CSRMatrix` with (p, n_k, k) slices.
+    """
+    c = curvature_scale(obj)
+    lam1 = float(reg.lam1) if reg is not None else 0.0
+    if isinstance(part_or_Xp, Partition):
+        part_or_Xp = part_or_Xp.csr_p if part_or_Xp.is_sparse \
+            else part_or_Xp.Xp
+    if isinstance(part_or_Xp, CSRMatrix):
+        sq_mean = np.asarray(sparse_data.gram_diag_mean(part_or_Xp),
+                             dtype=np.float64)
+    else:
+        Xp = np.asarray(part_or_Xp, dtype=np.float64)
+        sq_mean = np.mean(Xp ** 2, axis=1)
+    return c * sq_mean + lam1 + delta
+
+
+def gamma_surrogate_from_diags(D_workers: np.ndarray) -> float:
+    """Lemma-5 closed form applied to precomputed (p, d) curvature
+    diagonals (the partition optimizer's objective)."""
+    return quadratic_gamma_exact(D_workers)
+
+
+def gamma_surrogate(part: Union[Partition, Array, CSRMatrix],
+                    obj: Optional[Objective] = None,
+                    reg: Optional[Regularizer] = None,
+                    delta: float = SURROGATE_DELTA) -> float:
+    """The Lemma-5 quadratic surrogate gamma~(pi) — see module doc.
+
+    O(nnz) one-pass, no FISTA solves.  The global c_obj scale
+    multiplies gamma~ uniformly and never changes the partition
+    ordering; the *additive* lam1 shift, however, can reorder
+    near-tied partitions, so compare partitions for a specific
+    problem with one consistent (obj, reg) choice (the optimizer and
+    the benchmarks use the same default: obj=None, reg=None).
+    """
+    return gamma_surrogate_from_diags(
+        worker_curvature_diags(part, obj=obj, reg=reg, delta=delta))

@@ -1,0 +1,272 @@
+"""Partition optimization: actively *improve* a partition's gamma.
+
+The paper proves better partitions converge faster (Theorems 1-2) but
+never constructs one; this module does, by minimizing the Lemma-5
+quadratic surrogate gamma~ of `partition.metrics` — a closed-form
+objective over per-worker curvature diagonals D_k, so every candidate
+move is evaluated in O(d) numpy arithmetic without a single FISTA
+solve.
+
+Two engines:
+
+  * `refine_partition` — greedy instance-swap refinement.  Each step
+    samples a batch of candidate swaps (row i of worker a <-> row j of
+    worker b), scores the surrogate after each swap incrementally, and
+    applies the best one IF it strictly decreases gamma~.  Because a
+    swap keeps every shard size fixed, the global mean curvature D is
+    invariant, the score update only touches workers a and b, and the
+    accept-only-if-lower rule makes the trajectory provably monotone
+    non-increasing (tests/test_partition_engine.py pins this).
+    Wrapped as the `optimized:<base>` scheme family in
+    `partition.schemes`.
+
+  * `StreamingAssigner` — the serving-path story: rows arrive one at a
+    time and are placed on the shard whose marginal surrogate increase
+    is smallest, subject to a balance slack.  An adversarial arrival
+    order (e.g. all positives first) that would wreck a sequential
+    filler lands near the uniform-partition gamma~ instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.data.sparse import CSRMatrix
+from repro.partition.metrics import (SURROGATE_DELTA, curvature_scale,
+                                     gamma_surrogate_from_diags)
+
+
+# ---------------------------------------------------------------------------
+# per-row squared-feature access (dense or CSR, no (n, d) materialization)
+# ---------------------------------------------------------------------------
+
+class _RowSq:
+    """row_sq(i) -> (d,) float64 of X[i]**2, for dense X or CSRMatrix."""
+
+    def __init__(self, X_or_csr: Union[np.ndarray, CSRMatrix]):
+        if isinstance(X_or_csr, CSRMatrix):
+            self._vals = np.asarray(X_or_csr.vals, dtype=np.float64)
+            self._cols = np.asarray(X_or_csr.cols)
+            self._X = None
+            self.d = X_or_csr.d
+            self.n = self._vals.shape[0]
+        else:
+            self._X = np.asarray(X_or_csr, dtype=np.float64)
+            self._vals = self._cols = None
+            self.n, self.d = self._X.shape
+
+    def __call__(self, i: int) -> np.ndarray:
+        if self._X is not None:
+            return self._X[i] ** 2
+        r = np.zeros(self.d, np.float64)
+        np.add.at(r, self._cols[i], self._vals[i] ** 2)
+        return r
+
+
+def _shard_sums(row_sq: _RowSq, idx: np.ndarray) -> np.ndarray:
+    """S[k] = sum_{i in shard k} x_i**2, shape (p, d)."""
+    p, _ = idx.shape
+    S = np.zeros((p, row_sq.d), np.float64)
+    for k in range(p):
+        for i in idx[k]:
+            S[k] += row_sq(int(i))
+    return S
+
+
+def _terms(D: np.ndarray, D_bar: np.ndarray) -> np.ndarray:
+    """(p, d) per-worker Lemma-5 terms (D - D_k)^2 / D_k."""
+    return (D_bar[None, :] - D) ** 2 / D
+
+
+# ---------------------------------------------------------------------------
+# greedy instance-swap refinement
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RefineResult:
+    """Outcome of `refine_partition`.
+
+    gamma_trajectory[0] is the seed partition's surrogate; one more
+    entry per accepted swap — non-increasing by construction.
+    """
+
+    idx: np.ndarray
+    gamma_trajectory: List[float]
+    accepted: int
+    evaluated: int
+
+    @property
+    def gamma_initial(self) -> float:
+        return self.gamma_trajectory[0]
+
+    @property
+    def gamma_final(self) -> float:
+        return self.gamma_trajectory[-1]
+
+
+def refine_partition(X_or_csr, idx: np.ndarray, obj=None, reg=None, *,
+                     steps: int = 400, candidates: int = 32,
+                     patience: int = 40, seed: int = 0,
+                     delta: float = SURROGATE_DELTA) -> RefineResult:
+    """Greedy instance-swap descent on the Lemma-5 surrogate gamma~.
+
+    Each of up to `steps` iterations draws `candidates` random swaps
+    (worker a, slot ia) <-> (worker b, slot jb), scores them all in one
+    vectorized O(candidates * d) pass, and applies the best strictly
+    improving one; `patience` consecutive non-improving iterations end
+    the search early.  Shard sizes are fixed by construction, so the
+    result stays a valid rectangular (p, n_k) partition and the mean
+    curvature D never moves.
+    """
+    idx = np.array(idx, copy=True)
+    p, n_k = idx.shape
+    rng = np.random.RandomState(seed)
+    row_sq = _RowSq(X_or_csr)
+    c = curvature_scale(obj)
+    base = (float(reg.lam1) if reg is not None else 0.0) + delta
+
+    S = _shard_sums(row_sq, idx)
+    inv_nk = 1.0 / n_k
+
+    def diags(S_):
+        return c * S_ * inv_nk + base
+
+    D = diags(S)
+    D_bar = D.mean(axis=0)        # invariant: swaps preserve sum_k S_k
+    t = _terms(D, D_bar)
+    T = t.sum(axis=0)
+    gamma = float(T.max() / p)
+
+    traj = [gamma]
+    accepted = evaluated = 0
+    stall = 0
+    if p < 2:          # single shard: no swap can exist, gamma~ is final
+        steps = 0
+    for _ in range(steps):
+        if stall >= patience:
+            break
+        a = rng.randint(0, p, size=candidates)
+        b = (a + rng.randint(1, p, size=candidates)) % p
+        ia = rng.randint(0, n_k, size=candidates)
+        jb = rng.randint(0, n_k, size=candidates)
+        rows_i = idx[a, ia]
+        rows_j = idx[b, jb]
+        keep = rows_i != rows_j          # identical rows: a no-op swap
+        if not np.any(keep):
+            stall += 1
+            continue
+        a, b, ia, jb = a[keep], b[keep], ia[keep], jb[keep]
+        rows_i, rows_j = rows_i[keep], rows_j[keep]
+        C = len(a)
+        evaluated += C
+
+        delta_r = np.stack([row_sq(int(j)) - row_sq(int(i))
+                            for i, j in zip(rows_i, rows_j)])   # (C, d)
+        Da_new = diags(S[a] + delta_r)
+        Db_new = diags(S[b] - delta_r)
+        ta_new = (D_bar[None, :] - Da_new) ** 2 / Da_new
+        tb_new = (D_bar[None, :] - Db_new) ** 2 / Db_new
+        T_new = T[None, :] - t[a] - t[b] + ta_new + tb_new      # (C, d)
+        gammas = T_new.max(axis=1) / p
+
+        best = int(np.argmin(gammas))
+        if gammas[best] < gamma * (1.0 - 1e-12):
+            ka, kb = int(a[best]), int(b[best])
+            idx[ka, ia[best]], idx[kb, jb[best]] = rows_j[best], rows_i[best]
+            S[ka] += delta_r[best]
+            S[kb] -= delta_r[best]
+            D[ka], D[kb] = Da_new[best], Db_new[best]
+            t[ka], t[kb] = ta_new[best], tb_new[best]
+            T = t.sum(axis=0)            # exact refresh: no drift build-up
+            gamma = float(T.max() / p)
+            traj.append(gamma)
+            accepted += 1
+            stall = 0
+        else:
+            stall += 1
+    return RefineResult(idx=idx, gamma_trajectory=traj, accepted=accepted,
+                        evaluated=evaluated)
+
+
+# ---------------------------------------------------------------------------
+# streaming assignment (rows arrive one at a time)
+# ---------------------------------------------------------------------------
+
+class StreamingAssigner:
+    """Greedy online sharding: place each arriving row on the shard that
+    minimizes the resulting surrogate gamma~, within a balance slack.
+
+    State is one (p, d) running curvature sum plus per-shard counts —
+    O(p * d) memory regardless of stream length.  `assign` accepts a
+    dense (d,) row or a (vals, cols) sparse pair and returns the chosen
+    shard; `partition_idx()` yields the rectangular (p, n_k) index
+    array (n_k = the smallest shard count; trailing arrivals beyond a
+    rectangular fit are dropped, matching `uniform_partition`'s
+    remainder handling).
+    """
+
+    def __init__(self, p: int, d: int, obj=None, reg=None, *,
+                 slack: int = 2, delta: float = SURROGATE_DELTA):
+        self.p = p
+        self.d = d
+        self._c = curvature_scale(obj)
+        self._base = (float(reg.lam1) if reg is not None else 0.0) + delta
+        self._slack = max(1, int(slack))
+        self._S = np.zeros((p, d), np.float64)
+        self._counts = np.zeros(p, np.int64)
+        self._members: List[List[int]] = [[] for _ in range(p)]
+        self._next_index = 0
+
+    def _diags(self, S: np.ndarray, counts: np.ndarray) -> np.ndarray:
+        return self._c * S / np.maximum(counts, 1)[:, None] + self._base
+
+    def _gamma_if(self, S: np.ndarray, counts: np.ndarray) -> float:
+        return gamma_surrogate_from_diags(self._diags(S, counts))
+
+    def gamma(self) -> float:
+        """Surrogate gamma~ of the shards assigned so far."""
+        return self._gamma_if(self._S, self._counts)
+
+    def assign(self, row, cols=None, index: Optional[int] = None) -> int:
+        """Place one row; returns the chosen shard.
+
+        `row` is a dense (d,) feature vector, or — with `cols` given —
+        the nonzero values of a sparse row.  `index` is the row's id in
+        the source dataset (defaults to arrival order) and is what
+        `partition_idx()` emits.
+        """
+        r = np.zeros(self.d, np.float64)
+        if cols is None:
+            r[:] = np.asarray(row, dtype=np.float64) ** 2
+        else:
+            np.add.at(r, np.asarray(cols),
+                      np.asarray(row, dtype=np.float64) ** 2)
+        eligible = np.where(
+            self._counts < self._counts.min() + self._slack)[0]
+        best_k, best_gamma = int(eligible[0]), np.inf
+        for k in eligible:
+            S_try = self._S.copy()
+            S_try[k] += r
+            counts_try = self._counts.copy()
+            counts_try[k] += 1
+            g = self._gamma_if(S_try, counts_try)
+            if g < best_gamma - 1e-15 or (
+                    np.isclose(g, best_gamma) and
+                    self._counts[k] < self._counts[best_k]):
+                best_k, best_gamma = int(k), g
+        self._S[best_k] += r
+        self._counts[best_k] += 1
+        i = self._next_index if index is None else int(index)
+        self._members[best_k].append(i)
+        self._next_index += 1
+        return best_k
+
+    def partition_idx(self) -> np.ndarray:
+        n_k = int(self._counts.min())
+        if n_k == 0:
+            raise ValueError("no complete shard yet: "
+                             f"counts={self._counts.tolist()}")
+        return np.stack([np.asarray(m[:n_k], dtype=np.int64)
+                         for m in self._members])

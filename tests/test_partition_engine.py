@@ -1,0 +1,326 @@
+"""The partition engine (repro.partition): batched metrics, the
+Lemma-5 surrogate, the swap optimizer, streaming assignment, the
+rebuilt scheme registry, and the lazy CSR-carrying Partition."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import LOGISTIC, Regularizer, solvers
+from repro.core.baselines.fista import fista_history
+from repro.core.solvers import SolverConfig
+from repro.data.synthetic import make_sparse_classification
+from repro.data.sparse import dense_to_csr
+from repro.partition import (PARTITION_SCHEMES, StreamingAssigner,
+                             available_schemes, build_partition,
+                             gamma_estimate, gamma_surrogate, get_scheme,
+                             label_skew_partition, make_partition,
+                             refine_partition, uniform_partition)
+from repro.partition import container as partition_container
+from repro.partition.metrics import (gamma_estimate_loop,
+                                     local_global_gap, local_global_gap_loop)
+
+P = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    X, y, _ = make_sparse_classification(384, 24, density=0.4, seed=0)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    reg = Regularizer(1e-2, 1e-3)
+    w_star, hist = fista_history(LOGISTIC, reg, X, y, jnp.zeros(24),
+                                 iters=1500, record_every=1500)
+    return X, y, reg, w_star, hist[-1]
+
+
+# ---------------------------------------------------------------------------
+# batched estimator == the removed sequential loop
+# ---------------------------------------------------------------------------
+
+def test_batched_gap_matches_loop(setup):
+    X, y, reg, w_star, p_star = setup
+    part = build_partition("uniform", X, y, P)
+    a = jnp.ones(24) * 0.3
+    got = local_global_gap(LOGISTIC, reg, part.Xp, part.yp, a, w_star,
+                           p_star, iters=300)
+    want = local_global_gap_loop(LOGISTIC, reg, part.Xp, part.yp, a,
+                                 p_star, iters=300)
+    assert got == pytest.approx(want, abs=5e-5)
+
+
+def test_batched_gamma_matches_loop(setup):
+    X, y, reg, w_star, p_star = setup
+    part = build_partition("split", X, y, P)
+    kw = dict(eps=0.05, num_samples=3, iters=200)
+    got = gamma_estimate(LOGISTIC, reg, part.Xp, part.yp, w_star, p_star,
+                         **kw)
+    want = gamma_estimate_loop(LOGISTIC, reg, part.Xp, part.yp, w_star,
+                               p_star, **kw)
+    assert got == pytest.approx(want, rel=1e-4, abs=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Lemma-5 surrogate
+# ---------------------------------------------------------------------------
+
+def test_surrogate_zero_for_replicated_and_orders_schemes(setup):
+    X, y, _, _, _ = setup
+    g_star = gamma_surrogate(build_partition("replicated", X, y, P))
+    g_unif = gamma_surrogate(build_partition("uniform", X, y, P))
+    g_split = gamma_surrogate(build_partition("split", X, y, P))
+    assert g_star == pytest.approx(0.0, abs=1e-12)
+    assert g_star <= g_unif < g_split
+
+
+def test_surrogate_csr_path_matches_dense(setup):
+    X, y, _, _, _ = setup
+    idx = uniform_partition(jax.random.PRNGKey(3), 384, P)
+    dense_part = make_partition(X, y, idx)
+    csr_part = make_partition(dense_to_csr(np.asarray(X)), y, idx)
+    assert csr_part.is_sparse and not dense_part.is_sparse
+    assert gamma_surrogate(csr_part) == pytest.approx(
+        gamma_surrogate(dense_part), rel=1e-5)
+
+
+def test_surrogate_objective_scale_preserves_ordering(setup):
+    X, y, reg, _, _ = setup
+    parts = [build_partition(s, X, y, P) for s in ("uniform", "split")]
+    plain = [gamma_surrogate(p) for p in parts]
+    scaled = [gamma_surrogate(p, obj=LOGISTIC, reg=reg) for p in parts]
+    assert (plain[0] < plain[1]) == (scaled[0] < scaled[1])
+
+
+# ---------------------------------------------------------------------------
+# optimizer invariants
+# ---------------------------------------------------------------------------
+
+def test_refine_trajectory_monotone_nonincreasing(setup):
+    X, y, _, _, _ = setup
+    part = build_partition("split", X, y, P)
+    res = refine_partition(np.asarray(X), part.idx, seed=0)
+    traj = np.asarray(res.gamma_trajectory)
+    assert res.accepted > 0
+    assert len(traj) == res.accepted + 1
+    assert np.all(np.diff(traj) <= 1e-12)
+    # result is still a valid rectangular partition of the same rows
+    assert res.idx.shape == part.idx.shape
+    assert sorted(res.idx.ravel()) == sorted(part.idx.ravel())
+    # the trajectory endpoint IS the surrogate of the refined partition
+    assert gamma_surrogate(make_partition(X, y, res.idx)) == pytest.approx(
+        res.gamma_final, rel=1e-9)
+
+
+def test_refine_single_worker_is_noop(setup):
+    """p=1: no swap exists; refine returns the partition unchanged
+    instead of crashing (Corollary 2's serial degenerate case)."""
+    X, y, _, _, _ = setup
+    idx = np.arange(384).reshape(1, -1)
+    res = refine_partition(np.asarray(X), idx, seed=0)
+    assert res.accepted == 0 and res.evaluated == 0
+    assert np.array_equal(res.idx, idx)
+    assert res.gamma_final == pytest.approx(0.0, abs=1e-12)
+
+
+def test_optimized_schemes_beat_their_base(setup):
+    X, y, _, _, _ = setup
+    g_unif = gamma_surrogate(build_partition("uniform", X, y, P))
+    g_opt_unif = gamma_surrogate(build_partition("optimized:uniform",
+                                                 X, y, P))
+    g_split = gamma_surrogate(build_partition("split", X, y, P))
+    g_opt_split = gamma_surrogate(build_partition("optimized:split",
+                                                  X, y, P))
+    assert g_opt_unif <= g_unif
+    assert g_opt_split < g_split
+
+
+def test_e2e_lower_gamma_means_fewer_pscope_rounds():
+    """Theorem 2 end to end: the surrogate ordering predicts the
+    rounds-to-eps ordering of actual pSCOPE runs.
+
+    Every run's per-round iterates are scored on the FULL dataset
+    objective (skewed partitions truncate shards, so their own trace
+    objective is a subset — same convention as the system test), and
+    eps is placed between the best and worst final gaps so the
+    rounds-to-eps comparison is strict.
+    """
+    from repro.core import pscope
+
+    X, y, _ = make_sparse_classification(1024, 64, density=0.3, seed=1)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    reg = Regularizer(5e-3, 1e-4)
+    _, hist = fista_history(LOGISTIC, reg, X, y, jnp.zeros(64),
+                            iters=2000, record_every=2000)
+    p_star = hist[-1]
+    full_val = jax.jit(lambda w: LOGISTIC.loss(w, X, y) + reg.value(w))
+    pcfg = pscope.PScopeConfig(eta=0.5, inner_steps=128, inner_batch=2,
+                               outer_steps=8)
+
+    gammas, histories = {}, {}
+    for scheme in ("replicated", "uniform", "split"):
+        part = build_partition(scheme, X, y, 8)
+        gammas[scheme] = gamma_surrogate(part)
+        vals = []
+        pscope.run(LOGISTIC, reg, part.Xp, part.yp, jnp.zeros(64), pcfg,
+                   on_record=lambda w, v: vals.append(float(full_val(w))))
+        histories[scheme] = [v - p_star for v in vals]
+    assert gammas["replicated"] <= gammas["uniform"] < gammas["split"]
+
+    gap_unif = histories["uniform"][-1]
+    gap_split = histories["split"][-1]
+    assert gap_unif < gap_split
+    # eps between the two final gaps: uniform reaches it within the
+    # budget, split does not => strictly fewer rounds for lower gamma
+    eps = float(np.sqrt(max(gap_unif, 1e-12) * gap_split))
+
+    def rounds_to(gaps):
+        return next((i for i, g in enumerate(gaps) if g <= eps),
+                    float("inf"))
+
+    assert rounds_to(histories["uniform"]) < rounds_to(histories["split"])
+    assert rounds_to(histories["replicated"]) <= rounds_to(
+        histories["uniform"])
+
+
+# ---------------------------------------------------------------------------
+# streaming assigner
+# ---------------------------------------------------------------------------
+
+def test_streaming_assigner_beats_sequential_fill(setup):
+    X, y, _, _, _ = setup
+    Xn, yn = np.asarray(X), np.asarray(y)
+    order = np.argsort(yn)            # adversarial: one class first
+    assigner = StreamingAssigner(p=P, d=24)
+    for i in order:
+        assigner.assign(Xn[i], index=int(i))
+    idx_stream = assigner.partition_idx()
+    n_used = idx_stream.shape[1] * P
+    idx_seq = order[:len(order) - len(order) % P].reshape(P, -1)
+
+    # balanced within slack, every row placed exactly once
+    assert idx_stream.shape[0] == P
+    flat = idx_stream.ravel()
+    assert len(np.unique(flat)) == len(flat)
+    assert n_used >= len(order) - P * (assigner._slack + 1)
+
+    g_stream = gamma_surrogate(make_partition(X, y, idx_stream))
+    g_seq = gamma_surrogate(make_partition(X, y, idx_seq))
+    assert g_stream < g_seq
+    assert assigner.gamma() == pytest.approx(
+        gamma_surrogate(make_partition(X, y, idx_stream)), rel=0.2)
+
+
+def test_streaming_assigner_sparse_rows():
+    sa = StreamingAssigner(p=2, d=8)
+    k0 = sa.assign(np.array([1.0, 2.0]), cols=np.array([1, 3]))
+    k1 = sa.assign(np.array([1.0, 2.0]), cols=np.array([1, 3]))
+    assert {k0, k1} == {0, 1}          # identical rows spread for balance
+
+
+# ---------------------------------------------------------------------------
+# scheme registry
+# ---------------------------------------------------------------------------
+
+def test_registry_grew_and_resolves_dynamic_optimized(setup):
+    X, y, _, _, _ = setup
+    names = available_schemes()
+    assert len(names) >= 7
+    for required in ("replicated", "uniform", "skew75", "split", "dirichlet",
+                     "feature_clusters", "dup_heavy", "optimized:uniform",
+                     "optimized:split"):
+        assert required in names
+    assert set(names) == set(PARTITION_SCHEMES)
+    # optimized:<base> resolves for ANY base without pre-registration
+    spec = get_scheme("optimized:dirichlet")
+    part = build_partition("optimized:dirichlet", X, y, P)
+    assert spec.name == "optimized:dirichlet"
+    assert part.name == "optimized:dirichlet"
+    with pytest.raises(KeyError, match="unknown partition scheme"):
+        get_scheme("optimized:nope")
+
+
+def test_label_skew_seed_is_plumbed(setup):
+    X, y, _, _, _ = setup
+    yn = np.asarray(y)
+    a0 = label_skew_partition(yn, P, 1.0, seed=0)
+    a0_again = label_skew_partition(yn, P, 1.0, seed=0)
+    a1 = label_skew_partition(yn, P, 1.0, seed=1)
+    assert np.array_equal(a0, a0_again)
+    assert not np.array_equal(a0, a1)
+    # ... and reaches the scheme registry
+    b0 = build_partition("split", X, y, P, seed=0)
+    b1 = build_partition("split", X, y, P, seed=1)
+    assert not np.array_equal(b0.idx, b1.idx)
+    # the class-separation *structure* is seed-invariant: each shard
+    # stays single-class under any seed
+    for idx in (b0.idx, b1.idx):
+        for k in range(P):
+            assert len(np.unique(yn[idx[k]])) == 1
+
+
+def test_dirichlet_and_dup_heavy_shapes(setup):
+    X, y, _, _, _ = setup
+    for scheme in ("dirichlet", "feature_clusters", "dup_heavy"):
+        part = build_partition(scheme, X, y, P, seed=2)
+        assert part.idx.shape == (P, 384 // P)
+        assert part.idx.min() >= 0 and part.idx.max() < 384
+    # dup_heavy shards really are duplicate-heavy
+    dup = build_partition("dup_heavy", X, y, P, seed=2)
+    flat = dup.idx.ravel()
+    assert len(np.unique(flat)) < 0.5 * len(flat)
+    # dirichlet shards are label-skewed relative to uniform
+    diri = build_partition("dirichlet", X, y, P, seed=2)
+    yn = np.asarray(y)
+    fracs = [np.mean(yn[diri.idx[k]] > 0) for k in range(P)]
+    assert max(fracs) - min(fracs) > 0.2
+
+
+# ---------------------------------------------------------------------------
+# lazy CSR-carrying Partition
+# ---------------------------------------------------------------------------
+
+def test_partition_is_lazy_and_caches(setup):
+    X, y, _, _, _ = setup
+    part = build_partition("uniform", X, y, P)
+    assert "Xp" not in part.__dict__ and "csr" not in part.__dict__
+    Xp_first = part.Xp
+    assert part.Xp is Xp_first                  # cached, not rebuilt
+    csr_first = part.csr
+    assert part.csr is csr_first
+    assert part.csr_p is part.csr_p
+
+
+def test_csr_conversion_happens_once_per_partition(setup, monkeypatch):
+    """The pscope_lazy adapter must reuse the Partition's cached CSR:
+    one dense->CSR conversion per partition, however many runs."""
+    X, y, reg, _, _ = setup
+    calls = {"n": 0}
+    real = partition_container.sparse_data.dense_to_csr
+
+    def counting(Xd, *a, **kw):
+        calls["n"] += 1
+        return real(Xd, *a, **kw)
+
+    monkeypatch.setattr(partition_container, "dense_to_csr", counting)
+    part = build_partition("uniform", X, y, P)
+    cfg = SolverConfig(rounds=2, inner_epochs=0.5)
+    solvers.run("pscope_lazy", LOGISTIC, reg, part, cfg)
+    solvers.run("pscope_lazy", LOGISTIC, reg, part, cfg)
+    assert calls["n"] == 1
+
+
+def test_csr_backed_partition_runs_lazy_solver(setup):
+    """make_partition(CSRMatrix, ...) feeds pscope_lazy with no dense
+    detour and matches the dense-built run exactly."""
+    X, y, reg, _, _ = setup
+    idx = uniform_partition(jax.random.PRNGKey(0), 384, P)
+    csr = dense_to_csr(np.asarray(X))
+    part_csr = make_partition(csr, y, idx, name="csr")
+    part_dense = make_partition(X, y, idx, name="dense")
+    assert part_csr.is_sparse
+    assert part_csr.smooth_lipschitz(LOGISTIC) == pytest.approx(
+        part_dense.smooth_lipschitz(LOGISTIC), rel=1e-6)
+    cfg = SolverConfig(rounds=2, inner_epochs=0.5)
+    tr_csr = solvers.run("pscope_lazy", LOGISTIC, reg, part_csr, cfg)
+    tr_dense = solvers.run("pscope_lazy", LOGISTIC, reg, part_dense, cfg)
+    np.testing.assert_allclose(np.asarray(tr_csr.w_final),
+                               np.asarray(tr_dense.w_final), atol=1e-6)
