@@ -7,9 +7,11 @@ the same derived metrics (final gap, time/comm-to-eps, rounds, NNZ).
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import Regularizer, LOGISTIC, LASSO
@@ -17,6 +19,30 @@ from repro.core.baselines.fista import fista_history
 from repro.core.partition import build_partition
 from repro.core.solvers import Trace
 from repro.data.synthetic import make_dataset
+
+
+def time_fn(fn, *args, repeats: int = 7) -> float:
+    """Min wall seconds per call, after a compile+warmup call.
+
+    Every call — the warmup AND each timed repetition — is wrapped in
+    `jax.block_until_ready`, so jax's async dispatch cannot return the
+    future early and under-report `us_per_call`.  This matters doubly
+    now that the scanned drivers batch whole trajectories into single
+    dispatches: an unblocked timer would measure enqueue cost, not
+    execution.  All timing loops in this package must go through here.
+
+    The minimum (not the median) is reported: scheduler noise on the
+    small shared-CPU containers this runs in is strictly additive, so
+    the min is the standard consistent estimator of true cost, and
+    cross-engine ratios stay comparable across load conditions.
+    """
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts))
 
 
 def build_problem(name: str, model: str, scale: float = 0.05, seed: int = 0):

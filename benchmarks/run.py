@@ -10,7 +10,10 @@ registry.  Emits ``name,us_per_call,derived`` CSV (one row per
 measurement).  ``--json`` additionally writes the machine-readable
 perf-trail snapshots (us_per_call per row) so the perf trajectory is
 diffable across PRs: BENCH_inner_loop.json from the ``inner_loop/*``
-rows and BENCH_partition.json from the ``partition/*`` rows.
+rows — ``dense``, the PR-2 ``lazy`` reference scan, the epoch-planned
+``fused`` engine, and the cost-model ``auto`` dispatch: four rows per
+(d, density) cell — and BENCH_partition.json from the ``partition/*``
+rows.
 """
 import argparse
 import json

@@ -9,9 +9,10 @@ blocks it drives.
 from repro.core.prox import Regularizer, prox_l1, prox_elastic_net, soft_threshold
 from repro.core.objectives import LOGISTIC, LASSO, OBJECTIVES, Objective
 from repro.core.pscope import (PScopeConfig, PScopeState, pscope_outer_step,
-                               run, run_distributed,
+                               run, run_scanned, run_distributed,
+                               run_distributed_scanned,
                                make_distributed_outer_step)
-from repro.core import partition, recovery, svrg
+from repro.core import partition, plan, recovery, svrg
 from repro.core.partition import Partition, build_partition, make_partition
 from repro.core import solvers
 from repro.core.solvers import SolverConfig, SolverSpec, Trace
@@ -20,8 +21,9 @@ __all__ = [
     "Regularizer", "prox_l1", "prox_elastic_net", "soft_threshold",
     "LOGISTIC", "LASSO", "OBJECTIVES", "Objective",
     "PScopeConfig", "PScopeState", "pscope_outer_step", "run",
-    "run_distributed", "make_distributed_outer_step",
-    "partition", "recovery", "svrg", "solvers",
+    "run_scanned", "run_distributed", "run_distributed_scanned",
+    "make_distributed_outer_step",
+    "partition", "plan", "recovery", "svrg", "solvers",
     "Partition", "build_partition", "make_partition",
     "SolverConfig", "SolverSpec", "Trace",
 ]

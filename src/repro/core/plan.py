@@ -1,0 +1,353 @@
+"""Epoch gather plans for the fused lazy inner engine.
+
+The lazy inner loop (core/pscope) needs, at every inner step m, the
+catch-up staleness of each touched coordinate:
+
+    q[m, s] = m - last[cflat[m, s]]
+
+where ``last[j]`` is 1 + the latest step < m that touched column j.
+The PR-2 engine maintained ``last`` as a (d,) carry inside the scan —
+one gather and one scatter per step that exist purely for bookkeeping.
+But q depends only on the sampled index sequence ``idx`` and the CSR
+column structure, never on the data values or the iterate: the whole
+(M, S) staleness table can be hoisted out of the scan into one
+vectorized pass per epoch.  This module builds that plan.
+
+Two plan builders, selected by shard shape:
+
+* **row-membership** (b = 1, small shards): precompute once per shard
+  the boolean table ``member[r, s, r'] = cols[r, s] in row r'``.  Per
+  epoch, the latest prior touch of slot (m, s) is then a max over the
+  rows containing that column of "when was r' last sampled" — a tiny
+  (M, n_k) cummax plus one fused (M, k, n_k) masked reduction.  No
+  sort anywhere.
+* **sort-based** (the general path, any b): pack (col, step) into one
+  int32 key, single-operand ``jnp.sort`` it, and recover each entry's
+  group head with ``jnp.searchsorted`` — the predecessor of a group
+  head in sorted order is exactly the latest earlier touch of the same
+  column.  (A variadic ``argsort`` is ~5x slower than a single-key
+  sort under XLA CPU, which is why the key is packed.)
+
+Both produce identical plans (tests/test_fused_inner.py enforces it
+against a literal Python replay).
+
+`ShardStatics` holds the data-only precomputes — duplicate-column
+sums, within-row duplicate representatives, the membership table —
+which are computed **once per run** (not per epoch) and threaded
+through the outer loop by ``pscope.run``.
+
+`choose_inner_path` is the calibrated cost model behind
+``PScopeConfig(inner_path="auto")``; constants come from the measured
+BENCH_inner_loop.json sweep (see docs/kernels.md).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Above this many elements the member[r, s, r'] table is not built and
+# the sort-based plan is used instead (the table is O(n_k^2 * k)).
+MEMBER_TABLE_LIMIT = 48_000_000
+
+
+# ---------------------------------------------------------------------------
+# per-shard, data-only statics (computed once per run)
+# ---------------------------------------------------------------------------
+
+class ShardStatics(NamedTuple):
+    """Precomputes that depend only on the shard's CSR structure.
+
+    xdup     (n_k, k) float32  duplicate-summed row values:
+             xdup[r, s] = sum of vals[r, s'] over s' with
+             cols[r, s'] == cols[r, s].  Lets the b = 1 scan apply the
+             full per-column gradient with a plain elementwise multiply
+             instead of a scatter-add / re-gather pair.
+    rep_row  (n_k, k) int32    first slot in row r holding the same
+             column as slot s (the duplicate representative the fused
+             kernel's segment-sum keys on).
+    member   (n_k, k, n_k) bool or None
+             member[r, s, r'] = cols[r, s] in row r'.  Only built for
+             b = 1 shards under MEMBER_TABLE_LIMIT.
+    """
+
+    xdup: Array
+    rep_row: Array
+    member: Optional[Array]
+
+
+def member_table_ok(n_k: int, k: int, workers: int = 1,
+                    limit: int = MEMBER_TABLE_LIMIT) -> bool:
+    return workers * n_k * k * n_k <= limit
+
+
+def default_with_member(n_k: int, k: int, workers: int = 1,
+                        inner_batch: int = 1) -> bool:
+    """Production policy for building the membership table.
+
+    The two plan builders are exact equals; which is faster is a
+    backend question.  On CPU the packed-key single-operand sort beats
+    the (M, S, n_k) masked reduction at every measured grid cell, so
+    the table is only worth its memory on TPU, where sorts lower poorly
+    but the masked reduce is a native VPU pattern.
+    """
+    return (inner_batch == 1 and jax.default_backend() == "tpu"
+            and member_table_ok(n_k, k, workers))
+
+
+def shard_statics(vals_k: Array, cols_k: Array,
+                  with_member: bool = True) -> ShardStatics:
+    """Build the data-only statics for one (n_k, k) CSR shard."""
+    n_k, k = cols_k.shape
+
+    def per_row(v, c):
+        sc = jnp.sort(c)
+        pos = jnp.searchsorted(sc, c, side="left").astype(jnp.int32)
+        xd = jnp.take(jnp.zeros_like(v).at[pos].add(v), pos)
+        # representative = the smallest slot index of each duplicate
+        # group; pos is a stable group id within the row
+        slots = jnp.arange(k, dtype=jnp.int32)
+        rep = jnp.take(jnp.full((k,), k, jnp.int32).at[pos].min(slots), pos)
+        return xd, rep
+
+    xdup, rep_row = jax.vmap(per_row)(vals_k, cols_k)
+
+    member = None
+    if with_member:
+        sorted_cols = jnp.sort(cols_k, axis=-1)                  # (n_k, k)
+
+        def member_row(c_query):                                 # (k,)
+            def against(srow):
+                p = jnp.minimum(
+                    jnp.searchsorted(srow, c_query, side="left"), k - 1)
+                return jnp.take(srow, p) == c_query
+            return jax.vmap(against)(sorted_cols).T              # (k, n_k)
+
+        member = jax.vmap(member_row)(cols_k)                    # (n_k,k,n_k)
+    return ShardStatics(xdup=xdup, rep_row=rep_row, member=member)
+
+
+# ---------------------------------------------------------------------------
+# the epoch plan
+# ---------------------------------------------------------------------------
+
+class EpochPlan(NamedTuple):
+    """Everything the fused inner scan needs that is data-independent.
+
+    cflat  (M, S) int32   flat active columns per step (S = b * k)
+    q      (M, S) int32   catch-up staleness m - last[cflat[m, s]]
+    rep    (M, S) int32   within-step duplicate representative slot
+    qf     (d,)   int32   final catch-up counts M - last (one per coord)
+    """
+
+    cflat: Array
+    q: Array
+    rep: Array
+    qf: Array
+
+
+def build_epoch_plan(cols_k: Array, idx: Array, d: int,
+                     statics: Optional[ShardStatics] = None) -> EpochPlan:
+    """Hoist the whole epoch's catch-up bookkeeping out of the scan.
+
+    ``idx`` is the (M, b) sampled row sequence.  Dispatches to the
+    row-membership builder when ``statics`` carries a member table and
+    b == 1, else to the general sort-based builder.
+    """
+    M, b = idx.shape
+    if b == 1 and statics is not None and statics.member is not None:
+        return _plan_from_membership(cols_k, idx, d, statics)
+    return _plan_from_sort(cols_k, idx, d)
+
+
+def _last_sampled(idx_flat: Array, n_k: int) -> tuple[Array, Array]:
+    """ls_excl[m, r'] = 1 + latest step < m with idx == r' (0 if none);
+    last_row[r'] = the same over the whole epoch."""
+    M = idx_flat.shape[0]
+    steps = jnp.arange(M, dtype=jnp.int32)
+    onehot = jnp.where(idx_flat[:, None] == jnp.arange(n_k)[None, :],
+                       steps[:, None] + 1, 0)
+    ls_incl = jax.lax.cummax(onehot, axis=0)
+    ls_excl = jnp.concatenate(
+        [jnp.zeros((1, n_k), ls_incl.dtype), ls_incl[:-1]], axis=0)
+    return ls_excl, ls_incl[-1]
+
+
+def _plan_from_membership(cols_k: Array, idx: Array, d: int,
+                          statics: ShardStatics) -> EpochPlan:
+    """b = 1 fast path: no sort, mostly static lookups."""
+    M = idx.shape[0]
+    n_k, k = cols_k.shape
+    r = idx.reshape(-1)                                          # (M,)
+    ls_excl, last_row = _last_sampled(r, n_k)
+    mem = jnp.take(statics.member, r, axis=0)                    # (M, k, n_k)
+    last = jnp.max(jnp.where(mem, ls_excl[:, None, :], 0), axis=-1)
+    q = jnp.arange(M, dtype=jnp.int32)[:, None] - last           # (M, k)
+    cflat = jnp.take(cols_k, r, axis=0)                          # (M, k)
+    rep = jnp.take(statics.rep_row, r, axis=0)                   # (M, k)
+    last_final = jnp.zeros((d,), jnp.int32).at[cols_k.reshape(-1)].max(
+        jnp.broadcast_to(last_row[:, None], (n_k, k)).reshape(-1))
+    return EpochPlan(cflat=cflat, q=q, rep=rep, qf=M - last_final)
+
+
+def _plan_from_sort(cols_k: Array, idx: Array, d: int) -> EpochPlan:
+    """General path: one packed-key sort + searchsorted, any b.
+
+    The packed key col * M + step must fit int32, i.e. d * M < 2^31 —
+    at the paper's scales (d <= 2^18, M <= 2^12) this always holds;
+    an assertion guards the boundary.
+    """
+    M, b = idx.shape
+    k = cols_k.shape[-1]
+    S = b * k
+    assert d * M < (1 << 31), (
+        f"packed plan key overflows int32 for d={d}, M={M}")
+    cflat = jnp.take(cols_k, idx, axis=0).reshape(M, S)
+    N = M * S
+    col = cflat.reshape(-1)
+    step = jax.lax.broadcasted_iota(jnp.int32, (M, S), 0).reshape(-1)
+    key = col * M + step                     # unique per (col, step) group
+    skey = jnp.sort(key)
+    # one searchsorted serves both deliveries: group heads for the N
+    # touch entries, and (when cheap enough, see below) the run-end
+    # probe for all d final-staleness counts
+    qf_by_search = d <= 4 * N
+    if qf_by_search:
+        jq = (jnp.arange(d, dtype=jnp.int32) + 1) * M
+        pos_all = jnp.searchsorted(skey, jnp.concatenate([key, jq]),
+                                   side="left").astype(jnp.int32)
+        pos, qpos = pos_all[:N], pos_all[N:]
+    else:
+        pos = jnp.searchsorted(skey, key, side="left").astype(jnp.int32)
+    # the entry just before a group head is the latest earlier touch of
+    # the same column (duplicates inside a group share the key)
+    prev_key = jnp.take(skey, jnp.maximum(pos - 1, 0))
+    same_col = (prev_key // M == col) & (pos > 0)
+    last = jnp.where(same_col, prev_key % M + 1, 0)
+    q = (step - last).reshape(M, S)
+    # duplicate representative: smallest slot of each (col, step) group
+    slot = jax.lax.broadcasted_iota(jnp.int32, (M, S), 1).reshape(-1)
+    rep = jnp.take(jnp.full((N,), S, jnp.int32).at[pos].min(slot),
+                   pos).reshape(M, S)
+    # final staleness per coordinate: two exact delivery schemes behind
+    # the static size switch above.  When the touch count N is
+    # comparable to d, the scatter-free vectorized binary search wins
+    # (the last entry of coordinate j's run in sorted order sits just
+    # before the first key >= (j+1)*M); when N << d, XLA's serial
+    # scatter-max over the N touches beats paying d binary searches.
+    if qf_by_search:
+        j = jnp.arange(d, dtype=jnp.int32)
+        prevj = jnp.take(skey, jnp.maximum(qpos - 1, 0))
+        hit = (qpos > 0) & (prevj // M == j)
+        last_final = jnp.where(hit, prevj % M + 1, 0)
+    else:
+        last_final = jnp.zeros((d,), jnp.int32).at[col].max(step + 1)
+    return EpochPlan(cflat=cflat, q=q, rep=rep, qf=M - last_final)
+
+
+# ---------------------------------------------------------------------------
+# per-epoch gathers (anchor- and z-dependent, hoisted out of the scan)
+# ---------------------------------------------------------------------------
+
+class EpochGathers(NamedTuple):
+    """Step-indexed operands pre-gathered once per epoch.
+
+    The anchor w_t and the full gradient z are constant across an inner
+    epoch, so every step's gathers of them can be batched into single
+    (M, ...) operations instead of M scan-step gathers:
+
+    vb  (M, b, k)        microbatch values
+    yb  (M, b)           labels
+    zg  (M, S)           z at the active columns
+    sw  (M, b)           h'(x_i . w_anchor, y_i) — the anchor half of
+                         the VR coefficient, constant per epoch
+    xd  (M, k) or None   duplicate-summed values (b = 1 only): lets the
+                         scan apply the per-column gradient without a
+                         scatter-add / re-gather pair
+    """
+
+    vb: Array
+    yb: Array
+    zg: Array
+    sw: Array
+    xd: Optional[Array]
+
+
+def epoch_gathers(h_prime, w_anchor: Array, z: Array, vals_k: Array,
+                  yk: Array, idx: Array, cflat: Array,
+                  statics: Optional[ShardStatics] = None) -> EpochGathers:
+    M, b = idx.shape
+    k = vals_k.shape[-1]
+    vb = jnp.take(vals_k, idx, axis=0)                           # (M, b, k)
+    yb = jnp.take(yk, idx, axis=0)                               # (M, b)
+    zg = jnp.take(z, cflat, axis=0)                              # (M, S)
+    wg = jnp.take(w_anchor, cflat, axis=0).reshape(M, b, k)
+    sw = h_prime(jnp.sum(vb * wg, axis=-1), yb)                  # (M, b)
+    xd = None
+    if b == 1 and statics is not None:
+        xd = jnp.take(statics.xdup, idx.reshape(-1), axis=0)     # (M, k)
+    return EpochGathers(vb=vb, yb=yb, zg=zg, sw=sw, xd=xd)
+
+
+# ---------------------------------------------------------------------------
+# inner_path="auto": the calibrated cost model
+# ---------------------------------------------------------------------------
+
+# Per-epoch cost models in MICROSECONDS, fit to the measured
+# BENCH_inner_loop.json sweep on the reference container CPU
+# (docs/kernels.md tabulates model vs measurement).  Absolute numbers
+# are machine-specific; what the model must get right — and does, on
+# every measured cell with >= 1.3x margin — is the SIGN of
+# (lazy - dense), which is driven by two effects the terms encode:
+#
+# * dense pays (b + 5) O(d) vector passes per step, whose per-element
+#   cost STEPS UP as the working set falls out of each cache tier
+#   (_DENSE_TIER_US: ~0.55 ns/elem in-L2 to ~4 ns/elem in-DRAM);
+# * the fused lazy engine pays per touched slot (plan build + scan
+#   step math), two O(d) tails (final catch-up, plan delivery), and a
+#   fixed per-step dispatch floor — and its small working set stays
+#   cache-resident at every d in the sweep.
+_LAZY_SLOT_US = 0.30      # per touched slot per epoch (plan + scan)
+_LAZY_DIM_US = 0.04       # per coordinate (final catch-up + qf delivery)
+_LAZY_STEP_US = 15.0      # per inner step (scan dispatch floor)
+
+
+def _dense_tier_us_per_elem(d: int) -> float:
+    """Measured per-element cost of one dense O(d) pass by cache tier."""
+    if d <= (1 << 14):
+        return 0.55e-3
+    if d <= (1 << 16):
+        return 1.6e-3
+    return 4.0e-3
+
+
+def dense_epoch_cost(d: int, inner_steps: int, inner_batch: int) -> float:
+    """Modeled microseconds for one dense inner epoch."""
+    elems = float(inner_steps) * (inner_batch + 5) * d
+    return elems * _dense_tier_us_per_elem(d)
+
+
+def lazy_epoch_cost(d: int, inner_steps: int, inner_batch: int,
+                    nnz_per_row: int) -> float:
+    """Modeled microseconds for one fused lazy inner epoch."""
+    slots = float(inner_steps) * inner_batch * nnz_per_row
+    return (_LAZY_SLOT_US * slots + _LAZY_DIM_US * d
+            + _LAZY_STEP_US * inner_steps)
+
+
+def choose_inner_path(d: int, inner_steps: int, inner_batch: int,
+                      nnz_per_row: int, lazy_supported: bool = True) -> str:
+    """Pick "dense" or "lazy" from the calibrated per-epoch cost model.
+
+    ``nnz_per_row`` is the padded CSR slice width (max nnz per row) the
+    lazy engine would actually gather.  Objectives without a
+    linear-model h' cannot run lazy regardless of the model.
+    """
+    if not lazy_supported:
+        return "dense"
+    dense = dense_epoch_cost(d, inner_steps, inner_batch)
+    lazy = lazy_epoch_cost(d, inner_steps, inner_batch, nnz_per_row)
+    return "lazy" if lazy < dense else "dense"

@@ -17,22 +17,37 @@ Two execution modes:
     the inner scan contains no DP collectives (this is the paper's
     communication structure and what the dry-run lowers).
 
-Two inner-loop engines, selected by `PScopeConfig.inner_path`:
+Inner-loop engines, selected by `PScopeConfig.inner_path`:
   * "dense" — the microbatch VR gradient and the prox touch all d
-    coordinates every step, with the three elementwise stages (VR
-    combine, descent axpy, elastic-net prox) fused into one VMEM pass
-    by `kernels.ops.fused_prox_svrg` / `fused_prox_svrg_diff`.
-  * "lazy"  — the sparse engine for high-dimensional CSR data
+    coordinates every step, the three elementwise stages fused into one
+    VMEM pass by `kernels.ops.fused_prox_svrg` / `fused_prox_svrg_diff`.
+  * "lazy"  — the fused sparse engine for high-dimensional CSR data
     (Section 6): per-step work scales with the microbatch's nonzero
-    count, not d.  Coordinates outside a microbatch's support evolve
-    under the autonomous iteration u <- prox(u - eta z), which the
-    Lemma-11 closed form (`kernels.ops.lazy_prox`) replays exactly at
-    the next touch — see `_lazy_inner_loop`.  Requires a linear-model
-    objective (svrg.LINEAR_MODEL_H_PRIME) and data as a
+    count, not d.  The whole epoch's catch-up bookkeeping (which
+    coordinates each step touches and how stale they are) is hoisted
+    out of the scan into a precomputed gather plan (`core.plan`), so
+    each step is ONE gather + the Lemma-11 catch-up + the
+    support-restricted VR step + ONE scatter
+    (`kernels.ops.fused_lazy_epoch`; on TPU the entire epoch is a
+    single Pallas kernel with the iterate resident in VMEM).  Requires
+    a linear-model objective (svrg.LINEAR_MODEL_H_PRIME) and data as a
     `data.sparse.CSRMatrix`.
+  * "auto" — a calibrated cost model (`plan.choose_inner_path`) picks
+    dense vs lazy from (d, M, b, nnz) at run start.
 
-Both engines produce the same trajectory on the same sample sequence
-(up to fp32 reassociation); tests/test_lazy_pscope.py enforces it.
+All engines produce the same trajectory on the same sample sequence
+(up to fp32 reassociation); tests/test_lazy_pscope.py and
+tests/test_fused_inner.py enforce it (the PR-2 per-step scan survives
+as `_lazy_inner_loop_ref`, the reference oracle).
+
+Drivers: `run`/`run_distributed` execute the outer loop either as a
+classic Python loop (one dispatch + host sync per round — required for
+streaming `on_record` callbacks) or as a **zero-sync scanned driver**:
+the whole T-round trajectory is one `lax.scan` inside one jit, the
+objective/NNZ history accumulates in a device-side buffer, and the
+host sees exactly one transfer at the end.  `run_scanned` /
+`run_distributed_scanned` expose the device histories directly (the
+`core.solvers.Trace` recorder is fed from them post-hoc).
 
 p = 1 degenerates to proximal SVRG (Xiao & Zhang 2014), Corollary 2.
 """
@@ -42,11 +57,13 @@ import dataclasses
 import functools
 from typing import Callable, NamedTuple, Optional
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core import plan as plan_mod
 from repro.core import svrg
 from repro.core.prox import Regularizer, prox_elastic_net
 from repro.core.recovery import recovery_catch_up
@@ -55,6 +72,8 @@ from repro.data.sparse import CSRMatrix, dense_to_csr
 from repro.kernels import ops
 
 Array = jax.Array
+
+NNZ_TOL = 1e-8   # |w_i| above this counts as a nonzero (Section 7.3)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,9 +87,10 @@ class PScopeConfig:
     # worker k's iterate is excluded from the average (weights renormalized).
     # None = all participate (the paper's setting).
     use_linear_model_fastpath: bool = True
-    # Inner-loop engine: "dense" (full-vector updates, fused Pallas prox)
-    # or "lazy" (support-restricted updates + Lemma-11 catch-up; needs
-    # CSR data and a linear-model objective).
+    # Inner-loop engine: "dense" (full-vector updates, fused Pallas prox),
+    # "lazy" (epoch-planned support-restricted updates + Lemma-11
+    # catch-up; needs CSR data and a linear-model objective), or "auto"
+    # (calibrated cost model picks per run).
     inner_path: str = "dense"
 
 
@@ -118,37 +138,66 @@ def _inner_loop(loss_fn: Callable, reg: Regularizer, eta: float,
 
 
 # ---------------------------------------------------------------------------
-# Lazy sparse inner loop (support-restricted + Lemma-11 catch-up)
+# Fused lazy sparse inner loop (epoch gather plan + fused step)
 # ---------------------------------------------------------------------------
 
 def _lazy_inner_loop(h_prime: Callable, reg: Regularizer, eta: float,
                      u0: Array, w_anchor: Array, z: Array,
                      vals_k: Array, cols_k: Array, yk: Array,
-                     idx: Array) -> Array:
-    """M inner steps touching only each microbatch's nonzero columns.
+                     idx: Array,
+                     statics: Optional[plan_mod.ShardStatics] = None
+                     ) -> Array:
+    """M fused inner steps touching only each microbatch's columns.
 
-    Bookkeeping: `last[j]` = the inner step coordinate j is current at.
-    A step m first catches the microbatch's columns up by q = m - last
-    skipped autonomous prox steps via the Lemma-11 closed form, then
-    applies the support-restricted VR update, exactly reproducing the
-    dense trajectory; after the scan, `kernels.ops.lazy_prox` catches
-    every coordinate up to step M in one O(d) tile-aligned pass.
+    All catch-up bookkeeping — which columns each step touches, how
+    many autonomous prox steps each must replay (Lemma 11), which slots
+    are duplicates — depends only on the sampled index sequence, so it
+    is hoisted out of the scan into one vectorized plan build
+    (`core.plan.build_epoch_plan`).  The anchor-side operands (z and
+    w_anchor gathers, the anchor VR coefficients) are constant across
+    the epoch and pre-gathered in single (M, ...) passes.  What remains
+    per step is exactly one iterate gather, the catch-up + VR step +
+    elastic-net prox math, and one duplicate-safe scatter
+    (`kernels.ops.fused_lazy_epoch`; the PR-2 engine paid 4 gathers +
+    3 scatters + an int32 bookkeeping scatter per step).
+
+    `statics` carries the data-only shard precomputes (duplicate sums,
+    membership table) built once per run by the drivers; if None they
+    are rebuilt here (correct, but repays the precompute every epoch).
 
     The catch-up replays the STANDARD elastic-net prox iteration
         u <- S(u - eta z, eta lam2) / (1 + eta lam1)
     which equals the Lemma-11 linearized iteration at the effective
-    step size eta_eff = eta / (1 + eta lam1)  (S(ax, at) = a S(x, t));
+    step size eta_eff = eta / (1 + eta·lam1)  (S(ax, at) = a S(x, t));
     for pure L1 the two coincide.  This keeps the lazy engine bit-
     compatible with the dense path's prox convention.
+    """
+    if statics is None:
+        n_k, k = cols_k.shape
+        statics = plan_mod.shard_statics(
+            vals_k, cols_k,
+            with_member=plan_mod.default_with_member(
+                n_k, k, inner_batch=idx.shape[1]))
+    d = u0.shape[0]
+    eplan = plan_mod.build_epoch_plan(cols_k, idx, d, statics)
+    gathers = plan_mod.epoch_gathers(h_prime, w_anchor, z, vals_k, yk, idx,
+                                     eplan.cflat, statics)
+    return ops.fused_lazy_epoch(u0, z, eplan, gathers, h_prime=h_prime,
+                                eta=eta, lam1=reg.lam1, lam2=reg.lam2,
+                                inner_batch=idx.shape[1])
 
-    Duplicate columns in a microbatch (possible across rows, and within
-    a row for the with-replacement generators) are safe: catch-up and
-    prox are written as gather->set (all duplicates compute the same
-    value), while the gradient accumulates via scatter-add.
 
-    Per-step cost: O(b * max_nnz) gathers/scatters + one tiny kernel
-    call; the only O(d) pass is the final catch-up, once per inner
-    loop.  idx: (M, b).
+def _lazy_inner_loop_ref(h_prime: Callable, reg: Regularizer, eta: float,
+                         u0: Array, w_anchor: Array, z: Array,
+                         vals_k: Array, cols_k: Array, yk: Array,
+                         idx: Array) -> Array:
+    """The PR-2 per-step lazy scan — kept as the reference oracle.
+
+    Bookkeeping: `last[j]` = the inner step coordinate j is current at,
+    carried through the scan; each step gathers/catches up/updates its
+    microbatch's columns and stamps them.  Produces the identical
+    trajectory to `_lazy_inner_loop` (tests/test_fused_inner.py) and
+    anchors the `inner_loop/lazy/*` rows of BENCH_inner_loop.json.
     """
     lam1, lam2 = reg.lam1, reg.lam2
     eta_eff = eta / (1.0 + eta * lam1)
@@ -163,24 +212,14 @@ def _lazy_inner_loop(h_prime: Callable, reg: Regularizer, eta: float,
         cflat = cb.reshape(-1)
         z_t = jnp.take(z, cflat, axis=0)
 
-        # 1. Lemma-11 catch-up of the touched coordinates to step m.
-        # The gathered slice is tiny and unaligned, so it runs the
-        # branch-free jnp formulation (the same math the Pallas kernel
-        # body inlines) and fuses into the scan; the O(d) tile-aligned
-        # final pass below goes through the kernel.
         q = m - jnp.take(last, cflat, axis=0)
         u_t = recovery_catch_up(jnp.take(u, cflat, axis=0), z_t, q,
                                 eta_eff, lam1, lam2)
 
-        # 2. support-restricted VR gradient entries (includes the 1/b)
         w_active = jnp.take(w_anchor, cflat, axis=0).reshape(vb.shape)
         ge = svrg.sparse_vr_gradient_entries(h_prime, u_t.reshape(vb.shape),
                                              w_active, vb, yb)
 
-        # 3. the prox-SVRG step on the touched coordinates:
-        #    u_j <- prox_en(u_j - eta (g_j + z_j)); the affine part is a
-        #    duplicate-safe set, the gradient a duplicate-accumulating
-        #    scatter-add, the prox a gather->set.
         u = u.at[cflat].set(u_t - eta * z_t)
         u = u.at[cflat].add(-eta * ge.reshape(-1))
         u = u.at[cflat].set(prox_elastic_net(jnp.take(u, cflat, axis=0),
@@ -191,8 +230,6 @@ def _lazy_inner_loop(h_prime: Callable, reg: Regularizer, eta: float,
     steps = (jnp.arange(M, dtype=jnp.int32), idx)
     (u, last), _ = jax.lax.scan(step, (u0, jnp.zeros_like(u0, jnp.int32)),
                                 steps)
-    # final catch-up to step M: the one O(d) pass, tile-aligned for the
-    # Pallas kernel
     return ops.lazy_prox(u, z, M - last, eta=eta_eff, lam1=lam1, lam2=lam2)
 
 
@@ -223,24 +260,55 @@ def _as_csr_shards(Xp, yp) -> "tuple[CSRMatrix, Array]":
     return shaped, yp
 
 
+def _resolve_inner_path(obj: Objective, cfg: PScopeConfig,
+                        X) -> PScopeConfig:
+    """Materialize inner_path="auto" via the calibrated cost model.
+
+    `X` is whatever data layout the caller holds — worker-major dense,
+    worker-major CSR, flat dense or flat CSR; only its shape/nnz feed
+    the model.
+    """
+    if cfg.inner_path != "auto":
+        return cfg
+    if isinstance(X, CSRMatrix):
+        # CSR input can only feed the lazy engine — there is no dense
+        # view to fall back to, so the cost model has no choice to make
+        # (an unsupported objective still gets the clear
+        # _require_lazy_support error downstream)
+        return dataclasses.replace(cfg, inner_path="lazy")
+    lazy_ok = svrg.LINEAR_MODEL_H_PRIME.get(obj.name) is not None
+    d = X.shape[-1]
+    # one O(n*d) pass at setup; the padded CSR slice width is what
+    # the lazy engine would actually gather per row
+    k = int(np.max(np.sum(np.asarray(X) != 0, axis=-1), initial=1))
+    path = plan_mod.choose_inner_path(d, cfg.inner_steps, cfg.inner_batch,
+                                      k, lazy_supported=lazy_ok)
+    return dataclasses.replace(cfg, inner_path=path)
+
+
+def _sim_statics(csr_p: CSRMatrix, cfg: PScopeConfig) -> plan_mod.ShardStatics:
+    """Per-worker shard statics for simulation mode, built once per run."""
+    p, n_k, k = csr_p.vals.shape
+    with_member = plan_mod.default_with_member(n_k, k, workers=p,
+                                               inner_batch=cfg.inner_batch)
+    return jax.vmap(functools.partial(plan_mod.shard_statics,
+                                      with_member=with_member))(
+        csr_p.vals, csr_p.cols)
+
+
 # ---------------------------------------------------------------------------
 # Simulation-mode outer steps (worker axis = leading array dim, vmapped)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def pscope_outer_step(obj: Objective, reg: Regularizer, cfg: PScopeConfig,
-                      state: PScopeState, Xp: Array, yp: Array,
-                      participation: Optional[Array] = None) -> PScopeState:
-    """One outer iteration. Xp: (p, n_k, d), yp: (p, n_k).
-
-    Simulation mode: workers along axis 0, inner loops vmapped.
-    """
+def _outer_step_core(obj: Objective, reg: Regularizer, cfg: PScopeConfig,
+                     state: PScopeState, Xp: Array, yp: Array,
+                     participation: Optional[Array]) -> PScopeState:
+    """One dense outer iteration (unjitted core; scan-able)."""
     p, n_k, _ = Xp.shape
     w_t, key = state.w, state.key
     key, k_idx = jax.random.split(key)
 
     # --- phase 1: full gradient (the first "all-reduce") ------------------
-    # z = grad F(w_t) = mean over workers of local full gradient.
     local_grads = jax.vmap(lambda X, y: jax.grad(obj.loss_fn)(w_t, X, y))(Xp, yp)
     z = jnp.mean(local_grads, axis=0)
 
@@ -260,19 +328,13 @@ def pscope_outer_step(obj: Objective, reg: Regularizer, cfg: PScopeConfig,
                        key=key)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def pscope_outer_step_lazy(obj: Objective, reg: Regularizer,
-                           cfg: PScopeConfig, state: PScopeState,
-                           csr_p: CSRMatrix, yp: Array,
-                           participation: Optional[Array] = None
-                           ) -> PScopeState:
-    """Sparse outer iteration: csr_p holds worker-major (p, n_k, k) CSR.
-
-    Same three CALL phases as `pscope_outer_step`, but every phase is
-    support-restricted: the anchor gradient is one O(nnz) scatter-add
-    per worker, and the inner loops defer untouched coordinates to the
-    Lemma-11 catch-up.
-    """
+def _outer_step_lazy_core(obj: Objective, reg: Regularizer,
+                          cfg: PScopeConfig, state: PScopeState,
+                          csr_p: CSRMatrix, yp: Array,
+                          participation: Optional[Array],
+                          statics: Optional[plan_mod.ShardStatics]
+                          ) -> PScopeState:
+    """One fused-lazy outer iteration (unjitted core; scan-able)."""
     h_prime = _require_lazy_support(obj, cfg)
     p, n_k, _ = csr_p.vals.shape
     d = state.w.shape[0]
@@ -285,19 +347,55 @@ def pscope_outer_step_lazy(obj: Objective, reg: Regularizer,
             h_prime, w_t, v, c, y, d))(csr_p.vals, csr_p.cols, yp)
     z = jnp.mean(local_grads, axis=0)
 
-    # --- phase 2: lazy autonomous local learning --------------------------
+    # --- phase 2: fused lazy autonomous local learning --------------------
     idx = jax.vmap(
         lambda k: svrg.sample_microbatches(k, n_k, cfg.inner_steps,
                                            cfg.inner_batch)
     )(jax.random.split(k_idx, p))
     inner = functools.partial(_lazy_inner_loop, h_prime, reg, cfg.eta)
-    u_final = jax.vmap(
-        lambda v, c, yk, ixk: inner(w_t, w_t, z, v, c, yk, ixk))(
-            csr_p.vals, csr_p.cols, yp, idx)
+    if statics is None:
+        u_final = jax.vmap(
+            lambda v, c, yk, ixk: inner(w_t, w_t, z, v, c, yk, ixk))(
+                csr_p.vals, csr_p.cols, yp, idx)
+    else:
+        u_final = jax.vmap(
+            lambda v, c, yk, ixk, st: inner(w_t, w_t, z, v, c, yk, ixk,
+                                            statics=st))(
+                csr_p.vals, csr_p.cols, yp, idx, statics)
 
     # --- phase 3: cooperative averaging -----------------------------------
     return PScopeState(w=_average(u_final, participation), t=state.t + 1,
                        key=key)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def pscope_outer_step(obj: Objective, reg: Regularizer, cfg: PScopeConfig,
+                      state: PScopeState, Xp: Array, yp: Array,
+                      participation: Optional[Array] = None) -> PScopeState:
+    """One outer iteration. Xp: (p, n_k, d), yp: (p, n_k).
+
+    Simulation mode: workers along axis 0, inner loops vmapped.
+    """
+    return _outer_step_core(obj, reg, cfg, state, Xp, yp, participation)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def pscope_outer_step_lazy(obj: Objective, reg: Regularizer,
+                           cfg: PScopeConfig, state: PScopeState,
+                           csr_p: CSRMatrix, yp: Array,
+                           participation: Optional[Array] = None,
+                           statics: Optional[plan_mod.ShardStatics] = None
+                           ) -> PScopeState:
+    """Sparse outer iteration: csr_p holds worker-major (p, n_k, k) CSR.
+
+    Same three CALL phases as `pscope_outer_step`, but every phase is
+    support-restricted: the anchor gradient is one O(nnz) scatter-add
+    per worker, and the inner loops run the epoch-planned fused engine.
+    Pass `statics` (from `plan.shard_statics`, vmapped) to amortize the
+    data-only precomputes across rounds — `run` does.
+    """
+    return _outer_step_lazy_core(obj, reg, cfg, state, csr_p, yp,
+                                 participation, statics)
 
 
 def _average(u_final: Array, participation: Optional[Array]) -> Array:
@@ -308,45 +406,198 @@ def _average(u_final: Array, participation: Optional[Array]) -> Array:
         jnp.sum(wts), 1.0)
 
 
-def _objective_value_fn(obj: Objective, reg: Regularizer, Xp, yp,
-                        cfg: PScopeConfig):
-    """jit'd w -> P(w) over the full dataset, matching the data layout."""
+def _objective_value_device(obj: Objective, reg: Regularizer, Xp, yp):
+    """w -> P(w) over the full dataset as a pure device function."""
     if isinstance(Xp, CSRMatrix):
         h_loss = svrg.LINEAR_MODEL_H_LOSS[obj.name]
         k = Xp.vals.shape[-1]
         vals = Xp.vals.reshape(-1, k)
         cols = Xp.cols.reshape(-1, k)
         yflat = yp.reshape(-1)
-        return jax.jit(lambda w: svrg.sparse_linear_model_loss(
-            h_loss, w, vals, cols, yflat) + reg.value(w))
+        return lambda w: svrg.sparse_linear_model_loss(
+            h_loss, w, vals, cols, yflat) + reg.value(w)
     Xflat = Xp.reshape(-1, Xp.shape[-1])
     yflat = yp.reshape(-1)
-    return jax.jit(lambda w: obj.loss(w, Xflat, yflat) + reg.value(w))
+    return lambda w: obj.loss(w, Xflat, yflat) + reg.value(w)
+
+
+def _objective_value_fn(obj: Objective, reg: Regularizer, Xp, yp,
+                        cfg: PScopeConfig):
+    """jit'd w -> P(w), matching the data layout."""
+    return jax.jit(_objective_value_device(obj, reg, Xp, yp))
+
+
+def _resolve_driver(driver: str, on_record) -> str:
+    """Validate and materialize the run/run_distributed driver choice."""
+    if driver not in ("auto", "scan", "python"):
+        raise ValueError(f"unknown driver {driver!r}")
+    if driver == "scan" and on_record is not None:
+        raise ValueError("driver='scan' records on device; on_record "
+                         "streaming needs driver='python' (or feed a "
+                         "Trace post-hoc via the *_scanned drivers)")
+    if driver == "auto":
+        return "python" if on_record is not None else "scan"
+    return driver
+
+
+def _stack_participation(schedule: Optional[Callable[[int], Array]],
+                         T: int, p: int) -> Optional[Array]:
+    """Host-evaluate a participation schedule into a (T, p) scan input."""
+    if schedule is None:
+        return None
+    rows = []
+    for t in range(T):
+        part = schedule(t)
+        rows.append(jnp.ones((p,)) if part is None else jnp.asarray(part))
+    return jnp.stack(rows)
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+
+def _prepare_sim(obj: Objective, reg: Regularizer, Xp, yp,
+                 cfg: PScopeConfig):
+    """Resolve auto path / CSR conversion / statics for simulation mode."""
+    cfg = _resolve_inner_path(obj, cfg, Xp)
+    statics = None
+    if cfg.inner_path == "lazy":
+        _require_lazy_support(obj, cfg)
+        Xp, yp = _as_csr_shards(Xp, yp)
+        statics = _sim_statics(Xp, cfg)
+    elif isinstance(Xp, CSRMatrix):
+        raise ValueError("dense inner_path cannot consume CSRMatrix data; "
+                         "set PScopeConfig(inner_path='lazy')")
+    return cfg, Xp, yp, statics
+
+
+def _scan_with_recording(step_fn, record, state, parts, T: int,
+                         record_every: int):
+    """Scan T outer rounds, evaluating `record` only on recorded rounds.
+
+    record_every == 1 records inline; otherwise the rounds are chunked
+    (record_every per chunk, one record per chunk, trailing remainder
+    rounds advanced unrecorded) so the full-dataset objective and the
+    NNZ reduction are never computed for rounds the caller will drop —
+    matching the Python driver's evaluation count exactly.
+    """
+    def inner(st, part_t):
+        return step_fn(st, part_t), None
+
+    if record_every == 1:
+        def body(st, part_t):
+            st2 = step_fn(st, part_t)
+            return st2, record(st2.w)
+        return jax.lax.scan(body, state, parts, length=T)
+
+    full, rem = divmod(T, record_every)
+    parts_main = parts_rem = None
+    if parts is not None:
+        split = full * record_every
+        parts_main = parts[:split].reshape(full, record_every,
+                                           *parts.shape[1:])
+        parts_rem = parts[split:]
+
+    def chunk(st, part_chunk):
+        st, _ = jax.lax.scan(inner, st, part_chunk, length=record_every)
+        return st, record(st.w)
+
+    state, recs = jax.lax.scan(chunk, state, parts_main, length=full)
+    state, _ = jax.lax.scan(inner, state, parts_rem, length=rem)
+    return state, recs
+
+
+# bounded: each entry pins a compiled whole-trajectory executable; a
+# hyperparameter sweep must not accumulate them unboundedly
+@functools.lru_cache(maxsize=32)
+def _sim_trajectory_fn(obj: Objective, reg: Regularizer, cfg: PScopeConfig,
+                       record_every: int = 1):
+    """Compiled T-round simulation trajectory, cached per (obj, reg, cfg,
+    record_every)."""
+    lazy = cfg.inner_path == "lazy"
+
+    def trajectory(w0, Xp, yp, parts, statics):
+        obj_val = _objective_value_device(obj, reg, Xp, yp)
+        state = init_state(w0, cfg.seed)
+
+        def record(w):
+            return obj_val(w), jnp.sum(jnp.abs(w) > NNZ_TOL)
+
+        def step_fn(st, part_t):
+            if lazy:
+                return _outer_step_lazy_core(obj, reg, cfg, st, Xp, yp,
+                                             part_t, statics)
+            return _outer_step_core(obj, reg, cfg, st, Xp, yp, part_t)
+
+        v0, nnz0 = record(state.w)
+        state, (vals, nnzs) = _scan_with_recording(
+            step_fn, record, state, parts, cfg.outer_steps, record_every)
+        return (state.w, jnp.concatenate([v0[None], vals]),
+                jnp.concatenate([nnz0[None], nnzs]))
+
+    # the iterate buffer is donated into the scan carry (run_scanned
+    # hands over a fresh copy, so callers keep their w0)
+    return jax.jit(trajectory, donate_argnums=(0,))
+
+
+def run_scanned(obj: Objective, reg: Regularizer, Xp, yp: Array, w0: Array,
+                cfg: PScopeConfig,
+                participation_schedule: Optional[Callable] = None,
+                record_every: int = 1):
+    """The zero-sync simulation driver: T outer rounds in ONE compiled
+    program.
+
+    The outer loop is a `lax.scan`; every `record_every`-th round's
+    objective P(w_t) and iterate NNZ are recorded into device-side
+    history buffers via the layout-matched loss (sparse CSR loss on the
+    lazy path) — unrecorded rounds skip the evaluation entirely — and
+    the host synchronizes exactly once, on the final transfer.  The
+    state buffers are donated to the scan, so the iterate is updated in
+    place round over round.
+
+    Returns (w_T, values, nnz) — numpy arrays of T // record_every + 1
+    entries, index 0 being the initial iterate.
+    """
+    cfg, Xp, yp, statics = _prepare_sim(obj, reg, Xp, yp, cfg)
+    p = (Xp.vals.shape[0] if isinstance(Xp, CSRMatrix) else Xp.shape[0])
+    parts = _stack_participation(participation_schedule, cfg.outer_steps, p)
+    compiled = _sim_trajectory_fn(obj, reg, cfg, record_every)
+    w0d = jnp.array(w0, dtype=jnp.float32, copy=True)
+    w, values, nnzs = compiled(w0d, Xp, yp, parts, statics)
+    return np.asarray(w), np.asarray(values), np.asarray(nnzs)
 
 
 def run(obj: Objective, reg: Regularizer, Xp, yp: Array, w0: Array,
         cfg: PScopeConfig, record_every: int = 1,
         participation_schedule: Optional[Callable[[int], Array]] = None,
-        on_record: Optional[Callable[[Array, float], None]] = None):
+        on_record: Optional[Callable[[Array, float], None]] = None,
+        driver: str = "auto"):
     """Full pSCOPE driver. Returns (w_T, history of P(w_t)).
 
     `Xp` is worker-major data: a dense (p, n_k, d) array, or a
     `CSRMatrix` with (p, n_k, k) row-slices.  With
     cfg.inner_path == "lazy" dense input is auto-converted to CSR so
-    callers can A/B the engines by flipping the config alone.
+    callers can A/B the engines by flipping the config alone;
+    "auto" lets the calibrated cost model pick.
 
-    `on_record(w, value)` fires at every history append (including the
-    initial iterate) so callers — e.g. the `core.solvers.Trace`
-    recorder — can stream wall-clock/NNZ/communication metrics without
-    re-running the objective.
+    `driver` selects the outer-loop execution:
+      * "scan"   — the zero-sync compiled trajectory (`run_scanned`):
+        one dispatch, one host transfer, history recorded on device.
+        Incompatible with `on_record` (which needs per-round streaming).
+      * "python" — the classic loop: one dispatch + objective sync per
+        round; `on_record(w, value)` fires at every history append.
+      * "auto"   — "scan" unless an `on_record` callback is given.
     """
+    driver = _resolve_driver(driver, on_record)
+    if driver == "scan":
+        w, values, _ = run_scanned(obj, reg, Xp, yp, w0, cfg,
+                                   participation_schedule, record_every)
+        # match the python driver's return type (a device array)
+        return jnp.asarray(w), [float(v) for v in values]
+
+    cfg, Xp, yp, statics = _prepare_sim(obj, reg, Xp, yp, cfg)
     if cfg.inner_path == "lazy":
-        Xp, yp = _as_csr_shards(Xp, yp)
-        _require_lazy_support(obj, cfg)
-        step_fn = pscope_outer_step_lazy
-    elif isinstance(Xp, CSRMatrix):
-        raise ValueError("dense inner_path cannot consume CSRMatrix data; "
-                         "set PScopeConfig(inner_path='lazy')")
+        step_fn = functools.partial(pscope_outer_step_lazy, statics=statics)
     else:
         step_fn = pscope_outer_step
 
@@ -374,6 +625,24 @@ def run(obj: Objective, reg: Regularizer, Xp, yp: Array, w0: Array,
 # Distributed execution: shard_map over a real mesh axis.
 # ---------------------------------------------------------------------------
 
+def _distributed_statics(cfg: PScopeConfig, mesh, axis: str,
+                         csr: CSRMatrix, p: int):
+    """Build per-shard statics once, sharded over the mesh axis."""
+    n_k = csr.vals.shape[0] // p
+    k = csr.vals.shape[-1]
+    with_member = plan_mod.default_with_member(n_k, k, workers=p,
+                                               inner_batch=cfg.inner_batch)
+    build = functools.partial(plan_mod.shard_statics,
+                              with_member=with_member)
+    out_specs = plan_mod.ShardStatics(
+        xdup=P(axis), rep_row=P(axis),
+        member=P(axis) if with_member else None)
+    sharded = compat.shard_map(build, mesh=mesh,
+                               in_specs=(P(axis), P(axis)),
+                               out_specs=out_specs, check_vma=False)
+    return jax.jit(sharded)(csr.vals, csr.cols)
+
+
 def make_distributed_outer_step(obj: Objective, reg: Regularizer,
                                 cfg: PScopeConfig, mesh,
                                 axis: str = "data"):
@@ -381,17 +650,27 @@ def make_distributed_outer_step(obj: Objective, reg: Regularizer,
 
     Dense layout: X (p * n_k, d) sharded over `axis` on dim 0; w
     replicated.  With cfg.inner_path == "lazy" the step instead takes a
-    flat `CSRMatrix` (n, k) whose rows are sharded over `axis`, and the
-    inner scan runs the support-restricted lazy engine.  Either way the
-    shard_map body performs exactly two collectives (pmean of the
-    anchor gradient, pmean of the final iterates); the inner scan is
-    collective-free — this is the CALL communication structure.
+    flat `CSRMatrix` (n, k) whose rows are sharded over `axis` (plus
+    optional sharded `plan.ShardStatics`), and the inner scan runs the
+    fused epoch-planned engine.  Either way the shard_map body performs
+    exactly two collectives (pmean of the anchor gradient, pmean of the
+    final iterates); the inner scan is collective-free — this is the
+    CALL communication structure.
     """
+    core = make_distributed_outer_step_core(obj, reg, cfg, mesh, axis)
+    return jax.jit(core)
+
+
+def make_distributed_outer_step_core(obj: Objective, reg: Regularizer,
+                                     cfg: PScopeConfig, mesh,
+                                     axis: str = "data"):
+    """Unjitted distributed outer step (composable into the scanned
+    driver; `make_distributed_outer_step` is its jitted wrapper)."""
     lazy = cfg.inner_path == "lazy"
     h_prime = (_require_lazy_support(obj, cfg) if lazy
                else _pick_h_prime(obj, cfg))
 
-    def body(w_t, key, Xk_or_vals, yk, cols_k=None):
+    def body(w_t, key, Xk_or_vals, yk, cols_k=None, statics=None):
         # phase 1: one all-reduce for the anchor (full) gradient
         if lazy:
             z_local = svrg.sparse_linear_model_full_gradient(
@@ -406,56 +685,129 @@ def make_distributed_outer_step(obj: Objective, reg: Regularizer,
                                        cfg.inner_steps, cfg.inner_batch)
         if lazy:
             u = _lazy_inner_loop(h_prime, reg, cfg.eta, w_t, w_t, z,
-                                 Xk_or_vals, cols_k, yk, idx)
+                                 Xk_or_vals, cols_k, yk, idx,
+                                 statics=statics)
         else:
             u = _inner_loop(obj.loss_fn, reg, cfg.eta, w_t, w_t, z,
                             Xk_or_vals, yk, idx, h_prime=h_prime)
         # phase 3: one all-reduce to average iterates
         return jax.lax.pmean(u, axis)
 
-    n_data = 3 if lazy else 2
-    shard_body = compat.shard_map(
-        body, mesh=mesh,
-        in_specs=(P(), P()) + (P(axis),) * n_data,
-        out_specs=P(),
-        # the inner scan carry starts replicated (u0 = w_t) and becomes
-        # device-varying through per-shard sampling; disable the VMA
-        # consistency check rather than pcast-ing every carry leaf
-        check_vma=False,
-    )
+    def make_shard_body(with_statics: bool):
+        n_data = 3 if lazy else 2
+        extra = ((P(axis),) if with_statics else ())
+        in_specs = (P(), P()) + (P(axis),) * n_data + extra
+        fn = body
+        if with_statics:
+            fn = lambda w, key, vals, y, cols, st: body(w, key, vals, y,
+                                                        cols, statics=st)
+        return compat.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=P(),
+            # the inner scan carry starts replicated (u0 = w_t) and becomes
+            # device-varying through per-shard sampling; disable the VMA
+            # consistency check rather than pcast-ing every carry leaf
+            check_vma=False,
+        )
 
     if lazy:
-        @jax.jit
-        def outer_step(state: PScopeState, csr: CSRMatrix,
-                       y: Array) -> PScopeState:
+        def outer_step(state: PScopeState, csr: CSRMatrix, y: Array,
+                       statics=None) -> PScopeState:
             key, sub = jax.random.split(state.key)
-            w_next = shard_body(state.w, sub, csr.vals, y, csr.cols)
+            if statics is None:
+                w_next = make_shard_body(False)(state.w, sub, csr.vals, y,
+                                                csr.cols)
+            else:
+                w_next = make_shard_body(True)(state.w, sub, csr.vals, y,
+                                               csr.cols, statics)
             return PScopeState(w=w_next, t=state.t + 1, key=key)
     else:
-        @jax.jit
-        def outer_step(state: PScopeState, X: Array, y: Array) -> PScopeState:
+        def outer_step(state: PScopeState, X: Array, y: Array,
+                       statics=None) -> PScopeState:
             key, sub = jax.random.split(state.key)
-            w_next = shard_body(state.w, sub, X, y)
+            w_next = make_shard_body(False)(state.w, sub, X, y)
             return PScopeState(w=w_next, t=state.t + 1, key=key)
 
     return outer_step
 
 
+def _prepare_distributed(obj: Objective, reg: Regularizer, X, y,
+                         cfg: PScopeConfig, mesh, axis: str):
+    cfg = _resolve_inner_path(obj, cfg, X)
+    if cfg.inner_path == "lazy" and not isinstance(X, CSRMatrix):
+        X = dense_to_csr(X)
+    statics = None
+    if cfg.inner_path == "lazy":
+        p = mesh.shape[axis]
+        statics = _distributed_statics(cfg, mesh, axis, X, p)
+    return cfg, X, statics
+
+
+# bounded: each entry pins a compiled whole-trajectory executable (and a
+# Mesh); a hyperparameter sweep must not accumulate them unboundedly
+@functools.lru_cache(maxsize=32)
+def _distributed_trajectory_fn(obj: Objective, reg: Regularizer,
+                               cfg: PScopeConfig, mesh, axis: str,
+                               record_every: int = 1):
+    """Compiled distributed trajectory, cached per (obj, reg, cfg, mesh)."""
+    step_core = make_distributed_outer_step_core(obj, reg, cfg, mesh, axis)
+
+    def trajectory(w0, X, y, statics):
+        state = init_state(w0, cfg.seed)
+        obj_val = _objective_value_device(obj, reg, X, y)
+
+        def record(w):
+            return obj_val(w), jnp.sum(jnp.abs(w) > NNZ_TOL)
+
+        def step_fn(st, _):
+            return step_core(st, X, y, statics)
+
+        v0, nnz0 = record(state.w)
+        state, (vals, nnzs) = _scan_with_recording(
+            step_fn, record, state, None, cfg.outer_steps, record_every)
+        return (state.w, jnp.concatenate([v0[None], vals]),
+                jnp.concatenate([nnz0[None], nnzs]))
+
+    return jax.jit(trajectory, donate_argnums=(0,))
+
+
+def run_distributed_scanned(obj: Objective, reg: Regularizer, X, y: Array,
+                            w0: Array, cfg: PScopeConfig, mesh,
+                            axis: str = "data", record_every: int = 1):
+    """Zero-sync distributed driver: the T-round shard_map trajectory as
+    one compiled scan with device-side history (cf. `run_scanned`).
+
+    Returns (w_T, values, nnz) as numpy arrays of T // record_every + 1
+    entries.
+    """
+    cfg, X, statics = _prepare_distributed(obj, reg, X, y, cfg, mesh, axis)
+    compiled = _distributed_trajectory_fn(obj, reg, cfg, mesh, axis,
+                                          record_every)
+    w0d = jnp.array(w0, dtype=jnp.float32, copy=True)
+    w, values, nnzs = compiled(w0d, X, y, statics)
+    return np.asarray(w), np.asarray(values), np.asarray(nnzs)
+
+
 def run_distributed(obj: Objective, reg: Regularizer, X, y: Array,
                     w0: Array, cfg: PScopeConfig, mesh, axis: str = "data",
                     record_every: int = 1,
-                    on_record: Optional[Callable[[Array, float], None]] = None):
-    """Distributed driver; `X` is dense (n, d) or a flat CSRMatrix (n, k)."""
-    if cfg.inner_path == "lazy" and not isinstance(X, CSRMatrix):
-        X = dense_to_csr(X)
-    step = make_distributed_outer_step(obj, reg, cfg, mesh, axis)
+                    on_record: Optional[Callable[[Array, float], None]] = None,
+                    driver: str = "auto"):
+    """Distributed driver; `X` is dense (n, d) or a flat CSRMatrix (n, k).
+
+    `driver` works as in `run`: "scan" compiles the whole trajectory
+    (one host sync), "python" streams per round for `on_record`.
+    """
+    driver = _resolve_driver(driver, on_record)
+    if driver == "scan":
+        w, values, _ = run_distributed_scanned(obj, reg, X, y, w0, cfg,
+                                               mesh, axis, record_every)
+        return jnp.asarray(w), [float(v) for v in values]
+
+    cfg, X, statics = _prepare_distributed(obj, reg, X, y, cfg, mesh, axis)
+    step = jax.jit(make_distributed_outer_step_core(obj, reg, cfg, mesh,
+                                                    axis))
     state = init_state(w0, cfg.seed)
-    if isinstance(X, CSRMatrix):
-        h_loss = svrg.LINEAR_MODEL_H_LOSS[obj.name]
-        obj_val = jax.jit(lambda w: svrg.sparse_linear_model_loss(
-            h_loss, w, X.vals, X.cols, y) + reg.value(w))
-    else:
-        obj_val = jax.jit(lambda w: obj.loss(w, X, y) + reg.value(w))
+    obj_val = jax.jit(_objective_value_device(obj, reg, X, y))
 
     def emit(w, history):
         v = float(obj_val(w))
@@ -466,7 +818,7 @@ def run_distributed(obj: Objective, reg: Regularizer, X, y: Array,
     history: list = []
     emit(state.w, history)
     for t in range(cfg.outer_steps):
-        state = step(state, X, y)
+        state = step(state, X, y, statics)
         if (t + 1) % record_every == 0:
             emit(state.w, history)
     return state.w, history

@@ -47,7 +47,10 @@ from repro.core.prox import Regularizer
 
 Array = jax.Array
 
-NNZ_TOL = 1e-8   # |w_i| above this counts as a nonzero (Section 7.3)
+# |w_i| above this counts as a nonzero (Section 7.3) — the single
+# definition lives in pscope so the scanned drivers' device-side NNZ
+# histories and Trace.record's host-side reduction can never diverge.
+NNZ_TOL = pscope.NNZ_TOL
 
 
 # ---------------------------------------------------------------------------
@@ -60,6 +63,13 @@ class Trace:
 
     All lists are index-aligned; entry 0 is the initial iterate (zero
     communication, ~zero seconds).  `comm` and `seconds` are cumulative.
+
+    `seconds` measures SOLVER work only: the cost of recording itself —
+    the NNZ device reduction, the list bookkeeping, anything charged via
+    `charge_overhead` — accumulates in an overhead counter that is
+    subtracted from every subsequent timestamp, so cheap-step solvers
+    are not billed for their own instrumentation (the table2/fig2a
+    inflation bug).
     """
 
     solver: str
@@ -75,24 +85,68 @@ class Trace:
     w_final: Optional[Array] = None
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
     _t0: Optional[float] = dataclasses.field(default=None, repr=False)
+    _overhead: float = dataclasses.field(default=0.0, repr=False)
 
     # -- recording --------------------------------------------------------
     def start(self) -> "Trace":
         self._t0 = time.perf_counter()
         return self
 
-    def record(self, w, value: float, comm_increment: float = 0.0) -> None:
+    @property
+    def overhead_seconds(self) -> float:
+        """Cumulative recording overhead excluded from `seconds`."""
+        return self._overhead
+
+    def charge_overhead(self, seconds: float) -> None:
+        """Exclude `seconds` of non-solver work (e.g. a caller's
+        objective evaluation done purely for recording) from all
+        subsequent wall-clock timestamps."""
+        self._overhead += float(seconds)
+
+    def record(self, w, value: float, comm_increment: float = 0.0, *,
+               nnz: Optional[int] = None) -> None:
         """Append one round: iterate w (array or pytree — the DL train
         loop passes whole param trees), objective value, communication
-        rounds spent since the previous record."""
+        rounds spent since the previous record.  Pass `nnz` to skip the
+        device reduction when the caller already holds it (the scanned
+        drivers record NNZ on device); `w` may then be None."""
+        t_in = time.perf_counter()
         if self._t0 is None:
-            self.start()
+            self._t0 = t_in
         self.values.append(float(value))
-        self.nnz.append(sum(int(jnp.sum(jnp.abs(leaf) > NNZ_TOL))
-                            for leaf in jax.tree_util.tree_leaves(w)))
+        if nnz is None:
+            nnz = sum(int(jnp.sum(jnp.abs(leaf) > NNZ_TOL))
+                      for leaf in jax.tree_util.tree_leaves(w))
+        self.nnz.append(int(nnz))
         prev = self.comm[-1] if self.comm else 0.0
         self.comm.append(prev + float(comm_increment))
-        self.seconds.append(time.perf_counter() - self._t0)
+        self.seconds.append(t_in - self._t0 - self._overhead)
+        # everything this call did after t_in is recording overhead
+        self._overhead += time.perf_counter() - t_in
+
+    def record_history(self, values, nnzs, comm_per_record: float,
+                       total_seconds: float) -> None:
+        """Feed a device-recorded trajectory post-hoc (the zero-sync
+        scanned drivers, `pscope.run_scanned`): index 0 is the initial
+        iterate.  The compiled trajectory admits no per-round
+        timestamps — one host sync total — so `total_seconds` (measured
+        around the compiled call) is attributed linearly across rounds,
+        exact for the uniform per-round cost of the SVRG family.
+
+        Timing boundary: the scanned driver's in-program objective/NNZ
+        evaluations remain inside `total_seconds`, exactly as the
+        python-loop solvers' in-loop objective evaluations remain
+        inside their `seconds` — the methodologies are symmetric; only
+        the host-side recording mechanics (this loop, `record`'s NNZ
+        reduction) are excluded via the overhead accumulator."""
+        n = len(values)
+        rounds = max(n - 1, 1)
+        for i, (v, nz) in enumerate(zip(values, nnzs)):
+            self.values.append(float(v))
+            self.nnz.append(int(nz))
+            prev = self.comm[-1] if self.comm else 0.0
+            self.comm.append(prev + (comm_per_record if i else 0.0))
+            self.seconds.append(total_seconds * i / rounds)
 
     def recorder(self, comm_per_record: float) -> Callable[[Array, float], None]:
         """An `on_record(w, value)` callback charging `comm_per_record`
@@ -305,6 +359,16 @@ def _pscope_config(obj, reg, part, cfg, inner_path: str):
         outer_steps=cfg.rounds, seed=cfg.seed, inner_path=inner_path)
 
 
+def _run_pscope_scanned(obj, reg, Xp, yp, w0, pcfg, trace):
+    """Drive pSCOPE through the zero-sync scanned driver and feed the
+    Trace from the device-side history — no per-round host sync."""
+    t0 = time.perf_counter()
+    w, values, nnzs = pscope.run_scanned(obj, reg, Xp, yp, w0, pcfg)
+    trace.record_history(values, nnzs, comm_per_record=2.0,
+                         total_seconds=time.perf_counter() - t0)
+    return w
+
+
 @register("pscope",
           summary="proximal SCOPE under the CALL framework (this paper)",
           paper_ref="Algorithm 1; Theorems 1-2",
@@ -312,16 +376,16 @@ def _pscope_config(obj, reg, part, cfg, inner_path: str):
           comm_model="2 all-reduces per outer round")
 def _run_pscope(obj, reg, part, cfg, trace):
     # extras={"inner_path": "lazy"} flips the same solver onto the sparse
-    # engine; "pscope_lazy" below is the registry-level A/B entry.
+    # engine ("auto" lets the cost model pick); "pscope_lazy" below is
+    # the registry-level A/B entry.
     pcfg = _pscope_config(obj, reg, part, cfg,
                           cfg.extras.get("inner_path", "dense"))
-    w, _ = pscope.run(obj, reg, part.Xp, part.yp, _w0(part, cfg), pcfg,
-                      on_record=trace.recorder(2.0))
-    return w
+    return _run_pscope_scanned(obj, reg, part.Xp, part.yp, _w0(part, cfg),
+                               pcfg, trace)
 
 
 @register("pscope_lazy",
-          summary="pSCOPE with the sparse lazy-prox inner engine",
+          summary="pSCOPE with the fused sparse lazy-prox inner engine",
           paper_ref="Algorithm 1 + Section 6 (Lemma 11 recovery)",
           distributed=True,
           comm_model="2 all-reduces per outer round")
@@ -330,9 +394,8 @@ def _run_pscope_lazy(obj, reg, part, cfg, trace):
     # dense->CSR conversion happens at most once per Partition, not
     # once per solver run (regression-tested).
     pcfg = _pscope_config(obj, reg, part, cfg, "lazy")
-    w, _ = pscope.run(obj, reg, part.csr_p, part.yp, _w0(part, cfg), pcfg,
-                      on_record=trace.recorder(2.0))
-    return w
+    return _run_pscope_scanned(obj, reg, part.csr_p, part.yp,
+                               _w0(part, cfg), pcfg, trace)
 
 
 @register("fista",

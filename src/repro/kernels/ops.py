@@ -18,6 +18,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.lazy_prox import lazy_prox_pallas
 from repro.kernels.fused_prox_svrg import (fused_prox_svrg_pallas,
                                            fused_prox_svrg_diff_pallas)
+from repro.kernels.sparse_inner import fused_lazy_epoch_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 
 _LANES = 128
@@ -29,6 +30,12 @@ def _interpret() -> bool:
 
 def _use_pallas() -> bool:
     return os.environ.get("USE_PALLAS", "1") != "0"
+
+
+def _force_epoch_kernel() -> bool:
+    """REPRO_SPARSE_INNER_KERNEL=1 forces the whole-epoch Pallas kernel
+    even off-TPU (interpret mode) — used by tests and kernel A/Bs."""
+    return os.environ.get("REPRO_SPARSE_INNER_KERNEL", "0") == "1"
 
 
 def _to_tiles(x: jax.Array):
@@ -93,6 +100,76 @@ def fused_prox_svrg_diff(u: jax.Array, dv: jax.Array, z: jax.Array, *,
     out = fused_prox_svrg_diff_pallas(ut, dvt, zt, eta=eta, lam1=lam1,
                                       lam2=lam2, interpret=_interpret())
     return _from_tiles(out, d, u.shape).astype(u.dtype)
+
+
+def _tiles_with_spare(x: jax.Array, d: int, dtype) -> jax.Array:
+    """(rows, 128) tiles holding x's first d entries with >= 1 spare tail
+    slot — the dummy coordinate padded plan rows point at."""
+    rows = max(8, -(-(d + 1) // _LANES))
+    rows = -(-rows // 8) * 8
+    flat = x.reshape(-1).astype(dtype)
+    pad = rows * _LANES - d
+    return jnp.concatenate([flat, jnp.zeros((pad,), dtype)]).reshape(
+        rows, _LANES)
+
+
+def fused_lazy_epoch(u0: jax.Array, z: jax.Array, plan, gathers, *, h_prime,
+                     eta: float, lam1: float, lam2: float,
+                     inner_batch: int) -> jax.Array:
+    """One fused lazy inner epoch: M plan-driven steps + final catch-up.
+
+    `plan` is a core.plan.EpochPlan, `gathers` a core.plan.EpochGathers.
+    Dispatch policy: the whole-epoch Pallas kernel runs when Pallas is
+    enabled AND (the backend is a real TPU, or REPRO_SPARSE_INNER_KERNEL
+    forces it) — in interpret mode the M-step grid costs more than the
+    identical jnp scan, so off-TPU the reference formulation IS the
+    production path (same convention as the per-step catch-up in
+    docs/kernels.md).
+    """
+    if not (_use_pallas() and (not _interpret() or _force_epoch_kernel())):
+        return _ref.fused_lazy_epoch_ref(u0, z, plan, gathers,
+                                         h_prime=h_prime, eta=eta,
+                                         lam1=lam1, lam2=lam2,
+                                         inner_batch=inner_batch)
+    eta_eff = eta / (1.0 + eta * lam1)
+    d = u0.shape[0]
+    M, S = plan.cflat.shape
+    b = inner_batch
+    k = S // b
+    kp = -(-k // _LANES) * _LANES
+    Sp = b * kp
+    padw = kp - k
+
+    def pad_slots(a, fill, dtype):
+        a3 = a.reshape(M, b, k).astype(dtype)
+        return jnp.pad(a3, ((0, 0), (0, 0), (0, padw)),
+                       constant_values=fill).reshape(M, Sp)
+
+    # dummy column d = the guaranteed spare tile slot (value 0, z 0,
+    # staleness 0: its update is the identity on a zero coordinate)
+    cflat_p = pad_slots(plan.cflat, d, jnp.int32)
+    q_p = pad_slots(plan.q, 0, jnp.int32)
+    # remap duplicate representatives from slot space S to padded slot
+    # space Sp; padding slots represent themselves
+    rep3 = plan.rep.reshape(M, b, k)
+    rep_padded = jnp.pad(rep3 // k * kp + rep3 % k,
+                         ((0, 0), (0, 0), (0, padw)))
+    slot_iota = (jax.lax.broadcasted_iota(jnp.int32, (M, b, kp), 2)
+                 + jax.lax.broadcasted_iota(jnp.int32, (M, b, kp), 1) * kp)
+    pad_mask = jax.lax.broadcasted_iota(jnp.int32, (M, b, kp), 2) >= k
+    rep_p = jnp.where(pad_mask, slot_iota, rep_padded).reshape(M, Sp)
+    vb_p = pad_slots(gathers.vb.reshape(M, S), 0.0, jnp.float32)
+    zg_p = pad_slots(gathers.zg, 0.0, jnp.float32)
+    u0_t = _tiles_with_spare(u0, d, jnp.float32)
+    z_t = _tiles_with_spare(z, d, jnp.float32)
+    qf_t = _tiles_with_spare(plan.qf, d, jnp.int32)
+    out = fused_lazy_epoch_pallas(
+        u0_t, z_t, qf_t, cflat_p, q_p, rep_p, vb_p,
+        gathers.yb.reshape(M, b).astype(jnp.float32), zg_p,
+        gathers.sw.reshape(M, b).astype(jnp.float32), h_prime=h_prime,
+        eta=eta, eta_eff=eta_eff, lam1=lam1, lam2=lam2, b=b,
+        interpret=_interpret())
+    return out.reshape(-1)[:d].astype(u0.dtype)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -1,0 +1,116 @@
+"""Fused lazy inner epoch as a single Pallas TPU kernel.
+
+The PR-2 lazy engine issued, per inner step, 4 gathers + 3 scatters +
+an int32 bookkeeping scatter from HBM-resident buffers — ~8 dispatches
+per step, M steps per epoch.  This kernel collapses the ENTIRE inner
+epoch into one ``pallas_call`` with ``grid=(M,)``:
+
+* the iterate u lives in the kernel's output block in VMEM for the
+  whole epoch (the block index map is constant, so the M grid steps
+  revisit the same VMEM-resident tiles — the standard accumulator
+  pattern); it is written back to HBM once;
+* each grid step streams in only its own (1, S) row of the epoch plan
+  (precomputed active columns, staleness counts, duplicate
+  representatives — core/plan.py) and microbatch operands;
+* the step body does gather -> Lemma-11 catch-up -> support-restricted
+  VR gradient -> eta-step -> elastic-net prox -> duplicate-safe
+  scatter, all on VMEM values;
+* the last grid step additionally applies the O(d) final catch-up
+  in-place, so no separate kernel launch is needed for it.
+
+Memory layout: u/z/qf are (rows, 128) fp32/int32 tiles with at least
+one spare tail slot — plan rows are padded to a 128-multiple slot
+count with a dummy column index pointing at that spare slot (value 0,
+staleness 0), which keeps every lane's gather/scatter in-bounds
+without touching a real coordinate.
+
+The in-kernel gather/scatter uses jnp advanced indexing on the
+materialized block values; on CPU containers the kernel executes via
+``interpret=True`` (correctness validated by tests/test_fused_inner.py
+in both USE_PALLAS modes).  The production CPU path is the identical
+jnp formulation in kernels/ref.py — see kernels/ops.fused_lazy_epoch
+for the dispatch policy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.lazy_prox import _catch_up_block
+
+_LANES = 128
+
+
+def _epoch_kernel(u0_ref, z_ref, qf_ref, cf_ref, q_ref, rep_ref, vb_ref,
+                  yb_ref, zg_ref, sw_ref, o_ref, *, h_prime, eta, eta_eff,
+                  lam1, lam2, b, kp, n_steps):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = u0_ref[...]
+
+    rows, lanes = o_ref.shape
+    u = o_ref[...].reshape(-1)
+    cf = cf_ref[0, :]
+    rp = rep_ref[0, :]
+    vbm = vb_ref[0, :]
+    zgm = zg_ref[0, :]
+    Sp = cf.shape[0]
+
+    # 1. Lemma-11 catch-up of the touched coordinates to this step
+    u_t = _catch_up_block(jnp.take(u, cf), zgm, q_ref[0, :], eta_eff,
+                          lam1, lam2, 1 << 30)
+    # 2. support-restricted VR gradient entries (anchor half precomputed)
+    du = jnp.sum(vbm.reshape(b, kp) * u_t.reshape(b, kp), axis=-1)
+    coef = (h_prime(du, yb_ref[0, :]) - sw_ref[0, :]) / b
+    ge = (coef[:, None] * vbm.reshape(b, kp)).reshape(Sp)
+    # duplicate-safe accumulation: segment-sum keyed on the plan's
+    # representative slot, then broadcast back so every duplicate slot
+    # writes the identical post-prox value
+    ge_tot = jnp.take(jnp.zeros((Sp,), u.dtype).at[rp].add(ge), rp)
+    # 3. eta-step + elastic-net prox, one scatter back into VMEM u
+    t = u_t - eta * (zgm + ge_tot)
+    st = jnp.sign(t) * jnp.maximum(jnp.abs(t) - eta * lam2, 0.0)
+    o_ref[...] = u.at[cf].set(st / (1.0 + eta * lam1)).reshape(rows, lanes)
+
+    @pl.when(i == n_steps - 1)
+    def _final_catch_up():
+        o_ref[...] = _catch_up_block(o_ref[...], z_ref[...], qf_ref[...],
+                                     eta_eff, lam1, lam2, 1 << 30)
+
+
+@functools.partial(jax.jit, static_argnames=("h_prime", "eta", "eta_eff",
+                                             "lam1", "lam2", "b",
+                                             "interpret"))
+def fused_lazy_epoch_pallas(u0_t: jax.Array, z_t: jax.Array, qf_t: jax.Array,
+                            cflat: jax.Array, q: jax.Array, rep: jax.Array,
+                            vb: jax.Array, yb: jax.Array, zg: jax.Array,
+                            sw: jax.Array, *, h_prime, eta: float,
+                            eta_eff: float, lam1: float, lam2: float,
+                            b: int, interpret: bool = True) -> jax.Array:
+    """u0_t/z_t: (rows, 128) f32; qf_t: (rows, 128) i32; plan rows
+    (M, Sp) with Sp = b * kp a 128-multiple; yb/sw: (M, b)."""
+    M, Sp = cflat.shape
+    kp = Sp // b
+    rows, lanes = u0_t.shape
+    assert lanes == _LANES and rows % 8 == 0, (rows, lanes)
+    assert Sp % _LANES == 0, Sp
+    full = pl.BlockSpec((rows, _LANES), lambda i: (0, 0))
+    row_s = pl.BlockSpec((1, Sp), lambda i: (i, 0))
+    row_b = pl.BlockSpec((1, b), lambda i: (i, 0))
+    kernel = functools.partial(_epoch_kernel, h_prime=h_prime, eta=eta,
+                               eta_eff=eta_eff, lam1=lam1, lam2=lam2, b=b,
+                               kp=kp, n_steps=M)
+    return pl.pallas_call(
+        kernel,
+        grid=(M,),
+        in_specs=[full, full, full, row_s, row_s, row_s, row_s, row_b,
+                  row_s, row_b],
+        out_specs=full,
+        out_shape=jax.ShapeDtypeStruct(u0_t.shape, u0_t.dtype),
+        interpret=interpret,
+    )(u0_t, z_t, qf_t, cflat, q, rep, vb, yb, zg, sw)
