@@ -1,0 +1,154 @@
+"""Ingest-throughput benchmark: the BENCH_ingest.json perf trail.
+
+Measures the streaming LIBSVM pipeline stage by stage on a registry
+fixture (real LIBSVM text, generated offline and cached under
+`datasets.data_root()`):
+
+    ingest/parse/<ds>         chunked vectorized parse only
+    ingest/parse_hash/<ds>    parse + signed feature hashing
+    ingest/shard/<ds>/<pl>    full ingest: parse -> place -> spill ->
+                              padded mmap segments (per placement)
+    ingest/solve/<ds>         pscope_lazy on the mmap shards — proof the
+                              parse->hash->shard->solve path is live
+
+`us_per_call` is the stage's wall time; `derived` carries the
+ISSUE-mandated throughput numbers (mb_per_s, rows_per_s) plus row/nnz
+counts.  ``--smoke`` runs one tiny fixture end-to-end with correctness
+assertions (round-trip vs the in-memory generator arrays) — the CI
+ingest step.
+
+    PYTHONPATH=src python -m benchmarks.bench_ingest [--smoke|--full]
+    PYTHONPATH=src python -m benchmarks.run --only ingest --json
+"""
+from __future__ import annotations
+
+import shutil
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro import datasets
+from repro.datasets.hashing import FeatureHasher
+from repro.datasets.libsvm import IngestStats, iter_libsvm_chunks
+
+CHUNK_BYTES = 1 << 20
+
+
+def _throughput_row(name: str, stats: IngestStats, extra: str = "") -> Dict:
+    return {
+        "name": name,
+        "us_per_call": f"{stats.seconds * 1e6:.0f}",
+        "derived": (f"mb_per_s={stats.mb_per_s:.1f};"
+                    f"rows_per_s={stats.rows_per_s:.0f};"
+                    f"rows={stats.rows};nnz={stats.nnz};"
+                    f"chunks={stats.chunks}{extra}"),
+    }
+
+
+def bench_parse(fixture, name: str, hash_dim_log2=None) -> Dict:
+    stats = IngestStats()
+    hasher = (FeatureHasher(hash_dim_log2) if hash_dim_log2 is not None
+              else None)
+    t0 = time.perf_counter()
+    for chunk in iter_libsvm_chunks(fixture, chunk_bytes=CHUNK_BYTES,
+                                    zero_based=False, stats=stats):
+        if hasher is not None:
+            hasher(chunk.cols, chunk.vals)
+    stats.seconds = time.perf_counter() - t0
+    stage = "parse_hash" if hasher is not None else "parse"
+    return _throughput_row(f"ingest/{stage}/{name}", stats)
+
+
+def bench_shard(fixture, name: str, placement: str, p: int, d: int) -> Dict:
+    out = fixture.parent / f"_bench.{name}.{placement}"
+    shutil.rmtree(out, ignore_errors=True)
+    store = datasets.ingest_libsvm(fixture, out, p, placement=placement,
+                                   n_features=d, zero_based=False,
+                                   chunk_bytes=CHUNK_BYTES)
+    s = store.manifest["stats"]
+    stats = IngestStats(rows=s["rows"], nnz=s["nnz"],
+                        bytes_read=s["bytes_read"], chunks=s["chunks"],
+                        seconds=s["seconds"])
+    row = _throughput_row(
+        f"ingest/shard/{name}/{placement}", stats,
+        extra=f";store_mb={store.nbytes / 1e6:.1f};n_k={store.n_k}")
+    shutil.rmtree(out, ignore_errors=True)
+    return row
+
+
+def bench_solve(name: str, p: int, scale: float, rounds: int = 4) -> Dict:
+    from repro.core import solvers
+    from repro.core.solvers import SolverConfig
+    loaded = datasets.load(name, p=p, scale=scale)
+    t0 = time.perf_counter()
+    trace = solvers.run("pscope_lazy", loaded.objective, loaded.regularizer,
+                        loaded.partition(),
+                        SolverConfig(rounds=rounds, eta=0.5,
+                                     inner_epochs=2.0))
+    dt = time.perf_counter() - t0
+    return {
+        "name": f"ingest/solve/{name}",
+        "us_per_call": f"{dt / max(trace.rounds, 1) * 1e6:.0f}",
+        "derived": (f"final_value={trace.final_value:.5f};"
+                    f"rounds={trace.rounds};nnz={trace.nnz[-1]};"
+                    f"p={p};n_k={loaded.store.n_k}"),
+    }
+
+
+def _smoke_assert(name: str, scale: float, p: int) -> None:
+    """Tiny end-to-end correctness gate for the CI ingest step.
+
+    A cached store is fine to assert against (the CI cache key hashes
+    the datasets/ sources, and the manifest mismatch check guards the
+    arguments), so this step benefits from the fixture cache."""
+    from repro.data.sparse import shard_rows
+    loaded = datasets.load(name, p=p, scale=scale)
+    csr, y, _ = datasets.reference_arrays(name, scale=scale)
+    members = np.asarray(loaded.store.members)
+    ref = shard_rows(csr, members)
+    assert np.array_equal(np.asarray(loaded.store.vals),
+                          np.asarray(ref.vals)), "shard vals drifted"
+    assert np.array_equal(np.asarray(loaded.store.yp),
+                          np.asarray(y)[members]), "shard labels drifted"
+
+
+def main(full: bool = False, smoke: bool = False) -> List[Dict]:
+    p = 8
+    if smoke:
+        name, scale = "rcv1-like", 0.02
+        _smoke_assert(name, scale, p=4)
+        grid = [(name, scale, None)]
+        placements = ["sequential"]
+    else:
+        grid = [("rcv1-like", 0.5, None), ("avazu-like", 0.5, 13)]
+        if full:
+            grid += [("kdd2012-like", 1.0, 14)]
+        placements = ["sequential", "row_hash", "gamma"]
+
+    rows = []
+    for name, scale, hash_k in grid:
+        prof = datasets.get(name)
+        fixture = datasets.ensure_fixture(name, scale=scale)
+        rows.append(bench_parse(fixture, name))
+        if hash_k is not None:
+            rows.append(bench_parse(fixture, name, hash_dim_log2=hash_k))
+        for pl in placements:
+            if pl == "gamma" and prof.d > 8192:
+                continue               # O(p*d) per row: fixture-scale only
+            rows.append(bench_shard(fixture, name, pl, p, prof.d))
+    rows.append(bench_solve(grid[0][0], p=4 if smoke else p,
+                            scale=grid[0][1]))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny end-to-end cell + correctness assertions")
+    ap.add_argument("--full", action="store_true",
+                    help="include the kdd2012-scale fixture")
+    args = ap.parse_args()
+    from benchmarks.common import emit
+    emit(main(full=args.full, smoke=args.smoke))

@@ -14,7 +14,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import Regularizer, LOGISTIC, LASSO
+from repro.core import LOGISTIC, LASSO
 from repro.core.baselines.fista import fista_history
 from repro.core.partition import build_partition
 from repro.core.solvers import Trace
@@ -47,12 +47,13 @@ def time_fn(fn, *args, repeats: int = 7) -> float:
 
 def build_problem(name: str, model: str, scale: float = 0.05, seed: int = 0):
     """Returns (X, y, objective, regularizer)."""
+    from repro.datasets.registry import default_regularizer
     task = "regression" if model == "lasso" else "classification"
     X, y, _ = make_dataset(name, task=task, seed=seed, scale=scale)
     X, y = jnp.asarray(X), jnp.asarray(y)
-    # paper's lambdas (Table 1): lam1 = 1e-5-ish, lam2 = 1e-5
-    reg = (Regularizer(1e-4, 1e-4) if model == "logistic"
-           else Regularizer(0.0, 1e-4))
+    # paper's lambdas (Table 1); the one copy of the default lives in
+    # the dataset registry so registry and synthetic problems agree
+    reg = default_regularizer(model)
     obj = LOGISTIC if model == "logistic" else LASSO
     return X, y, obj, reg
 
@@ -64,6 +65,26 @@ def build_partitioned_problem(name: str, model: str, p: int = 8,
     X, y, obj, reg = build_problem(name, model, scale=scale, seed=seed)
     part = build_partition(scheme, X, y, p, seed=seed)
     return obj, reg, part
+
+
+def build_registry_problem(name: str, model: str = None, p: int = 8,
+                           scale: float = 0.05, seed: int = 0,
+                           placement: str = "sequential"):
+    """Like `build_partitioned_problem` but resolved through the
+    `repro.datasets` registry: the fixture is real LIBSVM text pushed
+    through the full parse -> shard -> mmap ingestion path (the
+    `--dataset` flag of fig1/table2 lands here).  The Partition's data
+    is mmap-backed."""
+    from repro import datasets
+    from repro.core import OBJECTIVES
+    from repro.datasets.registry import default_regularizer
+    loaded = datasets.load(name, p=p, scale=scale, seed=seed,
+                           placement=placement)
+    if model is None or model == loaded.profile.model:
+        return loaded.objective, loaded.regularizer, loaded.partition()
+    # explicit cross-task override (e.g. lasso on +-1 labels)
+    return (OBJECTIVES[model], default_regularizer(model),
+            loaded.partition())
 
 
 def trace_row(trace: Trace, prefix: str, p_star: float,

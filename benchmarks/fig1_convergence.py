@@ -11,7 +11,8 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from benchmarks.common import (build_partitioned_problem, reference_optimum,
+from benchmarks.common import (build_partitioned_problem,
+                               build_registry_problem, reference_optimum,
                                trace_row)
 from repro.core import solvers
 from repro.core.solvers import SolverConfig
@@ -39,9 +40,10 @@ def solver_configs(n_k: int) -> Dict[str, SolverConfig]:
     }
 
 
-def run_dataset(ds: str, model: str, scale: float = 0.05) -> List[Dict]:
-    obj, reg, part = build_partitioned_problem(ds, model, p=P_WORKERS,
-                                               scale=scale)
+def run_dataset(ds: str, model: str, scale: float = 0.05,
+                registry: bool = False) -> List[Dict]:
+    build = build_registry_problem if registry else build_partitioned_problem
+    obj, reg, part = build(ds, model, p=P_WORKERS, scale=scale)
     p_star = reference_optimum(obj, reg, part.X, part.y)
     cfgs = solver_configs(part.n_k)
     rows = []
@@ -52,7 +54,14 @@ def run_dataset(ds: str, model: str, scale: float = 0.05) -> List[Dict]:
     return rows
 
 
-def main(full: bool = False) -> List[Dict]:
+def main(full: bool = False, dataset: str = None) -> List[Dict]:
+    if dataset is not None:
+        # a `repro.datasets` registry name ("rcv1-like", ...): the data
+        # arrives through the real LIBSVM parse -> mmap shard path, and
+        # the model follows the profile's task
+        from repro import datasets as registry
+        return run_dataset(dataset, registry.get(dataset).model,
+                           scale=0.05, registry=True)
     rows = []
     datasets = ["cov", "rcv1"] + (["avazu", "kdd2012"] if full else [])
     for ds in datasets:

@@ -12,8 +12,10 @@ perf-trail snapshots (us_per_call per row) so the perf trajectory is
 diffable across PRs: BENCH_inner_loop.json from the ``inner_loop/*``
 rows — ``dense``, the PR-2 ``lazy`` reference scan, the epoch-planned
 ``fused`` engine, and the cost-model ``auto`` dispatch: four rows per
-(d, density) cell — and BENCH_partition.json from the ``partition/*``
-rows.
+(d, density) cell — BENCH_partition.json from the ``partition/*`` rows,
+and BENCH_ingest.json from the ``ingest/*`` LIBSVM-pipeline throughput
+rows.  ``--dataset rcv1-like`` reroutes fig1/table2 through the
+`repro.datasets` registry (real LIBSVM text -> mmap shards).
 """
 import argparse
 import json
@@ -36,6 +38,7 @@ def list_solvers() -> None:
 JSON_TRAILS = {
     "inner_loop/": "BENCH_inner_loop.json",
     "partition/": "BENCH_partition.json",
+    "ingest/": "BENCH_ingest.json",
 }
 
 
@@ -83,8 +86,13 @@ def main() -> None:
     ap.add_argument("--json", nargs="?", const="", default=None,
                     metavar="PATH",
                     help="also snapshot the perf-trail rows as JSON "
-                         "(BENCH_inner_loop.json / BENCH_partition.json; "
-                         "PATH overrides when a single trail matched)")
+                         "(BENCH_inner_loop.json / BENCH_partition.json / "
+                         "BENCH_ingest.json; PATH overrides when a single "
+                         "trail matched)")
+    ap.add_argument("--dataset", default=None, metavar="NAME",
+                    help="run fig1/table2 on a repro.datasets registry "
+                         "dataset (e.g. rcv1-like): real LIBSVM text "
+                         "through the mmap ingestion path")
     args = ap.parse_args()
 
     if args.list_solvers:
@@ -93,16 +101,18 @@ def main() -> None:
 
     from benchmarks import (fig1_convergence, table2_timing, fig2a_speedup,
                             fig2b_partition, recovery_bench, roofline_report,
-                            bench_lazy_inner, bench_partition)
+                            bench_lazy_inner, bench_partition, bench_ingest)
     suites = [
-        ("fig1", lambda: fig1_convergence.main(full=args.full)),
-        ("table2", table2_timing.main),
+        ("fig1", lambda: fig1_convergence.main(full=args.full,
+                                               dataset=args.dataset)),
+        ("table2", lambda: table2_timing.main(dataset=args.dataset)),
         ("fig2a", fig2a_speedup.main),
         ("fig2b", fig2b_partition.main),
         ("recovery", recovery_bench.main),
         ("roofline", roofline_report.main),
         ("lazy_inner", lambda: bench_lazy_inner.main(full=args.full)),
         ("partition", lambda: bench_partition.main(full=args.full)),
+        ("ingest", lambda: bench_ingest.main(full=args.full)),
     ]
     rows = []
     for name, fn in suites:

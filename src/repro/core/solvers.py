@@ -83,6 +83,7 @@ class Trace:
     seconds: List[float] = dataclasses.field(default_factory=list)
     gamma: Optional[float] = None     # Definition 5 estimate, if requested
     w_final: Optional[Array] = None
+    heldout: Dict[str, float] = dataclasses.field(default_factory=dict)
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
     _t0: Optional[float] = dataclasses.field(default=None, repr=False)
     _overhead: float = dataclasses.field(default=0.0, repr=False)
@@ -147,6 +148,15 @@ class Trace:
             prev = self.comm[-1] if self.comm else 0.0
             self.comm.append(prev + (comm_per_record if i else 0.0))
             self.seconds.append(total_seconds * i / rounds)
+
+    def record_heldout(self, **metrics: float) -> None:
+        """Attach held-out metrics (e.g. from `evaluate_heldout`).
+
+        Like `record_history` this is a post-hoc feed: the evaluation
+        happens after the compiled trajectory returned, so the scanned
+        drivers stay zero-sync; callers charge the evaluation cost via
+        `charge_overhead` so it never pollutes `seconds`."""
+        self.heldout.update({k: float(v) for k, v in metrics.items()})
 
     def recorder(self, comm_per_record: float) -> Callable[[Array, float], None]:
         """An `on_record(w, value)` callback charging `comm_per_record`
@@ -346,6 +356,41 @@ def estimate_partition_gamma(obj: Objective, reg: Regularizer,
                           iters=inner_iters)
 
 
+def evaluate_heldout(obj: Objective, reg: Regularizer, X_test, y_test,
+                     w) -> Dict[str, float]:
+    """Held-out metrics of an iterate: composite objective P(w) on the
+    test rows, plus 0/1 accuracy when the labels are +-1.
+
+    `X_test` may be dense (n, d) or a padded `CSRMatrix` (the split
+    helper in `repro.datasets.split` preserves either); the sparse path
+    evaluates through margins so the test set is never densified.
+    """
+    from repro.core.svrg import LINEAR_MODEL_H_LOSS
+    from repro.data.sparse import CSRMatrix, matvec
+    w = jnp.asarray(w)
+    y = jnp.asarray(y_test)
+    if isinstance(X_test, CSRMatrix):
+        z = matvec(X_test, w)
+        h = LINEAR_MODEL_H_LOSS.get(obj.name)
+        if h is not None:
+            loss = jnp.mean(h(z, y))
+        else:      # unknown objective: densify (correct, not hot-path)
+            from repro.data.sparse import csr_to_dense
+            Xd = csr_to_dense(X_test)
+            loss = obj.loss(w, Xd, y)
+            z = Xd @ w
+    else:
+        X = jnp.asarray(X_test)
+        loss = obj.loss(w, X, y)
+        z = X @ w
+    out = {"objective": float(loss + reg.value(w))}
+    yn = np.asarray(y)
+    if np.all(np.isin(yn, (-1.0, 1.0))):
+        pred = jnp.where(z >= 0, 1.0, -1.0)
+        out["accuracy"] = float(jnp.mean(pred == y))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Adapters: pSCOPE + the nine Section-7.1 baselines
 # ---------------------------------------------------------------------------
@@ -359,13 +404,23 @@ def _pscope_config(obj, reg, part, cfg, inner_path: str):
         outer_steps=cfg.rounds, seed=cfg.seed, inner_path=inner_path)
 
 
-def _run_pscope_scanned(obj, reg, Xp, yp, w0, pcfg, trace):
+def _run_pscope_scanned(obj, reg, Xp, yp, w0, pcfg, trace, eval_data=None):
     """Drive pSCOPE through the zero-sync scanned driver and feed the
-    Trace from the device-side history — no per-round host sync."""
+    Trace from the device-side history — no per-round host sync.
+
+    `eval_data` is an optional (X_test, y_test) pair (set via
+    `SolverConfig.extras["eval"]`, e.g. from
+    `datasets.train_test_split`): held-out metrics are evaluated
+    post-hoc on the final iterate, outside the compiled trajectory, and
+    their cost is charged as recording overhead."""
     t0 = time.perf_counter()
     w, values, nnzs = pscope.run_scanned(obj, reg, Xp, yp, w0, pcfg)
     trace.record_history(values, nnzs, comm_per_record=2.0,
                          total_seconds=time.perf_counter() - t0)
+    if eval_data is not None:
+        t_eval = time.perf_counter()
+        trace.record_heldout(**evaluate_heldout(obj, reg, *eval_data, w))
+        trace.charge_overhead(time.perf_counter() - t_eval)
     return w
 
 
@@ -381,7 +436,7 @@ def _run_pscope(obj, reg, part, cfg, trace):
     pcfg = _pscope_config(obj, reg, part, cfg,
                           cfg.extras.get("inner_path", "dense"))
     return _run_pscope_scanned(obj, reg, part.Xp, part.yp, _w0(part, cfg),
-                               pcfg, trace)
+                               pcfg, trace, cfg.extras.get("eval"))
 
 
 @register("pscope_lazy",
@@ -395,7 +450,8 @@ def _run_pscope_lazy(obj, reg, part, cfg, trace):
     # once per solver run (regression-tested).
     pcfg = _pscope_config(obj, reg, part, cfg, "lazy")
     return _run_pscope_scanned(obj, reg, part.csr_p, part.yp,
-                               _w0(part, cfg), pcfg, trace)
+                               _w0(part, cfg), pcfg, trace,
+                               cfg.extras.get("eval"))
 
 
 @register("fista",

@@ -1,10 +1,14 @@
 """Data pipeline: deterministic, shardable, restartable iterators.
 
-Three consumers:
+Four consumers:
   * ERM benchmarks — worker-major partitions from core/partition.py.
   * The sparse lazy-prox engine — `csr_partition` builds worker-major
     padded-CSR shards (the `core.pscope` lazy inner loop's data layout)
     from a flat `CSRMatrix` + a (p, n_k) partition index array.
+  * The streaming ingestion subsystem (`repro.datasets`) — its mmap
+    shard store persists exactly this worker-major padded-CSR layout on
+    disk, so `ShardStore.csr_p` is a drop-in (zero-copy) producer for
+    every `csr_partition` consumer; see docs/data.md.
   * LM training — `TokenDataset` (synthetic token streams at the target
     vocab) + `ShardedBatchIterator` that yields globally-consistent
     batches sharded over the DP axes, with a restore-from-step API for

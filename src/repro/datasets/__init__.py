@@ -1,0 +1,50 @@
+"""Streaming dataset ingestion: LIBSVM text -> solver-ready mmap shards.
+
+The out-of-core ingestion subsystem (see docs/data.md):
+
+    libsvm.py     chunked, vectorized LIBSVM parser (no per-line loop)
+    hashing.py    signed feature hashing to 2^k dims (unbiased dot trick)
+    placement.py  ingest-time row placement: sequential / row_hash /
+                  marginal-gamma~ (partition.StreamingAssigner)
+    shards.py     out-of-core builder + write-once mmap shard store in
+                  the worker-major padded-CSR layout the lazy/fused
+                  pSCOPE path consumes directly
+    registry.py   Table-1 dataset profiles; `load(name)` resolves a
+                  profile to cached fixture text + a committed store
+    split.py      train/test splitting for the held-out Trace hook
+
+Typical use:
+
+    from repro import datasets
+    loaded = datasets.load("rcv1-like", p=8, scale=0.05)
+    part = loaded.partition()            # feeds core.solvers.run
+    store = loaded.store                 # or store.csr_p / store.yp
+                                         # straight into pscope.run_scanned
+"""
+from repro.datasets.hashing import FeatureHasher
+from repro.datasets.libsvm import (IngestStats, ParsedChunk,
+                                   iter_libsvm_chunks, parse_libsvm_bytes,
+                                   write_libsvm)
+from repro.datasets.placement import (PLACEMENTS, GammaPlacement,
+                                      RowHashPlacement, SequentialPlacement,
+                                      make_placement)
+from repro.datasets.registry import (DATASETS, DatasetProfile, LoadedDataset,
+                                     available, data_root,
+                                     default_regularizer, ensure_fixture,
+                                     fixture_path, get, load,
+                                     reference_arrays)
+from repro.datasets.shards import ShardStore, ingest_libsvm, open_store
+from repro.datasets.split import take_rows, train_test_split
+
+__all__ = [
+    "FeatureHasher",
+    "IngestStats", "ParsedChunk", "iter_libsvm_chunks", "parse_libsvm_bytes",
+    "write_libsvm",
+    "PLACEMENTS", "GammaPlacement", "RowHashPlacement",
+    "SequentialPlacement", "make_placement",
+    "DATASETS", "DatasetProfile", "LoadedDataset", "available", "data_root",
+    "default_regularizer", "ensure_fixture", "fixture_path", "get", "load",
+    "reference_arrays",
+    "ShardStore", "ingest_libsvm", "open_store",
+    "take_rows", "train_test_split",
+]

@@ -1,0 +1,312 @@
+"""Chunked, vectorized LIBSVM text parser.
+
+The paper's datasets (rcv1 / avazu / kdd2012) ship as LIBSVM text:
+
+    <label> <index>:<value> <index>:<value> ...\n
+
+with 1-based feature indices by convention.  At the sizes the paper
+runs (up to ~10^8 rows) a per-line Python loop is the bottleneck long
+before the solver is, so this parser never iterates over lines in
+Python.  Each chunk of bytes is parsed in whole-array numpy passes:
+
+  1. classify every byte as separator (space/tab/CR/NL and ``:`` — the
+     colon is just another separator once tokens carry their position)
+     or token content, and take token starts/ends from the mask edges;
+  2. assign every token to its line via one ``searchsorted`` against
+     the newline positions, and compute its position *within* the line
+     from the per-line token counts (cumsum arithmetic);
+  3. drop comment tokens (everything from a ``#``-initial token to the
+     end of its line) and re-derive per-line counts;
+  4. gather all surviving token bytes into one fixed-width ``(T, m)``
+     uint8 matrix, view it as an ``S{m}`` string array, and convert to
+     float64 with a single C-level ``astype`` — position-in-line parity
+     then says which numbers are labels, indices, and values.
+
+Rows with no features (a bare label), duplicate or unsorted indices,
+``\r\n`` endings, and trailing whitespace all parse correctly;
+duplicates are *kept* (the padded-CSR convention of
+`repro.data.sparse` sums duplicates, and keeping them preserves
+bitwise round-trips through `write_libsvm`).
+
+`iter_libsvm_chunks` streams a file through this parser with a bounded
+working set: one ``chunk_bytes`` read plus the partial trailing line
+carried to the next chunk.  `IngestStats` does the chunk accounting
+(max buffer bytes ever held) that the bounded-memory ingest test
+asserts on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Union
+
+import numpy as np
+
+# byte codes classified as token separators
+_SEPS = (9, 10, 13, 32, 58)          # \t \n \r space :
+_HASH = 35                           # '#' starts a comment token
+_NL = 10
+
+
+@dataclasses.dataclass
+class ParsedChunk:
+    """One chunk of parsed rows, in ragged CSR form.
+
+    labels   (n,)  float32
+    indptr   (n+1,) int64   row i's features are cols/vals[indptr[i]:indptr[i+1]]
+    cols     (nnz,) int64   0-based feature indices (base already removed)
+    vals     (nnz,) float32
+    """
+
+    labels: np.ndarray
+    indptr: np.ndarray
+    cols: np.ndarray
+    vals: np.ndarray
+
+    @property
+    def n(self) -> int:
+        return len(self.labels)
+
+    @property
+    def nnz(self) -> int:
+        return len(self.cols)
+
+    @property
+    def max_col(self) -> int:
+        return int(self.cols.max()) if self.nnz else -1
+
+    def row(self, i: int):
+        """(vals, cols) of row i — convenience for per-row consumers."""
+        lo, hi = self.indptr[i], self.indptr[i + 1]
+        return self.vals[lo:hi], self.cols[lo:hi]
+
+
+@dataclasses.dataclass
+class IngestStats:
+    """Chunk accounting for one streaming pass.
+
+    `max_buffer_bytes` is the largest byte buffer the reader ever held
+    (one chunk + the carried partial line) — the bounded-memory ingest
+    test asserts it is a function of `chunk_bytes`, not of file size.
+    """
+
+    rows: int = 0
+    nnz: int = 0
+    bytes_read: int = 0
+    chunks: int = 0
+    max_buffer_bytes: int = 0
+    max_rows_per_chunk: int = 0
+    seconds: float = 0.0
+
+    def account(self, buffer_bytes: int, chunk: "ParsedChunk") -> None:
+        self.rows += chunk.n
+        self.nnz += chunk.nnz
+        self.bytes_read += buffer_bytes
+        self.chunks += 1
+        self.max_buffer_bytes = max(self.max_buffer_bytes, buffer_bytes)
+        self.max_rows_per_chunk = max(self.max_rows_per_chunk, chunk.n)
+
+    @property
+    def mb_per_s(self) -> float:
+        return self.bytes_read / max(self.seconds, 1e-12) / 1e6
+
+    @property
+    def rows_per_s(self) -> float:
+        return self.rows / max(self.seconds, 1e-12)
+
+
+def parse_libsvm_bytes(data: bytes, one_based: bool = True) -> ParsedChunk:
+    """Parse a chunk of LIBSVM text — whole-array numpy, no line loop.
+
+    `data` must end at a line boundary (the chunked reader guarantees
+    this; a final line without ``\n`` is accepted).  Raises ValueError
+    on malformed rows (dangling index without a value) or, with
+    `one_based=True`, on a 0 feature index.
+    """
+    if len(data) >= (1 << 31) - 16:    # int32 token-gather offsets below
+        raise ValueError("parse buffer >= 2 GiB; use iter_libsvm_chunks "
+                         "with a smaller chunk_bytes")
+    if data and not data.endswith(b"\n"):
+        data = data + b"\n"
+    a = np.frombuffer(data, np.uint8)
+    if a.size == 0:
+        z = np.zeros(0)
+        return ParsedChunk(z.astype(np.float32), np.zeros(1, np.int64),
+                           z.astype(np.int64), z.astype(np.float32))
+
+    is_sep = np.isin(a, _SEPS)
+    # token starts: content byte preceded by a separator (or buffer start)
+    prev_sep = np.empty_like(is_sep)
+    prev_sep[0] = True
+    prev_sep[1:] = is_sep[:-1]
+    starts = np.nonzero(~is_sep & prev_sep)[0]
+    next_sep = np.empty_like(is_sep)
+    next_sep[-1] = True
+    next_sep[:-1] = is_sep[1:]
+    ends = np.nonzero(~is_sep & next_sep)[0] + 1          # exclusive
+
+    nl = np.nonzero(a == _NL)[0]
+    if starts.size == 0:
+        z = np.zeros(0)
+        return ParsedChunk(z.astype(np.float32), np.zeros(1, np.int64),
+                           z.astype(np.int64), z.astype(np.float32))
+    line_of = np.searchsorted(nl, starts)                 # line id per token
+
+    # ---- comment removal: drop tokens from a '#'-initial token to EOL ----
+    if np.any(a[starts] == _HASH):
+        n_lines = len(nl)
+        # rank of each line's first '#' token (starts.size sentinel = none)
+        tok_rank = np.arange(starts.size)
+        hash_rank = np.full(n_lines + 1, starts.size, np.int64)
+        np.minimum.at(hash_rank, line_of[a[starts] == _HASH],
+                      tok_rank[a[starts] == _HASH])
+        keep = tok_rank < hash_rank[line_of]
+        starts, ends, line_of = starts[keep], ends[keep], line_of[keep]
+        if starts.size == 0:
+            z = np.zeros(0)
+            return ParsedChunk(z.astype(np.float32), np.zeros(1, np.int64),
+                               z.astype(np.int64), z.astype(np.float32))
+
+    # ---- per-line structure (blank / comment-only lines vanish here) ----
+    lines, counts = np.unique(line_of, return_counts=True)
+    n_rows = lines.size
+    row_starts = np.zeros(n_rows, np.int64)               # first-token rank
+    row_starts[1:] = np.cumsum(counts)[:-1]
+    # position of each token within its (dense-ranked) row
+    row_of_tok = np.repeat(np.arange(n_rows), counts)
+    pos_in_line = np.arange(starts.size) - row_starts[row_of_tok]
+
+    feat_counts = counts - 1
+    if np.any(feat_counts % 2):
+        bad = lines[np.nonzero(feat_counts % 2)[0][0]]
+        raise ValueError(
+            f"malformed LIBSVM line {int(bad)}: dangling feature index "
+            "(expected <label> <index>:<value> ... pairs)")
+
+    # ---- one C-level text->float conversion for every token -------------
+    # (T, m) uint8 token matrix via an int32 gather: the parse working
+    # set is ~m * 5 bytes per token — proportional to chunk_bytes,
+    # independent of file size
+    widths = (ends - starts).astype(np.int32)
+    m = int(widths.max())
+    gather = starts.astype(np.int32)[:, None] + np.arange(m, dtype=np.int32)
+    valid = np.arange(m, dtype=np.int32)[None, :] < widths[:, None]
+    mat = np.where(valid, a[np.minimum(gather, a.size - 1)], 0)
+    tokens = np.ascontiguousarray(mat.astype(np.uint8)).view(f"S{m}").ravel()
+    try:
+        nums = tokens.astype(np.float64)
+    except ValueError:
+        bad = tokens[_first_bad_token(tokens)]
+        raise ValueError(f"unparseable LIBSVM token {bad!r}") from None
+
+    labels = nums[pos_in_line == 0].astype(np.float32)
+    idx_mask = (pos_in_line % 2) == 1                     # 1st, 3rd, ... feat
+    cols = nums[idx_mask].astype(np.int64)
+    vals = nums[~idx_mask & (pos_in_line > 0)].astype(np.float32)
+    if one_based:
+        if cols.size and cols.min() < 1:
+            raise ValueError(
+                "found feature index 0 in a 1-based LIBSVM file; pass "
+                "zero_based=True (or 'auto' on the first chunk)")
+        cols -= 1
+    elif cols.size and cols.min() < 0:
+        raise ValueError("negative feature index")
+
+    indptr = np.zeros(n_rows + 1, np.int64)
+    indptr[1:] = np.cumsum(feat_counts // 2)
+    return ParsedChunk(labels=labels, indptr=indptr, cols=cols, vals=vals)
+
+
+def _first_bad_token(tokens: np.ndarray) -> int:
+    lo, hi = 0, tokens.size
+    while hi - lo > 1:                 # bisect to the offending token
+        mid = (lo + hi) // 2
+        try:
+            tokens[lo:mid].astype(np.float64)
+            lo = mid
+        except ValueError:
+            hi = mid
+    return lo
+
+
+def resolve_zero_based(head: bytes, zero_based: Union[bool, str]) -> bool:
+    """Resolve the `zero_based='auto'` convention from the file head.
+
+    LIBSVM is 1-based by convention; 'auto' switches to 0-based iff the
+    first chunk contains a 0 feature index (a 0 index appearing *later*
+    under the 1-based assumption still raises, with a pointer here).
+    """
+    if zero_based != "auto":
+        return bool(zero_based)
+    try:
+        parse_libsvm_bytes(head, one_based=True)
+        return False
+    except ValueError:
+        return True
+
+
+def iter_libsvm_chunks(path, chunk_bytes: int = 1 << 20,
+                       zero_based: Union[bool, str] = "auto",
+                       stats: Optional[IngestStats] = None
+                       ) -> Iterator[ParsedChunk]:
+    """Stream a LIBSVM file as ParsedChunks with a bounded working set.
+
+    Reads `chunk_bytes` at a time, parses up to the last complete line,
+    and carries the partial tail into the next read — peak buffer is
+    `chunk_bytes` plus one line, independent of file size (tracked in
+    `stats.max_buffer_bytes`).
+    """
+    one_based: Optional[bool] = (None if zero_based == "auto"
+                                 else not bool(zero_based))
+    with open(path, "rb") as f:
+        tail = b""
+        while True:
+            block = f.read(chunk_bytes)
+            if not block:
+                break
+            buf = tail + block
+            cut = buf.rfind(b"\n")
+            if cut < 0:                # no complete line yet: keep reading
+                tail = buf
+                continue
+            text, tail = buf[:cut + 1], buf[cut + 1:]
+            if one_based is None:
+                one_based = not resolve_zero_based(text, "auto")
+            chunk = parse_libsvm_bytes(text, one_based=one_based)
+            if stats is not None:
+                stats.account(len(text), chunk)
+            yield chunk
+        if tail.strip():
+            if one_based is None:
+                one_based = not resolve_zero_based(tail, "auto")
+            chunk = parse_libsvm_bytes(tail, one_based=one_based)
+            if stats is not None:
+                stats.account(len(tail), chunk)
+            yield chunk
+
+
+# ---------------------------------------------------------------------------
+# writer (fixtures + round-trip tests)
+# ---------------------------------------------------------------------------
+
+def write_libsvm(path, vals: np.ndarray, cols: np.ndarray,
+                 row_nnz: np.ndarray, labels: np.ndarray,
+                 one_based: bool = True) -> None:
+    """Write padded-CSR arrays as LIBSVM text.
+
+    Entries beyond each row's `row_nnz` are padding and are not
+    written; stored entries (including explicit zeros and duplicate
+    columns) are written in storage order with ``%.9g`` precision, so a
+    parse of the output reproduces the float32 values *bitwise* — the
+    property the round-trip test pins.
+    """
+    vals = np.asarray(vals)
+    cols = np.asarray(cols)
+    row_nnz = np.asarray(row_nnz)
+    labels = np.asarray(labels)
+    base = 1 if one_based else 0
+    with open(path, "w") as f:
+        for i in range(len(labels)):
+            k = int(row_nnz[i])
+            feats = " ".join(f"{int(c) + base}:{v:.9g}"
+                             for c, v in zip(cols[i, :k], vals[i, :k]))
+            f.write(f"{labels[i]:.9g} {feats}".rstrip() + "\n")

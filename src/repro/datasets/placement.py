@@ -1,0 +1,109 @@
+"""Ingest-time row placement: which worker shard gets each arriving row.
+
+The paper's Theorems 1-2 say the partition decides the convergence
+rate, so placement belongs *in the ingest path*, not as a post-hoc
+shuffle of materialized arrays.  Three policies, all streaming (state
+is O(p) or O(p*d), never O(n)):
+
+    sequential  block-cyclic fill (block b: rows -> worker 0 x b,
+                worker 1 x b, ...).  b=1 is round-robin — the streaming
+                analogue of sequential fill when n is unknown, and the
+                layout the in-memory/mmap equivalence test mirrors.
+    row_hash    splitmix64(row_id, seed) mod p — the "random uniform"
+                partition pi_1 of Lemma 2; stateless and deterministic,
+                so re-ingesting the same file reproduces the identical
+                assignment on any host.
+    gamma       delegates to `partition.optimize.StreamingAssigner`:
+                each row goes to the shard with the smallest marginal
+                increase of the Lemma-5 surrogate gamma~.  O(p*d) work
+                per row — the quality-first policy for fixture-scale
+                ingest (the benchmark table in docs/data.md shows the
+                cost).
+
+Policies consume `libsvm.ParsedChunk`s and return one worker id per
+row; `make_placement` is the registry entry point the shard writer
+uses.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from repro.datasets.hashing import _splitmix64
+from repro.datasets.libsvm import ParsedChunk
+
+
+class SequentialPlacement:
+    """Block-cyclic fill; `block_rows=1` is plain round-robin."""
+
+    name = "sequential"
+
+    def __init__(self, p: int, d: int, block_rows: int = 1, **_):
+        self.p = p
+        self.block = max(1, int(block_rows))
+        self._next = 0
+
+    def assign_chunk(self, chunk: ParsedChunk) -> np.ndarray:
+        ids = self._next + np.arange(chunk.n, dtype=np.int64)
+        self._next += chunk.n
+        return (ids // self.block) % self.p
+
+
+class RowHashPlacement:
+    """worker = splitmix64(row_id ^ seed-mix) mod p; stateless."""
+
+    name = "row_hash"
+
+    def __init__(self, p: int, d: int, seed: int = 0, **_):
+        self.p = p
+        self.seed = seed
+        self._next = 0
+
+    def assign_chunk(self, chunk: ParsedChunk) -> np.ndarray:
+        ids = self._next + np.arange(chunk.n, dtype=np.uint64)
+        self._next += chunk.n
+        with np.errstate(over="ignore"):                  # mod-2^64 keying
+            key = np.uint64(self.seed) * np.uint64(0x9E3779B97F4A7C15)
+            h = _splitmix64(ids + key)
+        return (h % np.uint64(self.p)).astype(np.int64)
+
+
+class GammaPlacement:
+    """Marginal-gamma~ streaming placement via `StreamingAssigner`."""
+
+    name = "gamma"
+
+    def __init__(self, p: int, d: int, obj=None, reg=None, slack: int = 2,
+                 **_):
+        from repro.partition.optimize import StreamingAssigner
+        # the shard writer records placements itself (the members
+        # segment), so drop the assigner's O(n) member lists — this
+        # policy's state stays O(p*d) for unbounded streams
+        self._assigner = StreamingAssigner(p, d, obj=obj, reg=reg,
+                                           slack=slack, track_members=False)
+
+    def assign_chunk(self, chunk: ParsedChunk) -> np.ndarray:
+        out = np.empty(chunk.n, np.int64)
+        for i in range(chunk.n):             # inherently sequential policy
+            vals, cols = chunk.row(i)
+            out[i] = self._assigner.assign(vals, cols)
+        return out
+
+    def gamma(self) -> float:
+        return self._assigner.gamma()
+
+
+PLACEMENTS: Dict[str, Callable] = {
+    SequentialPlacement.name: SequentialPlacement,
+    RowHashPlacement.name: RowHashPlacement,
+    GammaPlacement.name: GammaPlacement,
+}
+
+
+def make_placement(name: str, p: int, d: int, *, seed: int = 0,
+                   obj=None, reg=None, **kw):
+    if name not in PLACEMENTS:
+        raise KeyError(f"unknown placement {name!r}; "
+                       f"available: {tuple(PLACEMENTS)}")
+    return PLACEMENTS[name](p=p, d=d, seed=seed, obj=obj, reg=reg, **kw)

@@ -1,0 +1,179 @@
+"""Dataset registry: Table-1 profiles behind `datasets.load(name)`.
+
+Each profile mirrors a paper dataset's *shape statistics* (dimension
+regime, density, task — same numbers as `data.synthetic.DATASET_SPECS`)
+but its fixture is generated **offline as real LIBSVM text** and then
+ingested through the genuine parse -> hash -> shard -> solve path, so
+CI and the benchmarks exercise the production ingestion pipeline with
+no network access:
+
+    loaded = datasets.load("rcv1-like", p=8, scale=0.05)
+    trace = solvers.run("pscope_lazy", obj, reg, loaded.partition())
+
+Both stages cache on disk under `data_root()` (``$REPRO_DATA_DIR`` or
+``~/.cache/repro-datasets``): the fixture text is keyed by
+(name, scale, seed) and the shard store by
+(fixture, p, placement, hash) — the manifest's presence is the commit
+marker, so an interrupted ingest re-runs instead of serving half a
+store.  `reference_arrays` re-runs the same generator in memory, which
+is what the end-to-end equivalence test diffs solver traces against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from pathlib import Path
+from typing import Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.data import sparse as sparse_data
+from repro.datasets import libsvm as libsvm_mod
+from repro.datasets.shards import ShardStore, ingest_libsvm
+
+ENV_ROOT = "REPRO_DATA_DIR"
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetProfile:
+    """One Table-1 analogue: generation parameters for its fixture."""
+
+    name: str
+    n: int
+    d: int
+    density: float
+    task: str                      # "classification" | "regression"
+    summary: str = ""
+
+    def rows_at(self, scale: float) -> int:
+        return max(64, int(self.n * scale))
+
+    @property
+    def model(self) -> str:
+        """The benchmark model matching this profile's task — the ONE
+        place the task -> model mapping lives."""
+        return "lasso" if self.task == "regression" else "logistic"
+
+
+DATASETS: Dict[str, DatasetProfile] = {
+    "rcv1-like": DatasetProfile(
+        "rcv1-like", 8192, 4096, 0.01, "classification",
+        "sparse high-d text-classification regime (rcv1)"),
+    "avazu-like": DatasetProfile(
+        "avazu-like", 8192, 8192, 0.002, "classification",
+        "very sparse CTR regime (avazu); pairs well with hashing"),
+    "kdd2012-like": DatasetProfile(
+        "kdd2012-like", 4096, 16384, 0.001, "classification",
+        "widest, sparsest regime (kdd2012)"),
+    "synth-reg-like": DatasetProfile(
+        "synth-reg-like", 4096, 2048, 0.01, "regression",
+        "sparse Lasso regression fixture"),
+}
+
+
+def default_regularizer(model: str):
+    """The paper's Table-1-style default lambdas per model — the ONE
+    copy of this convention (benchmarks.common and the registry
+    problems all resolve through here)."""
+    from repro.core.prox import Regularizer
+    return (Regularizer(1e-4, 1e-4) if model == "logistic"
+            else Regularizer(0.0, 1e-4))
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(DATASETS)
+
+
+def get(name: str) -> DatasetProfile:
+    if name not in DATASETS:
+        raise KeyError(f"unknown dataset {name!r}; available: {available()}")
+    return DATASETS[name]
+
+
+def data_root(root: Optional[Union[str, Path]] = None) -> Path:
+    if root is not None:
+        return Path(root)
+    env = os.environ.get(ENV_ROOT)
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro-datasets"
+
+
+def reference_arrays(name: str, scale: float = 1.0, seed: int = 0):
+    """The fixture's source arrays, regenerated in memory:
+    (CSRMatrix, y, w_true) — bitwise identical to what the fixture text
+    encodes (write_libsvm's %.9g round-trips float32 exactly)."""
+    prof = get(name)
+    gen = (sparse_data.make_csr_regression if prof.task == "regression"
+           else sparse_data.make_csr_classification)
+    return gen(prof.rows_at(scale), prof.d, prof.density, seed=seed)
+
+
+def fixture_path(name: str, scale: float = 1.0, seed: int = 0,
+                 root: Optional[Union[str, Path]] = None) -> Path:
+    prof = get(name)
+    return (data_root(root) / "fixtures"
+            / f"{prof.name}.s{scale:g}.seed{seed}.libsvm")
+
+
+def ensure_fixture(name: str, scale: float = 1.0, seed: int = 0,
+                   root: Optional[Union[str, Path]] = None) -> Path:
+    """Generate the LIBSVM fixture text if absent; returns its path."""
+    path = fixture_path(name, scale, seed, root)
+    if path.exists():
+        return path
+    path.parent.mkdir(parents=True, exist_ok=True)
+    csr, y, _ = reference_arrays(name, scale, seed)
+    tmp = path.with_suffix(".tmp")
+    libsvm_mod.write_libsvm(tmp, np.asarray(csr.vals), np.asarray(csr.cols),
+                            np.asarray(csr.row_nnz), np.asarray(y))
+    os.replace(tmp, path)
+    return path
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class LoadedDataset:
+    """A registry dataset resolved to an on-disk shard store."""
+
+    profile: DatasetProfile
+    store: ShardStore
+    fixture: Path
+
+    def partition(self, name: Optional[str] = None):
+        return self.store.partition(
+            name or f"{self.profile.name}/"
+                    f"{self.store.manifest['placement']}")
+
+    @property
+    def objective(self):
+        from repro.core.objectives import OBJECTIVES
+        return OBJECTIVES[self.profile.model]
+
+    @property
+    def regularizer(self):
+        """The benchmark-default Regularizer for this profile's model."""
+        return default_regularizer(self.profile.model)
+
+
+def load(name: str, *, p: int = 8, scale: float = 1.0, seed: int = 0,
+         placement: str = "sequential", hash_dim_log2: Optional[int] = None,
+         root: Optional[Union[str, Path]] = None,
+         chunk_bytes: int = 1 << 20, overwrite: bool = False,
+         obj=None, reg=None, **placement_kw) -> LoadedDataset:
+    """Resolve a registry dataset to mmap shards, building what's missing.
+
+    The whole path is cached: a second `load` with the same arguments
+    opens the committed store without touching the fixture text.
+    """
+    prof = get(name)
+    fixture = ensure_fixture(name, scale, seed, root)
+    tag = f"p{p}.{placement}"
+    if hash_dim_log2 is not None:
+        tag += f".h{hash_dim_log2}"
+    out_dir = data_root(root) / "shards" / f"{fixture.stem}.{tag}"
+    store = ingest_libsvm(
+        fixture, out_dir, p, placement=placement, n_features=prof.d,
+        hash_dim_log2=hash_dim_log2, zero_based=False,
+        chunk_bytes=chunk_bytes, seed=seed, obj=obj, reg=reg,
+        overwrite=overwrite, **placement_kw)
+    return LoadedDataset(profile=prof, store=store, fixture=fixture)

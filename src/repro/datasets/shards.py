@@ -1,0 +1,393 @@
+"""Memory-mapped packed shard store: LIBSVM text -> solver-ready shards.
+
+The store is the on-disk twin of the worker-major padded-CSR layout
+every fast path since PR 2 consumes (`CSRMatrix` with (p, n_k, k)
+arrays): four flat binary segments plus a write-once JSON manifest,
+
+    vals.f32      (p, n_k, K) float32   padded nonzero values
+    cols.i32      (p, n_k, K) int32     padded column ids
+    row_nnz.i32   (p, n_k)    int32     true nonzeros per row
+    labels.f32    (p, n_k)    float32   per-row labels
+    members.i64   (p, n_k)    int64     source row id of each shard slot
+    manifest.json                       shapes/dtypes/stats — written LAST,
+                                        so its presence is the commit marker
+
+`open_store` maps the segments with `np.memmap`; `ShardStore.csr_p`
+wraps the maps in a `CSRMatrix` with zero copies, so
+`pscope.run_scanned` / `run_distributed` and everything downstream of
+`data/pipeline.csr_partition` reads pages straight from the kernel page
+cache.  `members` preserves the ingest-time placement as an index array
+into the source file — which is exactly what lets the equivalence test
+rebuild the *same* `Partition` from in-memory arrays and demand
+matching solver traces.
+
+`ingest_libsvm` is the out-of-core builder.  Memory is bounded by
+construction, never by file size:
+
+  pass 1  stream `libsvm.iter_libsvm_chunks` (peak: one chunk + one
+          carried line), optionally re-key features through the signed
+          `FeatureHasher`, ask the placement policy for worker ids, and
+          append each worker's rows to ragged spill segments on disk;
+  pass 2  per worker, re-stream the spill in `finalize_rows` blocks and
+          scatter each block into the padded mmap segments (peak: one
+          (finalize_rows, K) block).
+
+The manifest records the chunk accounting (`IngestStats` + the
+finalize block ceiling) that the bounded-memory test asserts on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import time
+from functools import cached_property
+from pathlib import Path
+from typing import Optional, Union
+
+import numpy as np
+
+from repro.data.sparse import CSRMatrix
+from repro.datasets.hashing import FeatureHasher
+from repro.datasets.libsvm import IngestStats, iter_libsvm_chunks
+from repro.datasets.placement import make_placement
+
+MANIFEST = "manifest.json"
+SCHEMA = "pscope-shards/v1"
+
+_SEGMENTS = {
+    "vals": ("vals.f32", np.float32),
+    "cols": ("cols.i32", np.int32),
+    "row_nnz": ("row_nnz.i32", np.int32),
+    "labels": ("labels.f32", np.float32),
+    "members": ("members.i64", np.int64),
+}
+
+
+# ---------------------------------------------------------------------------
+# the read side
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardStore:
+    """An opened shard directory; array views are lazy memmaps, each
+    segment mapped once per store (cached_property writes into the
+    instance __dict__, which a frozen dataclass permits — the same
+    pattern as `partition.container.Partition`)."""
+
+    root: Path
+    manifest: dict
+
+    # -- shapes -----------------------------------------------------------
+    @property
+    def p(self) -> int:
+        return int(self.manifest["p"])
+
+    @property
+    def n_k(self) -> int:
+        return int(self.manifest["n_k"])
+
+    @property
+    def d(self) -> int:
+        return int(self.manifest["d"])
+
+    @property
+    def max_nnz(self) -> int:
+        return int(self.manifest["max_nnz"])
+
+    def _map(self, key: str, shape) -> np.memmap:
+        fname, dtype = _SEGMENTS[key]
+        return np.memmap(self.root / fname, dtype=dtype, mode="r",
+                         shape=shape)
+
+    # -- views (zero-copy over the page cache) ----------------------------
+    @cached_property
+    def vals(self) -> np.memmap:
+        return self._map("vals", (self.p, self.n_k, self.max_nnz))
+
+    @cached_property
+    def cols(self) -> np.memmap:
+        return self._map("cols", (self.p, self.n_k, self.max_nnz))
+
+    @cached_property
+    def row_nnz(self) -> np.memmap:
+        return self._map("row_nnz", (self.p, self.n_k))
+
+    @cached_property
+    def yp(self) -> np.memmap:
+        return self._map("labels", (self.p, self.n_k))
+
+    @cached_property
+    def members(self) -> np.memmap:
+        """(p, n_k) source-row ids — the ingest-time partition index."""
+        return self._map("members", (self.p, self.n_k))
+
+    @cached_property
+    def csr_p(self) -> CSRMatrix:
+        """Worker-major (p, n_k, K) CSR shards, mmap-backed — feeds
+        `pscope.run_scanned(obj, reg, store.csr_p, store.yp, ...)`."""
+        return CSRMatrix(vals=self.vals, cols=self.cols,
+                         row_nnz=self.row_nnz, d=self.d)
+
+    def partition(self, name: Optional[str] = None):
+        """A `core.solvers`-ready `Partition` over the mmap shards.
+
+        The flat view is the shard-major row order (idx = arange), so
+        `partition().csr_p` reproduces this store's layout exactly;
+        `members` maps shard slots back to source-file rows.
+        """
+        from repro.partition.container import make_partition
+        K = self.max_nnz
+        flat = CSRMatrix(vals=self.vals.reshape(-1, K),
+                         cols=self.cols.reshape(-1, K),
+                         row_nnz=np.asarray(self.row_nnz).reshape(-1),
+                         d=self.d)
+        idx = np.arange(self.p * self.n_k).reshape(self.p, self.n_k)
+        return make_partition(
+            flat, np.asarray(self.yp).reshape(-1), idx,
+            name=name or f"shards:{self.manifest.get('placement', '?')}")
+
+    @property
+    def nbytes(self) -> int:
+        return sum((self.root / f).stat().st_size
+                   for f, _ in _SEGMENTS.values())
+
+
+def open_store(root: Union[str, Path]) -> ShardStore:
+    root = Path(root)
+    mf = root / MANIFEST
+    if not mf.exists():
+        raise FileNotFoundError(
+            f"no shard manifest at {mf} — either the path is wrong or an "
+            "ingest was interrupted before commit (re-run ingest_libsvm)")
+    manifest = json.loads(mf.read_text())
+    if manifest.get("schema") != SCHEMA:
+        raise ValueError(f"unknown shard schema {manifest.get('schema')!r}")
+    return ShardStore(root=root, manifest=manifest)
+
+
+# ---------------------------------------------------------------------------
+# the write side
+# ---------------------------------------------------------------------------
+
+class _WorkerSpill:
+    """Append-only ragged segments for one worker during pass 1."""
+
+    def __init__(self, root: Path, k: int):
+        self.paths = {name: root / f"w{k}.{name}"
+                      for name in ("vals", "cols", "nnz", "y", "mem")}
+        self._f = {name: open(p, "wb") for name, p in self.paths.items()}
+        self.rows = 0
+        self.nnz = 0
+
+    def append(self, vals, cols, nnz, y, mem) -> None:
+        self._f["vals"].write(np.asarray(vals, np.float32).tobytes())
+        self._f["cols"].write(np.asarray(cols, np.int32).tobytes())
+        self._f["nnz"].write(np.asarray(nnz, np.int32).tobytes())
+        self._f["y"].write(np.asarray(y, np.float32).tobytes())
+        self._f["mem"].write(np.asarray(mem, np.int64).tobytes())
+        self.rows += len(nnz)
+        self.nnz += len(vals)
+
+    def close(self) -> None:
+        for f in self._f.values():
+            f.close()
+
+
+def _check_cached_manifest(mf: dict, args_key: dict) -> None:
+    """Refuse to serve a committed store whose recorded ingest arguments
+    (`manifest["args"]`) don't match the requested ones — including the
+    source file's size, so a rewritten input can't serve stale shards.
+
+    `n_features=None` in the request defers to whatever the cached
+    ingest inferred (the "let the file define d" mode)."""
+    have = dict(mf.get("args") or {})
+    want = dict(args_key)
+    if want.get("n_features") is None:
+        have.pop("n_features", None)
+        want.pop("n_features", None)
+    mismatches = [f"{k}: cached {have.get(k)!r} != requested {want[k]!r}"
+                  for k in want if have.get(k) != want[k]]
+    if mismatches:
+        raise ValueError(
+            "committed shard store at this path was built with different "
+            "arguments or source data (" + "; ".join(mismatches) + "); "
+            "pass overwrite=True to rebuild, or choose another out_dir")
+
+
+def _scatter_padded(vals, cols, nnz, K: int):
+    """Ragged block -> padded (R, K) float32/int32 pair, vectorized."""
+    R = len(nnz)
+    starts = np.zeros(R, np.int64)
+    starts[1:] = np.cumsum(nnz[:-1])
+    rowid = np.repeat(np.arange(R), nnz)
+    off = np.arange(len(vals)) - starts[rowid]
+    pv = np.zeros((R, K), np.float32)
+    pc = np.zeros((R, K), np.int32)
+    pv[rowid, off] = vals
+    pc[rowid, off] = cols
+    return pv, pc
+
+
+def ingest_libsvm(path: Union[str, Path], out_dir: Union[str, Path],
+                  p: int, *, placement: str = "sequential",
+                  n_features: Optional[int] = None,
+                  hash_dim_log2: Optional[int] = None, hash_seed: int = 0,
+                  zero_based: Union[bool, str] = "auto",
+                  chunk_bytes: int = 1 << 20, pad_to: Optional[int] = None,
+                  seed: int = 0, obj=None, reg=None,
+                  finalize_rows: int = 8192, overwrite: bool = False,
+                  **placement_kw) -> ShardStore:
+    """Stream a LIBSVM file into a committed `ShardStore` at `out_dir`.
+
+    `hash_dim_log2` routes features through the signed hasher to
+    ``2^k`` dims; `n_features` pins `d` when the file's max index
+    shouldn't define it (registry fixtures do this so trailing never-hit
+    features survive).  The `gamma` placement needs a known `d`, i.e.
+    one of those two arguments.  Returns the opened store.
+
+    A committed store already at `out_dir` is returned as-is IF its
+    manifest matches the ingest arguments (p, placement + its kwargs,
+    seed, hashing, pad_to, zero_based, the source file's path and
+    size); a mismatch raises rather than silently serving a
+    differently-configured or stale store — pass `overwrite=True` to
+    rebuild.  (`obj`/`reg` aren't serializable and are NOT part of the
+    cache key: a gamma ingest with a different objective needs
+    `overwrite=True` or a fresh `out_dir`.)
+    """
+    path = Path(path)
+    out_dir = Path(out_dir)
+    args_key = {
+        "p": p, "placement": placement, "seed": seed,
+        "hash": ({"dim_log2": hash_dim_log2, "seed": hash_seed}
+                 if hash_dim_log2 is not None else None),
+        "n_features": None if hash_dim_log2 is not None else n_features,
+        "pad_to": pad_to, "zero_based": str(zero_based),
+        "placement_kw": {k: v for k, v in sorted(placement_kw.items())},
+        "source": {"path": str(path), "bytes": path.stat().st_size},
+    }
+    if (out_dir / MANIFEST).exists():
+        if not overwrite:
+            cached = open_store(out_dir)
+            _check_cached_manifest(cached.manifest, args_key)
+            return cached
+        shutil.rmtree(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    hasher = (FeatureHasher(hash_dim_log2, hash_seed)
+              if hash_dim_log2 is not None else None)
+    d_known = hasher.dim if hasher is not None else n_features
+    if placement == "gamma" and d_known is None:
+        raise ValueError("gamma placement needs n_features or hash_dim_log2 "
+                         "(its curvature state is (p, d))")
+    policy = make_placement(placement, p, d_known or 0, seed=seed, obj=obj,
+                            reg=reg, **placement_kw)
+
+    spill_dir = out_dir / "_spill"
+    spill_dir.mkdir(exist_ok=True)
+    spills = [_WorkerSpill(spill_dir, k) for k in range(p)]
+    stats = IngestStats()
+    t0 = time.perf_counter()
+    max_nnz = 0
+    max_col = -1
+    row_base = 0
+    try:
+        for chunk in iter_libsvm_chunks(path, chunk_bytes=chunk_bytes,
+                                        zero_based=zero_based, stats=stats):
+            cols, vals = chunk.cols, chunk.vals
+            if hasher is not None:
+                cols, vals = hasher(cols, vals)
+                # placement must see the features as they will be
+                # STORED: gamma's (p, d) curvature state is indexed by
+                # hashed column ids
+                chunk = dataclasses.replace(chunk, cols=cols, vals=vals)
+            nnz = np.diff(chunk.indptr).astype(np.int32)
+            if chunk.n:
+                max_nnz = max(max_nnz, int(nnz.max()))
+            if len(cols):
+                max_col = max(max_col, int(cols.max()))
+            wk = policy.assign_chunk(chunk)
+            mem = row_base + np.arange(chunk.n, dtype=np.int64)
+            row_base += chunk.n
+            feat_wk = np.repeat(wk, nnz)
+            for k in range(p):
+                rows_k = wk == k
+                if not np.any(rows_k):
+                    continue
+                fk = feat_wk == k
+                spills[k].append(vals[fk], cols[fk], nnz[rows_k],
+                                 chunk.labels[rows_k], mem[rows_k])
+    finally:
+        for s in spills:
+            s.close()
+
+    counts = [s.rows for s in spills]
+    n_k = min(counts)
+    if n_k == 0:
+        shutil.rmtree(spill_dir)
+        raise ValueError(f"worker shard came up empty (counts={counts}); "
+                         "fewer rows than workers?")
+    d = d_known or (max_col + 1)
+    if max_col >= d:
+        shutil.rmtree(spill_dir)
+        raise ValueError(f"feature index {max_col} >= n_features={d}")
+    K = max(max_nnz, 1)
+    if pad_to is not None:
+        K = max(K, pad_to)
+
+    # ---- pass 2: spill -> padded mmap segments, block by block ----------
+    shapes = {"vals": (p, n_k, K), "cols": (p, n_k, K),
+              "row_nnz": (p, n_k), "labels": (p, n_k), "members": (p, n_k)}
+    maps = {key: np.memmap(out_dir / _SEGMENTS[key][0],
+                           dtype=_SEGMENTS[key][1], mode="w+",
+                           shape=shapes[key]) for key in _SEGMENTS}
+    for k, s in enumerate(spills):
+        fv = open(s.paths["vals"], "rb")
+        fc = open(s.paths["cols"], "rb")
+        nnz_all = np.fromfile(s.paths["nnz"], np.int32)
+        maps["row_nnz"][k] = nnz_all[:n_k]
+        maps["labels"][k] = np.fromfile(s.paths["y"], np.float32)[:n_k]
+        maps["members"][k] = np.fromfile(s.paths["mem"], np.int64)[:n_k]
+        row = 0
+        while row < n_k:
+            blk = nnz_all[row:min(row + finalize_rows, n_k)]
+            total = int(blk.sum())
+            bv = np.frombuffer(fv.read(total * 4), np.float32)
+            bc = np.frombuffer(fc.read(total * 4), np.int32)
+            pv, pc = _scatter_padded(bv, bc, blk, K)
+            maps["vals"][k, row:row + len(blk)] = pv
+            maps["cols"][k, row:row + len(blk)] = pc
+            row += len(blk)
+        fv.close()
+        fc.close()
+    for m in maps.values():
+        m.flush()
+    del maps
+    shutil.rmtree(spill_dir)
+
+    stats.seconds = time.perf_counter() - t0
+    manifest = {
+        "schema": SCHEMA,
+        "p": p, "n_k": n_k, "d": int(d), "max_nnz": int(K),
+        "counts": counts, "dropped": int(sum(counts) - n_k * p),
+        "placement": placement, "seed": seed,
+        "hash": args_key["hash"],
+        "source": args_key["source"],
+        "args": args_key,              # the cache key (see above)
+        "stats": {
+            "rows": stats.rows, "nnz": stats.nnz,
+            "bytes_read": stats.bytes_read, "chunks": stats.chunks,
+            "max_buffer_bytes": stats.max_buffer_bytes,
+            "max_rows_per_chunk": stats.max_rows_per_chunk,
+            "chunk_bytes": chunk_bytes,
+            "finalize_rows": finalize_rows,
+            "max_finalize_buffer_bytes": finalize_rows * K * 8,
+            "seconds": stats.seconds,
+            "mb_per_s": stats.mb_per_s, "rows_per_s": stats.rows_per_s,
+        },
+    }
+    tmp = out_dir / (MANIFEST + ".tmp")
+    tmp.write_text(json.dumps(manifest, indent=2) + "\n")
+    os.replace(tmp, out_dir / MANIFEST)          # commit point
+    return open_store(out_dir)

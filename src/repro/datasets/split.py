@@ -1,0 +1,40 @@
+"""Train/test splitting for dense or padded-CSR datasets.
+
+One seeded permutation, two row subsets — works on dense ``(n, d)``
+arrays and `CSRMatrix` alike, so the held-out evaluation hook in
+`core.solvers` (`evaluate_heldout` + `Trace.heldout`) can consume
+whatever representation the pipeline produced.
+"""
+from __future__ import annotations
+
+from typing import Tuple, Union
+
+import numpy as np
+
+from repro.data.sparse import CSRMatrix
+
+
+def take_rows(X_or_csr: Union[np.ndarray, CSRMatrix], idx: np.ndarray):
+    """Row subset preserving the representation (dense stays dense,
+    padded CSR stays padded CSR at the same width)."""
+    if isinstance(X_or_csr, CSRMatrix):
+        return CSRMatrix(vals=X_or_csr.vals[idx], cols=X_or_csr.cols[idx],
+                         row_nnz=X_or_csr.row_nnz[idx], d=X_or_csr.d)
+    return np.asarray(X_or_csr)[idx]
+
+
+def train_test_split(X_or_csr, y, test_frac: float = 0.2, seed: int = 0
+                     ) -> Tuple[object, np.ndarray, object, np.ndarray]:
+    """(X_train, y_train, X_test, y_test) from one seeded permutation."""
+    if not 0.0 < test_frac < 1.0:
+        raise ValueError(f"test_frac must be in (0, 1), got {test_frac}")
+    y = np.asarray(y)
+    n = (X_or_csr.vals.shape[0] if isinstance(X_or_csr, CSRMatrix)
+         else np.asarray(X_or_csr).shape[0])
+    if n != len(y):
+        raise ValueError(f"X has {n} rows but y has {len(y)}")
+    perm = np.random.RandomState(seed).permutation(n)
+    n_test = max(1, int(n * test_frac))
+    te, tr = perm[:n_test], perm[n_test:]
+    return (take_rows(X_or_csr, tr), y[tr],
+            take_rows(X_or_csr, te), y[te])

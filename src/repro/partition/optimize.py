@@ -208,7 +208,12 @@ class StreamingAssigner:
     """
 
     def __init__(self, p: int, d: int, obj=None, reg=None, *,
-                 slack: int = 2, delta: float = SURROGATE_DELTA):
+                 slack: int = 2, delta: float = SURROGATE_DELTA,
+                 track_members: bool = True):
+        """`track_members=False` drops the per-row member lists — the
+        only O(n) state — for consumers that record placements
+        themselves (the ingest pipeline's gamma policy); with it off,
+        `partition_idx()` is unavailable."""
         self.p = p
         self.d = d
         self._c = curvature_scale(obj)
@@ -216,7 +221,8 @@ class StreamingAssigner:
         self._slack = max(1, int(slack))
         self._S = np.zeros((p, d), np.float64)
         self._counts = np.zeros(p, np.int64)
-        self._members: List[List[int]] = [[] for _ in range(p)]
+        self._members: Optional[List[List[int]]] = (
+            [[] for _ in range(p)] if track_members else None)
         self._next_index = 0
 
     def _diags(self, S: np.ndarray, counts: np.ndarray) -> np.ndarray:
@@ -245,25 +251,34 @@ class StreamingAssigner:
                       np.asarray(row, dtype=np.float64) ** 2)
         eligible = np.where(
             self._counts < self._counts.min() + self._slack)[0]
+        # only shard k's diagonal row changes under a candidate
+        # placement, so score candidates by swapping that one row in a
+        # shared diag matrix instead of copying the (p, d) state per
+        # candidate (the ingest hot path: one assign per arriving row)
+        D = self._diags(self._S, self._counts)
         best_k, best_gamma = int(eligible[0]), np.inf
         for k in eligible:
-            S_try = self._S.copy()
-            S_try[k] += r
-            counts_try = self._counts.copy()
-            counts_try[k] += 1
-            g = self._gamma_if(S_try, counts_try)
+            row_old = D[k].copy()
+            D[k] = (self._c * (self._S[k] + r) / (self._counts[k] + 1)
+                    + self._base)
+            g = gamma_surrogate_from_diags(D)
+            D[k] = row_old
             if g < best_gamma - 1e-15 or (
                     np.isclose(g, best_gamma) and
                     self._counts[k] < self._counts[best_k]):
                 best_k, best_gamma = int(k), g
         self._S[best_k] += r
         self._counts[best_k] += 1
-        i = self._next_index if index is None else int(index)
-        self._members[best_k].append(i)
+        if self._members is not None:
+            i = self._next_index if index is None else int(index)
+            self._members[best_k].append(i)
         self._next_index += 1
         return best_k
 
     def partition_idx(self) -> np.ndarray:
+        if self._members is None:
+            raise ValueError("constructed with track_members=False; "
+                             "the caller records placements itself")
         n_k = int(self._counts.min())
         if n_k == 0:
             raise ValueError("no complete shard yet: "

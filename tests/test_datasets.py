@@ -1,0 +1,531 @@
+"""Streaming ingestion subsystem: parser edge cases, hashing
+unbiasedness, shard-store round trips, bounded-memory accounting,
+placement policies, and the end-to-end mmap == in-memory solver-trace
+equivalence the PR's acceptance criteria pin."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import datasets
+from repro.data.sparse import (CSRMatrix, csr_to_dense, dense_to_csr,
+                               shard_rows)
+from repro.datasets.libsvm import (IngestStats, iter_libsvm_chunks,
+                                   parse_libsvm_bytes, write_libsvm)
+from repro.datasets.hashing import FeatureHasher
+from repro.datasets.placement import make_placement
+
+from _hypothesis_compat import given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# parser edge cases
+# ---------------------------------------------------------------------------
+
+def test_parse_basic_one_based():
+    ck = parse_libsvm_bytes(b"+1 1:0.5 3:1.25\n-1 2:2\n")
+    np.testing.assert_array_equal(ck.labels, [1.0, -1.0])
+    np.testing.assert_array_equal(ck.indptr, [0, 2, 3])
+    np.testing.assert_array_equal(ck.cols, [0, 2, 1])
+    np.testing.assert_array_equal(ck.vals, [0.5, 1.25, 2.0])
+
+
+def test_parse_comments_blank_lines_and_trailing_whitespace():
+    text = (b"# a full-line comment\n"
+            b"+1 2:1.5 1:0.25  # trailing comment\n"
+            b"\n"
+            b"   \n"
+            b"-1 3:-2e-3   \r\n")
+    ck = parse_libsvm_bytes(text)
+    np.testing.assert_array_equal(ck.labels, [1.0, -1.0])
+    np.testing.assert_array_equal(ck.cols, [1, 0, 2])
+    np.testing.assert_allclose(ck.vals, [1.5, 0.25, -2e-3])
+
+
+def test_parse_empty_rows_label_only():
+    ck = parse_libsvm_bytes(b"1 1:1\n-1\n1 2:3\n")
+    np.testing.assert_array_equal(ck.labels, [1.0, -1.0, 1.0])
+    np.testing.assert_array_equal(ck.indptr, [0, 1, 1, 2])
+
+
+def test_parse_duplicate_and_unsorted_indices_preserved():
+    ck = parse_libsvm_bytes(b"1 5:1 2:2 5:3 1:4\n")
+    np.testing.assert_array_equal(ck.cols, [4, 1, 4, 0])   # file order kept
+    np.testing.assert_array_equal(ck.vals, [1, 2, 3, 4])
+
+
+def test_parse_zero_vs_one_based():
+    one = parse_libsvm_bytes(b"1 1:7\n", one_based=True)
+    zero = parse_libsvm_bytes(b"1 0:7\n", one_based=False)
+    assert one.cols[0] == 0 and zero.cols[0] == 0
+    with pytest.raises(ValueError, match="index 0"):
+        parse_libsvm_bytes(b"1 0:7\n", one_based=True)
+
+
+def test_parse_malformed():
+    with pytest.raises(ValueError, match="dangling"):
+        parse_libsvm_bytes(b"1 3:1 4\n")
+    with pytest.raises(ValueError, match="unparseable"):
+        parse_libsvm_bytes(b"1 2:abc\n")
+
+
+def test_parse_no_final_newline():
+    ck = parse_libsvm_bytes(b"1 1:1\n-1 2:2")
+    assert ck.n == 2
+
+
+def test_chunked_iteration_matches_single_parse(tmp_path):
+    rng = np.random.RandomState(0)
+    lines = []
+    for i in range(200):
+        k = rng.randint(0, 6)
+        feats = " ".join(f"{c + 1}:{v:.9g}" for c, v in zip(
+            rng.randint(0, 50, k), rng.randn(k)))
+        lines.append(f"{rng.choice([-1.0, 1.0]):.9g} {feats}".rstrip())
+    text = ("\n".join(lines) + "\n").encode()
+    path = tmp_path / "chunky.libsvm"
+    path.write_bytes(text)
+    ref = parse_libsvm_bytes(text)
+    for chunk_bytes in (7, 64, 999, 1 << 20):   # boundaries mid-line
+        stats = IngestStats()
+        parts = list(iter_libsvm_chunks(path, chunk_bytes=chunk_bytes,
+                                        zero_based=False, stats=stats))
+        labels = np.concatenate([c.labels for c in parts])
+        cols = np.concatenate([c.cols for c in parts])
+        vals = np.concatenate([c.vals for c in parts])
+        nnz = np.concatenate([np.diff(c.indptr) for c in parts])
+        np.testing.assert_array_equal(labels, ref.labels)
+        np.testing.assert_array_equal(cols, ref.cols)
+        np.testing.assert_array_equal(vals, ref.vals)
+        np.testing.assert_array_equal(nnz, np.diff(ref.indptr))
+        assert stats.rows == ref.n and stats.nnz == ref.nnz
+
+
+def test_zero_based_auto_detection(tmp_path):
+    p0 = tmp_path / "zero.libsvm"
+    p0.write_bytes(b"1 0:1 3:2\n-1 1:1\n")
+    chunks = list(iter_libsvm_chunks(p0, zero_based="auto"))
+    assert chunks[0].cols.min() == 0 and chunks[0].cols.max() == 3
+    p1 = tmp_path / "one.libsvm"
+    p1.write_bytes(b"1 1:1 4:2\n-1 2:1\n")
+    chunks = list(iter_libsvm_chunks(p1, zero_based="auto"))
+    assert chunks[0].cols.min() == 0 and chunks[0].cols.max() == 3
+
+
+# ---------------------------------------------------------------------------
+# signed feature hashing
+# ---------------------------------------------------------------------------
+
+def test_hashing_range_and_determinism():
+    h = FeatureHasher(dim_log2=6, seed=3)
+    cols = np.arange(5000)
+    vals = np.ones(5000, np.float32)
+    c1, v1 = h(cols, vals)
+    c2, v2 = h(cols, vals)
+    np.testing.assert_array_equal(c1, c2)
+    np.testing.assert_array_equal(v1, v2)
+    assert c1.min() >= 0 and c1.max() < 64
+    assert set(np.unique(v1)) <= {-1.0, 1.0}
+    # both signs and a spread of buckets actually occur
+    assert len(np.unique(c1)) == 64 and len(np.unique(v1)) == 2
+
+
+def _hashed_dot(h, cols_x, vals_x, cols_y, vals_y):
+    cx, vx = h(cols_x, vals_x)
+    cy, vy = h(cols_y, vals_y)
+    phi_x = np.zeros(h.dim)
+    np.add.at(phi_x, cx, vx)
+    phi_y = np.zeros(h.dim)
+    np.add.at(phi_y, cy, vy)
+    return float(phi_x @ phi_y)
+
+
+def test_hashing_sign_trick_unbiased():
+    """E_seed[<phi(x), phi(y)>] = <x, y>: collisions cancel in
+    expectation because the sign bits are independent coin flips."""
+    rng = np.random.RandomState(0)
+    d = 512
+    cols_x = rng.choice(d, 40, replace=False)
+    cols_y = rng.choice(d, 40, replace=False)
+    vals_x = rng.randn(40).astype(np.float32)
+    vals_y = rng.randn(40).astype(np.float32)
+    x = np.zeros(d)
+    np.add.at(x, cols_x, vals_x)
+    y = np.zeros(d)
+    np.add.at(y, cols_y, vals_y)
+    true_dot = float(x @ y)
+    # aggressive 2^4 = 16 buckets: guaranteed collisions
+    dots = [_hashed_dot(FeatureHasher(4, seed), cols_x, vals_x,
+                        cols_y, vals_y) for seed in range(400)]
+    est = np.mean(dots)
+    spread = np.std(dots) / np.sqrt(len(dots))
+    assert abs(est - true_dot) < 4 * spread + 1e-6
+    # and the estimator is not degenerate (collisions DO perturb draws)
+    assert np.std(dots) > 1e-3
+
+
+def test_hashed_ingest_dim(tmp_path):
+    path = tmp_path / "h.libsvm"
+    write_libsvm(path, np.ones((8, 2), np.float32),
+                 np.arange(16).reshape(8, 2) % 11,
+                 np.full(8, 2, np.int32), np.ones(8, np.float32))
+    store = datasets.ingest_libsvm(path, tmp_path / "h_shards", p=2,
+                                   hash_dim_log2=3, zero_based=False)
+    assert store.d == 8
+    assert np.asarray(store.cols).max() < 8
+
+
+# ---------------------------------------------------------------------------
+# shard store round trips
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_roundtrip_bitwise_with_inmemory_csr(tmp_path_factory, seed):
+    """parse -> shard -> load reproduces the in-memory CSRMatrix path
+    bitwise (values, columns, counts, labels)."""
+    tmp = tmp_path_factory.mktemp(f"rt{seed}")
+    from repro.data.sparse import make_csr_classification
+    csr, y, _ = make_csr_classification(37, 101, density=0.04, seed=seed)
+    path = tmp / "rt.libsvm"
+    write_libsvm(path, np.asarray(csr.vals), np.asarray(csr.cols),
+                 np.asarray(csr.row_nnz), y)
+    store = datasets.ingest_libsvm(path, tmp / "shards", p=3,
+                                   n_features=101, zero_based=False,
+                                   chunk_bytes=256)
+    ref = shard_rows(csr, np.asarray(store.members))
+    np.testing.assert_array_equal(np.asarray(store.vals),
+                                  np.asarray(ref.vals))
+    np.testing.assert_array_equal(np.asarray(store.cols),
+                                  np.asarray(ref.cols))
+    np.testing.assert_array_equal(np.asarray(store.row_nnz),
+                                  np.asarray(ref.row_nnz))
+    np.testing.assert_array_equal(
+        np.asarray(store.yp), y[np.asarray(store.members)])
+
+
+def test_roundtrip_ragged_dense_pipeline(tmp_path):
+    """A ragged dense matrix through dense_to_csr -> libsvm -> shards
+    comes back bitwise (pad_to aligns the slice widths)."""
+    rng = np.random.RandomState(7)
+    X = rng.randn(24, 31).astype(np.float32)
+    X[rng.rand(24, 31) > 0.2] = 0.0
+    X[5] = 0.0                                   # an all-zero row
+    y = rng.choice([-1.0, 1.0], 24).astype(np.float32)
+    csr = dense_to_csr(X)
+    path = tmp_path / "ragged.libsvm"
+    write_libsvm(path, np.asarray(csr.vals), np.asarray(csr.cols),
+                 np.asarray(csr.row_nnz), y)
+    store = datasets.ingest_libsvm(path, tmp_path / "shards", p=2,
+                                   n_features=31, zero_based=False,
+                                   pad_to=csr.max_nnz)
+    members = np.asarray(store.members)
+    ref = shard_rows(csr, members)
+    np.testing.assert_array_equal(np.asarray(store.vals),
+                                  np.asarray(ref.vals))
+    np.testing.assert_array_equal(np.asarray(store.cols),
+                                  np.asarray(ref.cols))
+    # and densified shards match the original rows exactly
+    np.testing.assert_array_equal(np.asarray(csr_to_dense(store.csr_p)),
+                                  X[members])
+
+
+def test_manifest_is_commit_marker(tmp_path):
+    path = tmp_path / "x.libsvm"
+    path.write_bytes(b"1 1:1\n-1 2:1\n1 1:2\n-1 2:2\n")
+    out = tmp_path / "shards"
+    with pytest.raises(FileNotFoundError, match="manifest"):
+        datasets.open_store(out)
+    store = datasets.ingest_libsvm(path, out, p=2, zero_based=False)
+    assert (out / "manifest.json").exists()
+    # a second ingest call opens the committed store instead of rebuilding
+    m1 = json.loads((out / "manifest.json").read_text())
+    again = datasets.ingest_libsvm(path, out, p=2, zero_based=False)
+    assert again.manifest == m1 == store.manifest
+
+
+# ---------------------------------------------------------------------------
+# bounded-memory ingest (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def _write_fixture(path, rows: int, seed: int = 0) -> int:
+    rng = np.random.RandomState(seed)
+    k = 8
+    vals = rng.randn(rows, k).astype(np.float32)
+    cols = rng.randint(0, 300, size=(rows, k))
+    write_libsvm(path, vals, cols, np.full(rows, k, np.int32),
+                 rng.choice([-1.0, 1.0], rows).astype(np.float32))
+    return path.stat().st_size
+
+
+def test_bounded_memory_ingest(tmp_path):
+    """Peak ingest working set is a function of chunk_bytes, not file
+    size: a 4x larger file (>= 10x the chunk size) reports the same
+    buffer ceiling in the chunk accounting."""
+    chunk_bytes = 4096
+    max_line = 256                     # generous bound for the fixture rows
+    ceilings = {}
+    for tag, rows in (("small", 400), ("large", 1600)):
+        path = tmp_path / f"{tag}.libsvm"
+        size = _write_fixture(path, rows)
+        assert size >= 10 * chunk_bytes or tag == "small"
+        store = datasets.ingest_libsvm(path, tmp_path / f"{tag}_shards",
+                                       p=4, n_features=300,
+                                       zero_based=False,
+                                       chunk_bytes=chunk_bytes,
+                                       finalize_rows=64)
+        s = store.manifest["stats"]
+        assert s["rows"] == rows
+        assert s["max_buffer_bytes"] <= chunk_bytes + max_line
+        assert s["max_rows_per_chunk"] <= chunk_bytes // 20 + 2
+        assert s["max_finalize_buffer_bytes"] == 64 * store.max_nnz * 8
+        ceilings[tag] = (s["max_buffer_bytes"], s["chunks"])
+    # the buffer ceiling did not grow with the file; the chunk count did
+    assert ceilings["large"][0] <= chunk_bytes + max_line
+    assert ceilings["large"][1] > 2 * ceilings["small"][1]
+
+
+# ---------------------------------------------------------------------------
+# placement policies
+# ---------------------------------------------------------------------------
+
+def _chunk_of(csr: CSRMatrix, y):
+    from repro.datasets.libsvm import ParsedChunk
+    vals = np.asarray(csr.vals)
+    cols = np.asarray(csr.cols)
+    nnz = np.asarray(csr.row_nnz)
+    indptr = np.zeros(len(y) + 1, np.int64)
+    indptr[1:] = np.cumsum(nnz)
+    flat_v = np.concatenate([vals[i, :nnz[i]] for i in range(len(y))])
+    flat_c = np.concatenate([cols[i, :nnz[i]] for i in range(len(y))])
+    return ParsedChunk(np.asarray(y, np.float32), indptr,
+                       flat_c.astype(np.int64), flat_v.astype(np.float32))
+
+
+def test_sequential_placement_round_robin():
+    pol = make_placement("sequential", p=3, d=10)
+    from repro.datasets.libsvm import ParsedChunk
+    ck = ParsedChunk(np.zeros(7, np.float32), np.arange(8, dtype=np.int64),
+                     np.zeros(7, np.int64), np.zeros(7, np.float32))
+    np.testing.assert_array_equal(pol.assign_chunk(ck),
+                                  [0, 1, 2, 0, 1, 2, 0])
+    # state carries across chunks
+    np.testing.assert_array_equal(
+        pol.assign_chunk(ParsedChunk(np.zeros(2, np.float32),
+                                     np.arange(3, dtype=np.int64),
+                                     np.zeros(2, np.int64),
+                                     np.zeros(2, np.float32))), [1, 2])
+
+
+def test_row_hash_placement_deterministic_and_balanced():
+    from repro.datasets.libsvm import ParsedChunk
+    n = 4000
+    ck = ParsedChunk(np.zeros(n, np.float32),
+                     np.arange(n + 1, dtype=np.int64),
+                     np.zeros(n, np.int64), np.zeros(n, np.float32))
+    a = make_placement("row_hash", p=4, d=1, seed=1).assign_chunk(ck)
+    b = make_placement("row_hash", p=4, d=1, seed=1).assign_chunk(ck)
+    np.testing.assert_array_equal(a, b)
+    counts = np.bincount(a, minlength=4)
+    assert counts.min() > n / 4 * 0.85
+    c = make_placement("row_hash", p=4, d=1, seed=2).assign_chunk(ck)
+    assert not np.array_equal(a, c)
+
+
+def test_gamma_placement_beats_sequential_on_sorted_stream():
+    """Label-sorted arrivals (the adversarial order for a sequential
+    filler) land near uniform gamma~ under marginal-gamma placement."""
+    from repro.data.sparse import make_csr_classification
+    from repro.partition.container import make_partition
+    from repro.partition.metrics import gamma_surrogate
+    csr, y, _ = make_csr_classification(96, 64, density=0.2, seed=0)
+    order = np.argsort(np.asarray(csr.vals).sum(axis=1))   # adversarial
+    sorted_csr = shard_rows(csr, order)
+    ck = _chunk_of(sorted_csr, y[order])
+    p = 4
+    gammas = {}
+    for name in ("sequential", "gamma"):
+        pol = make_placement(name, p=p, d=64)
+        wk = pol.assign_chunk(ck)
+        n_k = np.bincount(wk, minlength=p).min()
+        idx = np.stack([np.where(wk == k)[0][:n_k] for k in range(p)])
+        part = make_partition(sorted_csr, y[order], idx, name=name)
+        gammas[name] = float(gamma_surrogate(part))
+    assert gammas["gamma"] <= gammas["sequential"] * 1.001
+
+
+def test_gamma_placement_sees_hashed_features(tmp_path):
+    """Regression: with hashing on, placement must consume the hashed
+    column ids (raw ids can exceed the 2^k curvature state)."""
+    rng = np.random.RandomState(0)
+    n, k = 24, 3
+    cols = rng.randint(0, 5000, size=(n, k))       # raw ids >> 2^5
+    write_libsvm(tmp_path / "gh.libsvm",
+                 rng.randn(n, k).astype(np.float32), cols,
+                 np.full(n, k, np.int32),
+                 rng.choice([-1.0, 1.0], n).astype(np.float32))
+    store = datasets.ingest_libsvm(tmp_path / "gh.libsvm",
+                                   tmp_path / "gh_shards", p=2,
+                                   placement="gamma", hash_dim_log2=5,
+                                   zero_based=False)
+    assert store.d == 32 and np.asarray(store.cols).max() < 32
+
+
+def test_cached_store_rejects_mismatched_arguments(tmp_path):
+    path = tmp_path / "c.libsvm"
+    path.write_bytes(b"1 1:1\n-1 2:1\n1 1:2\n-1 2:2\n")
+    datasets.ingest_libsvm(path, tmp_path / "shards", p=2,
+                           zero_based=False)
+    with pytest.raises(ValueError, match="different arguments"):
+        datasets.ingest_libsvm(path, tmp_path / "shards", p=4,
+                               zero_based=False)
+    with pytest.raises(ValueError, match="placement"):
+        datasets.ingest_libsvm(path, tmp_path / "shards", p=2,
+                               placement="row_hash", zero_based=False)
+    # overwrite=True rebuilds instead
+    store = datasets.ingest_libsvm(path, tmp_path / "shards", p=4,
+                                   zero_based=False, overwrite=True)
+    assert store.p == 4
+
+
+def test_gamma_placement_through_ingest(tmp_path):
+    from repro.data.sparse import make_csr_classification
+    csr, y, _ = make_csr_classification(40, 32, density=0.2, seed=1)
+    path = tmp_path / "g.libsvm"
+    write_libsvm(path, np.asarray(csr.vals), np.asarray(csr.cols),
+                 np.asarray(csr.row_nnz), y)
+    store = datasets.ingest_libsvm(path, tmp_path / "g_shards", p=2,
+                                   placement="gamma", n_features=32,
+                                   zero_based=False)
+    assert store.manifest["placement"] == "gamma"
+    members = np.asarray(store.members)
+    assert len(np.unique(members)) == members.size    # a real partition
+    with pytest.raises(ValueError, match="gamma placement"):
+        datasets.ingest_libsvm(path, tmp_path / "g2", p=2,
+                               placement="gamma", zero_based=False)
+
+
+# ---------------------------------------------------------------------------
+# registry + end-to-end solver equivalence (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def data_root(tmp_path, monkeypatch):
+    from repro.datasets.registry import ENV_ROOT
+    monkeypatch.setenv(ENV_ROOT, str(tmp_path))
+    return tmp_path
+
+
+def test_registry_load_and_cache(data_root):
+    loaded = datasets.load("rcv1-like", p=4, scale=0.02, seed=0)
+    assert loaded.store.d == 4096 and loaded.store.p == 4
+    fixture_mtime = loaded.fixture.stat().st_mtime_ns
+    manifest = dict(loaded.store.manifest)
+    again = datasets.load("rcv1-like", p=4, scale=0.02, seed=0)
+    assert again.fixture.stat().st_mtime_ns == fixture_mtime
+    assert again.store.manifest == manifest
+    with pytest.raises(KeyError, match="unknown dataset"):
+        datasets.load("rcv1")
+
+
+def test_e2e_mmap_equals_inmemory_trace(data_root):
+    """datasets.load -> mmap shards -> pscope_lazy reproduces the
+    in-memory pipeline's Trace (values/NNZ) on the same seed — run by
+    CI in BOTH USE_PALLAS modes."""
+    from repro.core import LOGISTIC, Regularizer, solvers
+    from repro.core.solvers import SolverConfig
+    from repro.partition.container import make_partition
+
+    loaded = datasets.load("rcv1-like", p=4, scale=0.02, seed=0)
+    csr, y, _ = datasets.reference_arrays("rcv1-like", scale=0.02, seed=0)
+    members = np.asarray(loaded.store.members)
+
+    reg = Regularizer(1e-4, 1e-4)
+    cfg = SolverConfig(rounds=4, eta=0.5, inner_epochs=2.0)
+    tr_store = solvers.run("pscope_lazy", LOGISTIC, reg,
+                           loaded.partition(), cfg)
+    tr_csr = solvers.run("pscope_lazy", LOGISTIC, reg,
+                         make_partition(csr, y, members, name="mem"), cfg)
+    np.testing.assert_allclose(tr_store.values, tr_csr.values,
+                               rtol=2e-5, atol=1e-6)
+    assert tr_store.nnz == tr_csr.nnz
+
+    # dense-backed pipeline (order/duplicate normalization differs, so
+    # fp32 tolerance rather than bitwise)
+    tr_dense = solvers.run(
+        "pscope_lazy", LOGISTIC, reg,
+        make_partition(csr_to_dense(csr), y, members, name="dense"), cfg)
+    np.testing.assert_allclose(tr_store.values, tr_dense.values,
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_run_scanned_accepts_mmap_shards(data_root):
+    import jax.numpy as jnp
+    from repro.core import LOGISTIC, Regularizer, pscope
+    loaded = datasets.load("rcv1-like", p=4, scale=0.02, seed=0)
+    st_ = loaded.store
+    pcfg = pscope.PScopeConfig(eta=0.5, inner_steps=st_.n_k, outer_steps=2,
+                               seed=0, inner_path="lazy")
+    w, values, nnzs = pscope.run_scanned(
+        LOGISTIC, Regularizer(1e-4, 1e-4), st_.csr_p,
+        jnp.asarray(np.asarray(st_.yp)), jnp.zeros(st_.d), pcfg)
+    assert len(values) == 3 and np.all(np.isfinite(values))
+    assert values[-1] < values[0]
+
+
+# ---------------------------------------------------------------------------
+# train/test split + held-out Trace hook
+# ---------------------------------------------------------------------------
+
+def test_train_test_split_shapes_and_disjoint():
+    from repro.data.sparse import make_csr_classification
+    csr, y, _ = make_csr_classification(50, 20, density=0.2, seed=0)
+    Xtr, ytr, Xte, yte = datasets.train_test_split(csr, y, test_frac=0.2,
+                                                   seed=3)
+    assert Xtr.vals.shape[0] == len(ytr) == 40
+    assert Xte.vals.shape[0] == len(yte) == 10
+    dtr = np.asarray(csr_to_dense(Xtr))
+    dte = np.asarray(csr_to_dense(Xte))
+    full = np.asarray(csr_to_dense(csr))
+    recon = {tuple(r) for r in np.vstack([dtr, dte])}
+    assert recon == {tuple(r) for r in full}
+    with pytest.raises(ValueError, match="test_frac"):
+        datasets.train_test_split(csr, y, test_frac=1.5)
+
+
+def test_heldout_hook_via_solver_extras():
+    from repro.core import LOGISTIC, Regularizer, solvers
+    from repro.core.solvers import SolverConfig, evaluate_heldout
+    from repro.data.sparse import make_csr_classification
+    from repro.partition.container import make_partition
+
+    csr, y, _ = make_csr_classification(64, 128, density=0.1, seed=0)
+    Xtr, ytr, Xte, yte = datasets.train_test_split(csr, y, test_frac=0.25,
+                                                   seed=0)
+    idx = np.arange(48).reshape(4, 12)
+    part = make_partition(Xtr, ytr, idx, name="train")
+    reg = Regularizer(1e-4, 1e-4)
+    trace = solvers.run("pscope_lazy", LOGISTIC, reg, part,
+                        SolverConfig(rounds=3, eta=0.5, inner_epochs=2.0,
+                                     extras={"eval": (Xte, yte)}))
+    assert set(trace.heldout) == {"objective", "accuracy"}
+    assert np.isfinite(trace.heldout["objective"])
+    assert 0.0 <= trace.heldout["accuracy"] <= 1.0
+    # the hook matches a direct evaluation of the final iterate
+    direct = evaluate_heldout(LOGISTIC, reg, Xte, yte, trace.w_final)
+    assert trace.heldout == pytest.approx(direct)
+    # heldout evaluation is charged as overhead, not solver seconds
+    assert trace.overhead_seconds > 0.0
+
+
+def test_evaluate_heldout_dense_equals_sparse():
+    from repro.core import LOGISTIC, Regularizer
+    from repro.core.solvers import evaluate_heldout
+    from repro.data.sparse import make_csr_classification
+    csr, y, _ = make_csr_classification(32, 64, density=0.2, seed=2)
+    w = np.random.RandomState(0).randn(64).astype(np.float32) * 0.1
+    reg = Regularizer(1e-4, 1e-4)
+    sp = evaluate_heldout(LOGISTIC, reg, csr, y, w)
+    de = evaluate_heldout(LOGISTIC, reg, np.asarray(csr_to_dense(csr)), y, w)
+    assert sp["objective"] == pytest.approx(de["objective"], rel=1e-5)
+    assert sp["accuracy"] == de["accuracy"]
