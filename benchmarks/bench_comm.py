@@ -1,0 +1,166 @@
+"""Communication-volume benchmark: the BENCH_comm.json perf trail.
+
+The paper's communication-efficiency claim (Section 5: one outer round
+of CALL moves two d-vectors, independent of n) audited against the
+COMPILED program, not the analytic model alone:
+
+    comm/hlo/p{p}_n{n}_d{d}   all-reduce bytes per outer round counted
+                              from the lowered HLO of the distributed
+                              outer step (`roofline.analyze_hlo`), plus
+                              the step's wall time as `us_per_call`
+    comm/trace/d{d}           `Trace.comm` accounting of the
+                              "pscope_mesh" registry solver (bytes, ==
+                              analytic 2*d*itemsize per round)
+
+Every run asserts the two load-bearing properties:
+
+  * n-independence — doubling n leaves the per-round all-reduce bytes
+    bit-identical (the inner loop is collective-free; only the anchor
+    gradient psum and the iterate average touch the wire);
+  * d-linearity — doubling d doubles them.
+
+jax pins the host device count at first backend use, so the sweep runs
+in a forked child with ``XLA_FLAGS=--xla_force_host_platform_device_
+count=p`` (same pattern as tests/distributed_harness.py); this module
+therefore works both standalone and via `benchmarks.run` (which has
+already imported jax on a single device).
+
+    PYTHONPATH=src python -m benchmarks.bench_comm [--smoke|--full]
+    PYTHONPATH=src python -m benchmarks.run --only comm --json
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from typing import Dict, List
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_ROWS_TAG = "BENCH_COMM_ROWS "
+
+# (n, d) sweep; the first entry's shape is doubled in each direction by
+# the assertion pairs below, so keep {n, 2n} x {d, 2d} in the grid.
+_GRID_SMOKE = [(256, 32), (512, 32), (256, 64)]
+_GRID_FULL = _GRID_SMOKE + [(1024, 64), (1024, 256)]
+
+_CHILD = """
+import json, time
+import numpy as np
+import jax, jax.numpy as jnp
+
+from repro.core import LOGISTIC, PScopeConfig, Regularizer
+from repro.core.pscope import init_state, make_distributed_outer_step_core
+from repro.launch import roofline as rf
+from repro.launch.mesh import comm_bytes_per_round
+
+P_WORKERS = {p}
+GRID = {grid!r}
+TRACE_D = 32
+
+mesh = jax.make_mesh((P_WORKERS,), ("workers",))
+reg = Regularizer(1e-3, 1e-3)
+rows = []
+
+measured = {{}}
+for n, d in GRID:
+    cfg = PScopeConfig(eta=0.5, inner_steps=16, inner_batch=2,
+                       outer_steps=1)
+    step = make_distributed_outer_step_core(LOGISTIC, reg, cfg, mesh,
+                                            "workers")
+    X = jnp.zeros((n, d)); y = jnp.zeros((n,))
+    args = (init_state(jnp.zeros(d)), X, y, None)
+    compiled = jax.jit(step).lower(*args).compile()
+    ar_bytes = rf.analyze_hlo(compiled.as_text()).op_bytes.get(
+        "all-reduce", 0.0)
+    measured[(n, d)] = ar_bytes
+    jax.block_until_ready(compiled(*args))          # warmup done at lower
+    ts = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        jax.block_until_ready(compiled(*args))
+        ts.append(time.perf_counter() - t0)
+    rows.append({{
+        "name": f"comm/hlo/p{{P_WORKERS}}_n{{n}}_d{{d}}",
+        "us_per_call": f"{{min(ts) * 1e6:.0f}}",
+        "derived": (f"allreduce_bytes_per_round={{ar_bytes:.0f}};"
+                    f"analytic_wire_bytes={{comm_bytes_per_round(d):.0f}};"
+                    f"p={{P_WORKERS}};n={{n}};d={{d}}"),
+    }})
+
+# the two properties the trail regression-pins
+(n0, d0) = GRID[0]
+assert measured[(n0, d0)] > 0
+assert measured[(n0, d0)] == measured[(2 * n0, d0)], (
+    "per-round collective bytes grew with n", measured)
+b_d, b_2d = measured[(n0, d0)], measured[(n0, 2 * d0)]
+assert abs(b_2d - 2 * b_d) <= 0.1 * b_d, (
+    "per-round collective bytes not O(d)", measured)
+
+# Trace.comm accounting through the registry driver
+from repro.core.partition import build_partition
+from repro.core.solvers import SolverConfig, run as run_solver
+from repro.data.synthetic import make_sparse_classification
+
+X, y, _ = make_sparse_classification(8 * TRACE_D, TRACE_D, density=0.2,
+                                     seed=0)
+part = build_partition("uniform", X, y, P_WORKERS)
+scfg = SolverConfig(rounds=3, inner_epochs=0.5)
+t0 = time.perf_counter()
+tr = run_solver("pscope_mesh", LOGISTIC, reg, part, scfg)
+secs = time.perf_counter() - t0
+per_round = comm_bytes_per_round(TRACE_D)
+assert tr.meta["comm_units"] == "bytes"
+assert np.all(np.diff(tr.comm) == per_round), tr.comm
+rows.append({{
+    "name": f"comm/trace/d{{TRACE_D}}",
+    "us_per_call": f"{{secs * 1e6:.0f}}",
+    "derived": (f"comm_bytes_per_round={{per_round:.0f}};"
+                f"rounds={{scfg.rounds}};comm_total={{tr.comm[-1]:.0f}};"
+                f"units={{tr.meta['comm_units']}}"),
+}})
+
+print({tag!r} + json.dumps(rows), flush=True)
+"""
+
+
+def _run_child(p: int, grid) -> List[Dict]:
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={p}"
+                        ).strip()
+    code = textwrap.dedent(_CHILD).format(p=p, grid=list(grid),
+                                          tag=_ROWS_TAG)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        raise RuntimeError(f"bench_comm child failed:\n"
+                           f"{proc.stderr[-2500:]}")
+    lines = [ln for ln in proc.stdout.splitlines()
+             if ln.startswith(_ROWS_TAG)]
+    if not lines:
+        raise RuntimeError(f"bench_comm child produced no rows:\n"
+                           f"{proc.stdout[-2500:]}")
+    return json.loads(lines[-1][len(_ROWS_TAG):])
+
+
+def main(full: bool = False, smoke: bool = False) -> List[Dict]:
+    grid = _GRID_FULL if full else _GRID_SMOKE
+    rows = _run_child(4, grid)
+    if smoke:
+        print("bench_comm smoke OK: per-round collective bytes "
+              "independent of n, linear in d", file=sys.stderr)
+    return rows
+
+
+if __name__ == "__main__":
+    ap_full = "--full" in sys.argv
+    ap_smoke = "--smoke" in sys.argv
+    out = main(full=ap_full, smoke=ap_smoke)
+    print("name,us_per_call,derived")
+    for r in out:
+        print(f"{r['name']},{r.get('us_per_call', '')},"
+              f"{r.get('derived', '')}")

@@ -11,6 +11,8 @@ from __future__ import annotations
 
 from typing import Dict, List
 
+import jax
+
 from benchmarks.common import (build_partitioned_problem,
                                build_registry_problem, reference_optimum,
                                trace_row)
@@ -48,6 +50,10 @@ def run_dataset(ds: str, model: str, scale: float = 0.05,
     cfgs = solver_configs(part.n_k)
     rows = []
     for name in solvers.available():
+        if name == "pscope_mesh" and jax.device_count() < part.p:
+            # needs one device per worker (real meshes / forced-device
+            # runs); benchmarks/bench_comm.py covers it in a child
+            continue
         cfg = cfgs.get(name, SolverConfig(rounds=30))
         trace = solvers.run(name, obj, reg, part, cfg)
         rows.append(trace_row(trace, f"fig1/{ds}/{model}", p_star, EPS))

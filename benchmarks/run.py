@@ -39,6 +39,7 @@ JSON_TRAILS = {
     "inner_loop/": "BENCH_inner_loop.json",
     "partition/": "BENCH_partition.json",
     "ingest/": "BENCH_ingest.json",
+    "comm/": "BENCH_comm.json",
 }
 
 
@@ -101,7 +102,8 @@ def main() -> None:
 
     from benchmarks import (fig1_convergence, table2_timing, fig2a_speedup,
                             fig2b_partition, recovery_bench, roofline_report,
-                            bench_lazy_inner, bench_partition, bench_ingest)
+                            bench_lazy_inner, bench_partition, bench_ingest,
+                            bench_comm)
     suites = [
         ("fig1", lambda: fig1_convergence.main(full=args.full,
                                                dataset=args.dataset)),
@@ -113,6 +115,7 @@ def main() -> None:
         ("lazy_inner", lambda: bench_lazy_inner.main(full=args.full)),
         ("partition", lambda: bench_partition.main(full=args.full)),
         ("ingest", lambda: bench_ingest.main(full=args.full)),
+        ("comm", lambda: bench_comm.main(full=args.full)),
     ]
     rows = []
     for name, fn in suites:

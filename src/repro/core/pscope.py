@@ -75,6 +75,12 @@ Array = jax.Array
 
 NNZ_TOL = 1e-8   # |w_i| above this counts as a nonzero (Section 7.3)
 
+# The CALL communication structure: one anchor-gradient psum + one
+# iterate average per outer round, each moving a d-vector; the inner
+# loops are collective-free.  `launch.mesh.comm_bytes_per_round` turns
+# this into the analytic bytes-on-wire figure the mesh driver records.
+COMM_ALLREDUCES_PER_ROUND = 2
+
 
 @dataclasses.dataclass(frozen=True)
 class PScopeConfig:
@@ -669,6 +675,7 @@ def make_distributed_outer_step_core(obj: Objective, reg: Regularizer,
     lazy = cfg.inner_path == "lazy"
     h_prime = (_require_lazy_support(obj, cfg) if lazy
                else _pick_h_prime(obj, cfg))
+    p = mesh.shape[axis]
 
     def body(w_t, key, Xk_or_vals, yk, cols_k=None, statics=None):
         # phase 1: one all-reduce for the anchor (full) gradient
@@ -678,9 +685,14 @@ def make_distributed_outer_step_core(obj: Objective, reg: Regularizer,
         else:
             z_local = jax.grad(obj.loss_fn)(w_t, Xk_or_vals, yk)
         z = jax.lax.pmean(z_local, axis)
-        # phase 2: local inner loop, no DP collectives
+        # phase 2: local inner loop, no DP collectives.  The per-worker
+        # key is split(key, p)[worker] — the SAME derivation simulation
+        # mode uses — so worker k draws the identical sample sequence
+        # in both modes and a mesh trajectory matches run_scanned's
+        # within fp32 reassociation (the multi-host equivalence tests
+        # pin this; fold_in(key, widx) would decorrelate the modes).
         widx = jax.lax.axis_index(axis)
-        k_local = jax.random.fold_in(key, widx)
+        k_local = jnp.take(jax.random.split(key, p), widx, axis=0)
         idx = svrg.sample_microbatches(k_local, Xk_or_vals.shape[0],
                                        cfg.inner_steps, cfg.inner_batch)
         if lazy:

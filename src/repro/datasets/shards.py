@@ -44,7 +44,7 @@ import shutil
 import time
 from functools import cached_property
 from pathlib import Path
-from typing import Optional, Union
+from typing import Optional, Tuple, Union
 
 import numpy as np
 
@@ -152,6 +152,157 @@ class ShardStore:
     def nbytes(self) -> int:
         return sum((self.root / f).stat().st_size
                    for f, _ in _SEGMENTS.values())
+
+    # -- multi-host slicing ------------------------------------------------
+    def segment_extent(self, key: str, worker: int) -> Tuple[int, int]:
+        """(byte offset, byte length) of one worker's extent in a segment.
+
+        The worker-major layout makes every worker's bytes contiguous
+        in every segment: worker k owns exactly
+        ``[k * stride, (k + 1) * stride)`` where stride is the
+        per-worker byte count.  This is the ground truth the
+        `local_slice` offset-accounting test audits against.
+        """
+        if not 0 <= worker < self.p:
+            raise ValueError(f"worker {worker} outside [0, {self.p})")
+        fname, dtype = _SEGMENTS[key]
+        shape = _segment_shapes(self.p, self.n_k, self.max_nnz)[key]
+        stride = int(np.prod(shape[1:], dtype=np.int64)) * np.dtype(dtype).itemsize
+        return worker * stride, stride
+
+    def local_slice(self, worker_ids) -> "LocalShardSlice":
+        """A host-local view over only `worker_ids`' shard extents.
+
+        This is the multi-host read path: each process opens the store
+        directory (shared filesystem or per-host copy) and maps ONLY the
+        byte ranges of the workers it owns — `np.memmap` with an
+        explicit per-extent offset, so a host never maps (let alone
+        pages in) bytes belonging to another host's workers.  The
+        mapped (offset, length) ranges are recorded per segment for the
+        offset-accounting audit.
+
+        `worker_ids` must be strictly increasing (hosts own sorted
+        worker ranges; concatenating all hosts' slices in host order
+        must reproduce `csr_p` exactly).  An empty tuple is a valid
+        zero-worker slice (an idle host).
+        """
+        return LocalShardSlice(store=self, worker_ids=tuple(
+            int(w) for w in worker_ids))
+
+
+def _segment_shapes(p: int, n_k: int, K: int) -> dict:
+    return {"vals": (p, n_k, K), "cols": (p, n_k, K),
+            "row_nnz": (p, n_k), "labels": (p, n_k), "members": (p, n_k)}
+
+
+def _contiguous_runs(ids):
+    """Strictly-increasing ids -> [(start, stop)) maximal runs."""
+    runs = []
+    for w in ids:
+        if runs and w == runs[-1][1]:
+            runs[-1][1] = w + 1
+        else:
+            runs.append([w, w + 1])
+    return [(a, b) for a, b in runs]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class LocalShardSlice:
+    """The worker extents one host owns, mapped with per-extent offsets.
+
+    Array views mirror `ShardStore`'s (`vals`/`cols`/`row_nnz`/`yp`/
+    `members`/`csr`), with the leading dimension `len(worker_ids)`
+    instead of `p`.  A single contiguous run of worker ids maps as ONE
+    zero-copy `np.memmap` at the run's byte offset (the common case —
+    hosts own contiguous worker blocks); disjoint runs are each mapped
+    at their own offset and concatenated (a copy of owned bytes only).
+
+    `mapped_ranges` records every (offset, length) actually handed to
+    `np.memmap`, per segment file — the property tests assert these
+    ranges exactly tile the owned extents and never touch foreign ones.
+    """
+
+    store: ShardStore
+    worker_ids: Tuple[int, ...]
+
+    def __post_init__(self):
+        p = self.store.p
+        ids = self.worker_ids
+        if any(not 0 <= w < p for w in ids):
+            raise ValueError(f"worker ids {ids} outside [0, {p})")
+        if any(b <= a for a, b in zip(ids, ids[1:])):
+            raise ValueError(f"worker ids must be strictly increasing, "
+                             f"got {ids}")
+        object.__setattr__(self, "mapped_ranges",
+                           {fname: [] for fname, _ in _SEGMENTS.values()})
+
+    @property
+    def num_workers(self) -> int:
+        return len(self.worker_ids)
+
+    @property
+    def n_rows(self) -> int:
+        return self.num_workers * self.store.n_k
+
+    def _map_slice(self, key: str) -> np.ndarray:
+        st = self.store
+        fname, dtype = _SEGMENTS[key]
+        tail = _segment_shapes(st.p, st.n_k, st.max_nnz)[key][1:]
+        if not self.worker_ids:
+            return np.zeros((0,) + tail, dtype=dtype)
+        itemsize = np.dtype(dtype).itemsize
+        stride = int(np.prod(tail, dtype=np.int64)) * itemsize
+        parts = []
+        for start, stop in _contiguous_runs(self.worker_ids):
+            offset = start * stride
+            length = (stop - start) * stride
+            self.mapped_ranges[fname].append((offset, length))
+            parts.append(np.memmap(st.root / fname, dtype=dtype, mode="r",
+                                   offset=offset,
+                                   shape=(stop - start,) + tail))
+        return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
+
+    @cached_property
+    def vals(self) -> np.ndarray:
+        return self._map_slice("vals")
+
+    @cached_property
+    def cols(self) -> np.ndarray:
+        return self._map_slice("cols")
+
+    @cached_property
+    def row_nnz(self) -> np.ndarray:
+        return self._map_slice("row_nnz")
+
+    @cached_property
+    def yp(self) -> np.ndarray:
+        return self._map_slice("labels")
+
+    @cached_property
+    def members(self) -> np.ndarray:
+        return self._map_slice("members")
+
+    @cached_property
+    def csr(self) -> CSRMatrix:
+        """Worker-major (len(worker_ids), n_k, K) CSR over owned bytes."""
+        return CSRMatrix(vals=self.vals, cols=self.cols,
+                         row_nnz=self.row_nnz, d=self.store.d)
+
+    def worker_block(self, key: str, i: int) -> np.ndarray:
+        """The i-th owned worker's block of a segment view (by position
+        in `worker_ids`, not by global worker id)."""
+        return getattr(self, {"labels": "yp"}.get(key, key))[i]
+
+    def owned_extents(self, key: str):
+        """Analytic [(offset, length)] of the owned bytes of a segment,
+        merged over contiguous id runs — what `mapped_ranges` must
+        equal after the view is materialized."""
+        fname, _ = _SEGMENTS[key]
+        out = []
+        for start, stop in _contiguous_runs(self.worker_ids):
+            off0, stride = self.store.segment_extent(key, start)
+            out.append((off0, (stop - start) * stride))
+        return out
 
 
 def open_store(root: Union[str, Path]) -> ShardStore:

@@ -1,15 +1,56 @@
-"""Production mesh definitions.
+"""Multi-host mesh layer: `jax.distributed` launcher + per-host shards.
 
-A FUNCTION (not a module-level constant) so importing this module never
-touches jax device state.  Single pod: (data=16, model=16) = 256 chips
-of TPU v5e-class.  Multi-pod: (pod=2, data=16, model=16) = 512 chips.
+This is the CALL cluster story made literal.  The paper's framework
+(Section 5) keeps each worker's data partition local for the whole run;
+only the d-vector iterate crosses the network, twice per outer round
+(one full-gradient all-reduce, one iterate average).  Everything below
+exists to preserve that property across *real processes*:
+
+  * `MeshSpec` — declarative layout/mesh-shape separation (the
+    tensor2tensor idiom): a mesh *shape* over named device axes plus a
+    logical->mesh layout for the solver's two logical axes
+    (`workers` / `features`, see `repro.sharding.logical`).  Importing
+    this module never touches jax device state; `spec.build()` does.
+  * `init_distributed` — `jax.distributed.initialize` with the gloo
+    CPU-collectives backend selected, idempotent, env-var defaulted, so
+    one entry point serves srun/mpirun-style launchers, the `--spawn`
+    convenience forker in `launch.multihost`, and the forked-process
+    test harness.
+  * per-host shard mapping — `local_worker_ids(mesh)` computes which
+    partition workers this process's devices own; the host opens ONLY
+    those extents of a PR-5 `ShardStore` (`store.local_slice`, offset
+    mmaps: no foreign bytes are ever mapped) and registers each
+    worker's block on its device via
+    `jax.make_array_from_single_device_arrays`.  The resulting global
+    arrays feed the unchanged `pscope.run_distributed_scanned` — the
+    outer-round `psum`s lower to real cross-process collectives and the
+    zero-sync scanned driver keeps its one-host-transfer-per-run
+    property on every host.
+  * `comm_bytes_per_round` — the analytic bytes-on-wire of one outer
+    round (2 all-reduces of the d-vector): O(d), independent of n.
+    `Trace.comm` under the mesh driver records these bytes
+    (`core.solvers` "pscope_mesh"); benchmarks/bench_comm.py audits the
+    compiled HLO against it.
+
+Hardware constants (TPU v5e-class) used by the roofline stay here.
 """
 from __future__ import annotations
 
+import dataclasses
+import os
+import time
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
 import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.logical import SOLVER_LOGICAL_AXES, solver_rules
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips of TPU v5e-class.
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
@@ -26,3 +67,342 @@ HBM_BW = 819e9                  # B/s
 ICI_LINK_BW = 50e9              # B/s per link (intra-pod)
 DCI_BW = 5e9                    # B/s per chip effective (cross-pod)
 HBM_BYTES = 16 * 2 ** 30        # 16 GiB
+
+
+# ---------------------------------------------------------------------------
+# Declarative mesh layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Mesh shape + logical layout, separated (and device-state free).
+
+    `shape`/`axes` declare the device mesh; `layout` maps the solver's
+    logical axes onto mesh axes (None = replicated).  The default
+    layout shards `workers` over the first mesh axis and replicates
+    `features` — the paper's data-parallel CALL setting.
+
+        spec = MeshSpec.for_workers(8)            # (8,) over "workers"
+        mesh = spec.build()                       # uses jax.devices()
+        P_rows = spec.pspec("workers")            # rows sharded
+        P_w    = spec.pspec("features")           # iterate replicated
+    """
+
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...] = ("workers",)
+    layout: Optional[Mapping[str, Optional[str]]] = None
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"mesh shape {self.shape} and axes "
+                             f"{self.axes} disagree in rank")
+        if len(set(self.axes)) != len(self.axes):
+            raise ValueError(f"duplicate mesh axis in {self.axes}")
+        if any(s < 1 for s in self.shape):
+            raise ValueError(f"mesh shape {self.shape} has empty axes")
+        for logical, axis in self.resolved_layout.items():
+            if axis is not None and axis not in self.axes:
+                raise ValueError(
+                    f"layout maps logical axis {logical!r} to unknown "
+                    f"mesh axis {axis!r} (have {self.axes})")
+
+    @classmethod
+    def for_workers(cls, p: int, axis: str = "workers") -> "MeshSpec":
+        """The 1-D CALL mesh: p devices, one partition worker each."""
+        return cls(shape=(p,), axes=(axis,),
+                   layout=solver_rules(workers_axis=axis))
+
+    @property
+    def resolved_layout(self) -> Dict[Optional[str], Optional[str]]:
+        if self.layout is not None:
+            return {None: None, **dict(self.layout)}
+        return solver_rules(workers_axis=self.axes[0])
+
+    @property
+    def num_devices(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64))
+
+    @property
+    def workers_axis(self) -> str:
+        """The mesh axis the `workers` logical axis lives on."""
+        axis = self.resolved_layout.get("workers")
+        if axis is None:
+            raise ValueError("this MeshSpec replicates 'workers'; the CALL "
+                             "drivers need it sharded over a mesh axis")
+        return axis
+
+    @property
+    def num_workers(self) -> int:
+        return self.shape[self.axes.index(self.workers_axis)]
+
+    def pspec(self, *logical: Optional[str]) -> P:
+        """PartitionSpec for an array whose dims carry `logical` axes."""
+        lay = self.resolved_layout
+        unknown = [a for a in logical
+                   if a is not None and a not in lay]
+        if unknown:
+            raise ValueError(f"unknown logical axes {unknown}; have "
+                             f"{sorted(k for k in lay if k)} "
+                             f"(solver axes: {SOLVER_LOGICAL_AXES})")
+        return P(*(lay[a] for a in logical))
+
+    def build(self, devices: Optional[Sequence] = None) -> Mesh:
+        """Materialize the Mesh over `devices` (default: all global
+        devices, in `jax.devices()` order — identical on every process
+        of a `jax.distributed` job)."""
+        devs = np.asarray(devices if devices is not None else jax.devices())
+        if devs.size != self.num_devices:
+            raise ValueError(
+                f"MeshSpec wants {self.num_devices} devices "
+                f"({dict(zip(self.axes, self.shape))}), have {devs.size}")
+        return Mesh(devs.reshape(self.shape), self.axes)
+
+
+# ---------------------------------------------------------------------------
+# Process bring-up
+# ---------------------------------------------------------------------------
+
+def init_distributed(coordinator: Optional[str] = None,
+                     num_processes: Optional[int] = None,
+                     process_id: Optional[int] = None, *,
+                     cpu_collectives: str = "gloo") -> Dict[str, int]:
+    """Bring this process into the `jax.distributed` job (idempotent).
+
+    Selects the CPU collectives implementation (gloo: real TCP
+    cross-process all-reduces on the host platform) BEFORE backend
+    initialization, then calls `jax.distributed.initialize`.  Arguments
+    default to the REPRO_COORDINATOR / REPRO_NUM_PROCESSES /
+    REPRO_PROCESS_ID environment variables (set by `launch.multihost
+    --spawn` and the test harness), and to jax's own cluster
+    auto-detection when neither is given.
+
+    Returns {"process_id": ..., "num_processes": ...} for convenience.
+    A second call is a no-op (jax pins distributed state at first use),
+    so library code can call this defensively.
+    """
+    coordinator = coordinator or os.environ.get("REPRO_COORDINATOR")
+    if num_processes is None and "REPRO_NUM_PROCESSES" in os.environ:
+        num_processes = int(os.environ["REPRO_NUM_PROCESSES"])
+    if process_id is None and "REPRO_PROCESS_ID" in os.environ:
+        process_id = int(os.environ["REPRO_PROCESS_ID"])
+
+    from jax._src import distributed as _dist
+    already = getattr(_dist.global_state, "client", None) is not None
+    if not already:
+        if cpu_collectives and "jax_cpu_collectives_implementation" in \
+                jax.config.values:
+            jax.config.update("jax_cpu_collectives_implementation",
+                              cpu_collectives)
+        if coordinator is not None:
+            jax.distributed.initialize(coordinator_address=coordinator,
+                                       num_processes=num_processes,
+                                       process_id=process_id)
+        elif num_processes is not None and num_processes > 1:
+            raise ValueError("multi-process init needs a coordinator "
+                             "address (host:port)")
+    return {"process_id": jax.process_index(),
+            "num_processes": jax.process_count()}
+
+
+def local_worker_ids(mesh: Mesh, axis: Optional[str] = None
+                     ) -> Tuple[int, ...]:
+    """Partition workers owned by this process, in ascending order.
+
+    Worker i is the i-th coordinate along the workers mesh axis; it is
+    "owned" here iff any of its devices is addressable from this
+    process (with the 1-D one-worker-per-device CALL mesh this is
+    exactly the process's local devices).  The manifest's worker-major
+    extents make each owned id one contiguous byte range per segment —
+    `ShardStore.local_slice` maps precisely those.
+    """
+    axis = axis or mesh.axis_names[0]
+    ax = mesh.axis_names.index(axis)
+    me = jax.process_index()
+    devs = np.moveaxis(mesh.devices, ax, 0).reshape(mesh.shape[axis], -1)
+    return tuple(int(i) for i in range(devs.shape[0])
+                 if any(d.process_index == me for d in devs[i]))
+
+
+def _worker_devices(mesh: Mesh, axis: str):
+    """worker id -> the devices holding its slice (other axes raveled)."""
+    ax = mesh.axis_names.index(axis)
+    devs = np.moveaxis(mesh.devices, ax, 0).reshape(mesh.shape[axis], -1)
+    return devs
+
+
+def global_worker_array(mesh: Mesh, axis: str,
+                        blocks: Mapping[int, np.ndarray],
+                        dtype=None) -> jax.Array:
+    """Assemble a global row-sharded array from per-worker host blocks.
+
+    `blocks` maps every LOCALLY-OWNED worker id to its (n_k, ...) block
+    (a `LocalShardSlice` view, an in-memory shard, ...).  Each block is
+    `device_put` onto its worker's device and the global (p * n_k, ...)
+    array is registered via `jax.make_array_from_single_device_arrays`
+    — no host ever materializes rows it does not own.  All processes
+    must call this with consistent shapes (it is collective-free but
+    shape-synchronous).
+    """
+    owned = local_worker_ids(mesh, axis)
+    missing = [i for i in owned if i not in blocks]
+    if missing:
+        raise ValueError(f"missing blocks for owned workers {missing}")
+    p = mesh.shape[axis]
+    sample = blocks[owned[0]] if owned else None
+    if sample is None:
+        raise ValueError("process owns no workers; a zero-device process "
+                         "cannot participate in the mesh run")
+    n_k, tail = sample.shape[0], sample.shape[1:]
+    sharding = NamedSharding(mesh, P(axis))
+    shards = []
+    for i in owned:
+        blk = np.asarray(blocks[i], dtype=dtype)
+        if blk.shape != (n_k,) + tail:
+            raise ValueError(f"worker {i} block shape {blk.shape} != "
+                             f"{(n_k,) + tail}")
+        for dev in _worker_devices(mesh, axis)[i]:
+            if dev.process_index == jax.process_index():
+                shards.append(jax.device_put(blk, dev))
+    return jax.make_array_from_single_device_arrays(
+        (p * n_k,) + tail, sharding, shards)
+
+
+def comm_bytes_per_round(d: int, itemsize: int = 4) -> float:
+    """Analytic bytes-on-wire of one CALL outer round.
+
+    Two d-vector all-reduces — the anchor-gradient psum (phase 1) and
+    the iterate broadcast/average (phase 3); the inner loop is
+    collective-free.  O(d), independent of n: the property the paper's
+    communication-efficiency claim rests on and the comm-accounting
+    test regression-pins.
+    """
+    return 2.0 * float(d) * itemsize
+
+
+# ---------------------------------------------------------------------------
+# The mesh driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MeshRunResult:
+    """One `run_mesh` trajectory, plus its communication accounting."""
+
+    w: np.ndarray
+    values: np.ndarray
+    nnz: np.ndarray
+    comm_bytes_per_round: float
+    worker_ids: Tuple[int, ...]       # workers this process owned
+    seconds: float
+    process_id: int
+    num_processes: int
+
+
+def _worker_blocks_from(data, y):
+    """Normalize `data` into per-worker host blocks + metadata.
+
+    Accepts a `ShardStore` (multi-host path: only the owned extents are
+    mmapped), a worker-major `CSRMatrix` (p, n_k, k) + labels (p, n_k),
+    or a dense worker-major array (p, n_k, d) + labels.
+    Returns (kind, blocks dict per segment, d, p).
+    """
+    from repro.data.sparse import CSRMatrix
+    from repro.datasets.shards import ShardStore
+
+    if isinstance(data, ShardStore):
+        return "store", data, int(data.d), int(data.p)
+    if isinstance(data, CSRMatrix):
+        if data.vals.ndim != 3:
+            raise ValueError("run_mesh needs worker-major (p, n_k, k) CSR "
+                             f"shards, got vals shape {data.vals.shape}")
+        if y is None:
+            raise ValueError("worker-major CSR data needs labels yp")
+        return "csr", (data, np.asarray(y)), int(data.d), data.vals.shape[0]
+    arr = np.asarray(data)
+    if arr.ndim != 3:
+        raise ValueError("run_mesh needs worker-major (p, n_k, d) dense "
+                         f"data, got shape {arr.shape}")
+    if y is None:
+        raise ValueError("dense worker-major data needs labels yp")
+    return "dense", (arr, np.asarray(y)), arr.shape[-1], arr.shape[0]
+
+
+def run_mesh(obj, reg, data, y, w0, cfg, spec: Optional[MeshSpec] = None, *,
+             record_every: int = 1,
+             devices: Optional[Sequence] = None) -> MeshRunResult:
+    """pSCOPE over a (possibly multi-process) device mesh.
+
+    Every process of the `jax.distributed` job calls this with the SAME
+    arguments; `data` is a `ShardStore` (each host maps only its worker
+    slice), a worker-major `CSRMatrix`, or dense (p, n_k, d) shards.
+    The trajectory runs through the unchanged zero-sync
+    `pscope.run_distributed_scanned` — outer rounds are mesh psums, the
+    inner loops collective-free, ONE host transfer per process at the
+    end.  The returned histories are replicated: every rank holds the
+    bit-identical trace (the harness asserts it).
+
+    `cfg.inner_path="auto"` resolves layout-locally ("lazy" for
+    CSR-backed data, "dense" for dense): the cost model's O(n*d) nnz
+    probe would require materializing remote rows, which this driver
+    exists to avoid.
+    """
+    import dataclasses as _dc
+
+    from repro.core import pscope
+    from repro.data.sparse import CSRMatrix
+
+    kind, payload, d, p = _worker_blocks_from(data, y)
+    spec = spec or MeshSpec.for_workers(p)
+    if spec.num_workers != p:
+        raise ValueError(f"MeshSpec workers axis has size "
+                         f"{spec.num_workers}, data has p={p} workers")
+    mesh = spec.build(devices)
+    axis = spec.workers_axis
+    owned = local_worker_ids(mesh, axis)
+
+    if cfg.inner_path == "auto":
+        cfg = _dc.replace(cfg,
+                          inner_path="dense" if kind == "dense" else "lazy")
+
+    if kind == "store":
+        store = payload
+        sl = store.local_slice(owned)
+        pos = {w: i for i, w in enumerate(sl.worker_ids)}
+        X = CSRMatrix(
+            vals=global_worker_array(mesh, axis,
+                                     {w: sl.vals[pos[w]] for w in owned}),
+            cols=global_worker_array(mesh, axis,
+                                     {w: sl.cols[pos[w]] for w in owned}),
+            row_nnz=global_worker_array(mesh, axis,
+                                        {w: sl.row_nnz[pos[w]]
+                                         for w in owned}),
+            d=d)
+        yg = global_worker_array(mesh, axis,
+                                 {w: sl.yp[pos[w]] for w in owned})
+    elif kind == "csr":
+        csr, yp = payload
+        X = CSRMatrix(
+            vals=global_worker_array(mesh, axis,
+                                     {w: np.asarray(csr.vals[w])
+                                      for w in owned}),
+            cols=global_worker_array(mesh, axis,
+                                     {w: np.asarray(csr.cols[w])
+                                      for w in owned}),
+            row_nnz=global_worker_array(mesh, axis,
+                                        {w: np.asarray(csr.row_nnz[w])
+                                         for w in owned}),
+            d=d)
+        yg = global_worker_array(mesh, axis, {w: yp[w] for w in owned})
+    else:
+        Xp, yp = payload
+        X = global_worker_array(mesh, axis, {w: Xp[w] for w in owned})
+        yg = global_worker_array(mesh, axis, {w: yp[w] for w in owned})
+
+    t0 = time.perf_counter()
+    w, values, nnzs = pscope.run_distributed_scanned(
+        obj, reg, X, yg, w0, cfg, mesh, axis=axis,
+        record_every=record_every)
+    return MeshRunResult(
+        w=np.asarray(w), values=np.asarray(values), nnz=np.asarray(nnzs),
+        comm_bytes_per_round=comm_bytes_per_round(d),
+        worker_ids=owned, seconds=time.perf_counter() - t0,
+        process_id=jax.process_index(), num_processes=jax.process_count())

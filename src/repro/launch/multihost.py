@@ -1,0 +1,247 @@
+"""Multi-host process entry point for the CALL mesh solver.
+
+One command serves three launch styles:
+
+  per-process (what srun/mpirun/k8s run on every host)::
+
+      python -m repro.launch.multihost \
+          --coordinator host0:1234 --num-processes 8 --process-id $RANK \
+          --store /shared/rcv1-shards --rounds 30
+
+  single-node convenience forker (spawns N local processes wired to a
+  fresh coordinator port — also what the CI multihost-smoke job runs)::
+
+      python -m repro.launch.multihost --spawn 2 --demo --verify
+
+  demo fixture: ``--demo`` has rank 0 write + ingest a small synthetic
+  LIBSVM dataset under ``--workdir`` (the store's manifest is its
+  commit marker, so the other ranks simply poll for it), then every
+  rank runs the mesh trajectory over its own worker slice.
+
+Every rank prints a ``RESULT {json}`` line with its (replicated)
+trace; the spawner asserts all ranks' traces are bit-identical and
+exits non-zero on any child failure, timeout (a hung collective kills
+the job after ``--timeout`` seconds rather than stalling), or trace
+divergence.  ``--verify`` additionally recomputes the single-process
+`run_scanned` reference on rank 0 (mapping the full store — demo scale
+only) and asserts the mesh trace matches within fp32 tolerance.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def _build_demo_store(workdir: Path, p: int, *, n: int = 256, d: int = 32,
+                      density: float = 0.3, seed: int = 0,
+                      timeout: float = 120.0):
+    """Rank 0 ingests the fixture; other ranks wait for the manifest."""
+    import numpy as np
+    import jax
+
+    from repro.data.sparse import dense_to_csr
+    from repro.data.synthetic import make_sparse_classification
+    from repro.datasets.libsvm import write_libsvm
+    from repro.datasets.shards import MANIFEST, ingest_libsvm, open_store
+
+    shards = workdir / "demo-shards"
+    if jax.process_index() == 0:
+        X, y, _ = make_sparse_classification(n, d, density=density,
+                                             seed=seed)
+        csr = dense_to_csr(np.asarray(X))
+        svm = workdir / "demo.svm"
+        write_libsvm(svm, np.asarray(csr.vals), np.asarray(csr.cols),
+                     np.asarray(csr.row_nnz), np.asarray(y))
+        return ingest_libsvm(svm, shards, p=p, n_features=d)
+    deadline = time.monotonic() + timeout
+    while not (shards / MANIFEST).exists():
+        if time.monotonic() > deadline:
+            raise TimeoutError(f"rank {jax.process_index()}: no demo store "
+                               f"manifest at {shards} after {timeout}s")
+        time.sleep(0.05)
+    return open_store(shards)
+
+
+def _run_rank(args) -> int:
+    from repro.launch.mesh import MeshSpec, init_distributed, run_mesh
+
+    info = init_distributed(args.coordinator, args.num_processes,
+                            args.process_id)
+    import jax
+    import numpy as np
+
+    from repro.core import LOGISTIC, PScopeConfig, Regularizer
+    from repro.datasets.shards import open_store
+
+    if args.store:
+        store = open_store(args.store)
+    elif args.demo:
+        workdir = Path(args.workdir or
+                       os.environ.get("REPRO_MULTIHOST_WORKDIR", "."))
+        workdir.mkdir(parents=True, exist_ok=True)
+        store = _build_demo_store(workdir, p=jax.device_count(),
+                                  seed=args.seed)
+    else:
+        raise SystemExit("need --store DIR or --demo")
+
+    reg = Regularizer(args.lam1, args.lam2)
+    cfg = PScopeConfig(eta=args.eta, inner_steps=args.inner_steps,
+                       inner_batch=args.inner_batch,
+                       outer_steps=args.rounds, seed=args.seed,
+                       inner_path=args.inner_path)
+    spec = MeshSpec.for_workers(store.p)
+    res = run_mesh(LOGISTIC, reg, store, None,
+                   np.zeros(store.d, np.float32), cfg, spec)
+
+    payload = {
+        "process_id": res.process_id, "num_processes": res.num_processes,
+        "local_worker_ids": list(res.worker_ids),
+        "values": res.values.tolist(), "nnz": res.nnz.tolist(),
+        "comm_bytes_per_round": res.comm_bytes_per_round,
+        "seconds": res.seconds,
+    }
+    print("RESULT " + json.dumps(payload), flush=True)
+
+    if info["process_id"] == 0:
+        if args.out:
+            Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
+        if args.verify:
+            from repro.core.pscope import run_scanned
+            _, v_ref, nnz_ref = run_scanned(
+                LOGISTIC, reg, store.csr_p, np.asarray(store.yp),
+                np.zeros(store.d, np.float32), cfg)
+            diff = float(np.max(np.abs(res.values - v_ref)))
+            ok = (np.allclose(res.values, v_ref, rtol=1e-5, atol=1e-5)
+                  and np.array_equal(res.nnz, nnz_ref))
+            print(f"VERIFY {'OK' if ok else 'FAIL'} max|dv|={diff:.3g}",
+                  flush=True)
+            if not ok:
+                return 1
+    return 0
+
+
+def _spawn(args) -> int:
+    """Fork N local ranks of this module, timeout-guarded."""
+    port = _free_port()
+    n = args.spawn
+    workdir = args.workdir or f".multihost-demo-{port}"
+    argv = [sys.executable, "-m", "repro.launch.multihost",
+            "--coordinator", f"127.0.0.1:{port}",
+            "--num-processes", str(n)]
+    passthrough = ["--rounds", str(args.rounds), "--eta", str(args.eta),
+                   "--inner-steps", str(args.inner_steps),
+                   "--inner-batch", str(args.inner_batch),
+                   "--lam1", str(args.lam1), "--lam2", str(args.lam2),
+                   "--seed", str(args.seed),
+                   "--inner-path", args.inner_path,
+                   "--workdir", workdir]
+    if args.store:
+        passthrough += ["--store", args.store]
+    else:
+        passthrough += ["--demo"]
+    if args.verify:
+        passthrough += ["--verify"]
+    if args.out:
+        passthrough += ["--out", args.out]
+
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    if args.devices_per_process > 1:
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            f" --xla_force_host_platform_device_count="
+                            f"{args.devices_per_process}").strip()
+    procs = [subprocess.Popen(argv + passthrough + ["--process-id", str(r)],
+                              env=env, stdout=subprocess.PIPE,
+                              stderr=subprocess.STDOUT, text=True)
+             for r in range(n)]
+    deadline = time.monotonic() + args.timeout
+    outs = [None] * n
+    try:
+        for r, proc in enumerate(procs):
+            left = deadline - time.monotonic()
+            if left <= 0:
+                raise subprocess.TimeoutExpired(argv, args.timeout)
+            outs[r], _ = proc.communicate(timeout=left)
+    except subprocess.TimeoutExpired:
+        for proc in procs:
+            proc.kill()
+        print(f"TIMEOUT after {args.timeout}s (hung collective?); "
+              "killed all ranks", file=sys.stderr)
+        return 2
+
+    results = []
+    for r, (proc, out) in enumerate(zip(procs, outs)):
+        sys.stdout.write(out or "")
+        if proc.returncode != 0:
+            print(f"rank {r} exited {proc.returncode}", file=sys.stderr)
+            return proc.returncode or 1
+        lines = [ln for ln in (out or "").splitlines()
+                 if ln.startswith("RESULT ")]
+        if not lines:
+            print(f"rank {r} produced no RESULT line", file=sys.stderr)
+            return 1
+        results.append(json.loads(lines[-1][len("RESULT "):]))
+    vals = [tuple(res["values"]) for res in results]
+    if len(set(vals)) != 1:
+        print("FAIL: ranks returned divergent traces", file=sys.stderr)
+        return 1
+    print(f"SPAWN OK: {n} ranks, bit-identical traces, "
+          f"{results[0]['comm_bytes_per_round']:.0f} comm bytes/round")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.multihost",
+        description="multi-host CALL mesh launcher")
+    ap.add_argument("--coordinator", default=None, metavar="HOST:PORT")
+    ap.add_argument("--num-processes", type=int, default=None)
+    ap.add_argument("--process-id", type=int, default=None)
+    ap.add_argument("--spawn", type=int, default=None, metavar="N",
+                    help="single-node mode: fork N ranks wired to a fresh "
+                         "coordinator port")
+    ap.add_argument("--devices-per-process", type=int, default=1,
+                    help="(--spawn) forced host devices per rank")
+    ap.add_argument("--timeout", type=float, default=600.0,
+                    help="(--spawn) kill the job after this many seconds")
+    ap.add_argument("--store", default=None, metavar="DIR",
+                    help="committed ShardStore directory (shared FS)")
+    ap.add_argument("--demo", action="store_true",
+                    help="rank 0 ingests a small synthetic fixture store")
+    ap.add_argument("--workdir", default=None,
+                    help="where --demo writes its fixture store")
+    ap.add_argument("--verify", action="store_true",
+                    help="rank 0 checks the mesh trace against the "
+                         "single-process run_scanned reference")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="rank 0 writes the trace JSON here")
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--eta", type=float, default=0.5)
+    ap.add_argument("--inner-steps", type=int, default=64)
+    ap.add_argument("--inner-batch", type=int, default=2)
+    ap.add_argument("--lam1", type=float, default=1e-3)
+    ap.add_argument("--lam2", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--inner-path", default="lazy",
+                    choices=("dense", "lazy", "auto"))
+    args = ap.parse_args(argv)
+
+    if args.spawn is not None:
+        return _spawn(args)
+    return _run_rank(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,5 +1,6 @@
-from repro.sharding.logical import (LOGICAL_RULES, make_rules, batch_axes,
-                                    dp_axis_names, rules_for_config)
+from repro.sharding.logical import (LOGICAL_RULES, SOLVER_LOGICAL_AXES,
+                                    make_rules, batch_axes, dp_axis_names,
+                                    rules_for_config, solver_rules)
 
-__all__ = ["LOGICAL_RULES", "make_rules", "batch_axes", "dp_axis_names",
-           "rules_for_config"]
+__all__ = ["LOGICAL_RULES", "SOLVER_LOGICAL_AXES", "make_rules",
+           "batch_axes", "dp_axis_names", "rules_for_config", "solver_rules"]

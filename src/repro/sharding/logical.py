@@ -102,3 +102,29 @@ def batch_axes(multi_pod: bool = True):
 
 def dp_axis_names(mesh) -> Tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in DP_AXES)
+
+
+# ---------------------------------------------------------------------------
+# Solver-side logical axes (the CALL sparse-learning stack)
+# ---------------------------------------------------------------------------
+# The pSCOPE data model has exactly two logical dimensions worth naming:
+#   workers    the partition axis pi = {D_1..D_p}: shard rows, labels,
+#              statics — everything that lives on one worker and never
+#              crosses the wire during inner loops
+#   features   the d coordinate axis of the iterate w / gradient z.
+#              Unsharded today (w is replicated; the two per-round
+#              collectives move O(d) bytes); a mesh axis here is the
+#              future model-parallel direction, which MeshSpec already
+#              expresses declaratively.
+# `launch.mesh.MeshSpec` maps these onto device-mesh axes; keeping the
+# table here (with the model zoo's rules) preserves the repo's single
+# layout/mesh-shape separation point.
+
+SOLVER_LOGICAL_AXES = ("workers", "features")
+
+
+def solver_rules(workers_axis: str = "workers",
+                 features_axis: Optional[str] = None
+                 ) -> Dict[Optional[str], Any]:
+    """Logical->mesh layout for the CALL solver arrays."""
+    return {None: None, "workers": workers_axis, "features": features_axis}

@@ -1,0 +1,142 @@
+"""Forked-process harness for `jax.distributed` tests.
+
+jax pins both the device count and the distributed state at first
+backend use, so every multi-process (and every forced-device-count)
+leg must run in child processes.  Two entry points:
+
+  * `run_multihost(num_processes, body)` — forks N REAL python
+    processes, each calling `repro.launch.mesh.init_distributed`
+    against a fresh coordinator port (gloo CPU collectives: actual
+    TCP all-reduces between the ranks).  `body` is python source
+    defining ``main() -> <jsonable>``; the harness collects every
+    rank's return value and hands back the rank-ordered list, so a
+    test can assert all ranks returned bit-identical traces.
+    Timeout-guarded: a hung collective kills the whole job and fails
+    the test rather than stalling the suite.
+
+  * `run_forced_devices(num_devices, code)` — the single-process
+    multi-device leg (``XLA_FLAGS=--xla_force_host_platform_device_
+    count=N``), same contract as tests/test_distributed.py's runner:
+    `code` prints ``OK`` on success; stdout is returned.
+
+Children inherit the environment (JAX_PLATFORMS, USE_PALLAS — the CI
+matrix legs therefore exercise both kernel modes through here) with
+PYTHONPATH pointing at the repo sources.
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+RESULT_TAG = "HARNESS_RESULT "
+
+_WRAPPER = """\
+import json as _json
+import os as _os
+
+from repro.launch.mesh import init_distributed
+
+_info = init_distributed()          # REPRO_* env vars set by the harness
+
+{body}
+
+_out = main()
+print({tag!r} + _json.dumps(_out), flush=True)
+"""
+
+
+def free_port() -> int:
+    """An OS-assigned free TCP port for the coordinator."""
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def _child_env(extra=None, devices_per_process: int = 1) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    if devices_per_process > 1:
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            f" --xla_force_host_platform_device_count="
+                            f"{devices_per_process}").strip()
+    if extra:
+        env.update({k: str(v) for k, v in extra.items()})
+    return env
+
+
+def run_multihost(num_processes: int, body: str, *, timeout: float = 600.0,
+                  devices_per_process: int = 1, env=None):
+    """Fork `num_processes` ranks running `body`'s ``main()``.
+
+    Returns the rank-ordered list of each rank's jsonable return value.
+    Fails the calling test on any non-zero exit, missing result, or
+    timeout (all ranks are killed — a deadlocked collective cannot
+    stall the suite past `timeout`).
+    """
+    port = free_port()
+    script = _WRAPPER.format(body=textwrap.dedent(body), tag=RESULT_TAG)
+    procs = []
+    for rank in range(num_processes):
+        rank_env = _child_env(extra={
+            "REPRO_COORDINATOR": f"127.0.0.1:{port}",
+            "REPRO_NUM_PROCESSES": num_processes,
+            "REPRO_PROCESS_ID": rank,
+            **(env or {}),
+        }, devices_per_process=devices_per_process)
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", script], env=rank_env,
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True))
+
+    import time
+    deadline = time.monotonic() + timeout
+    outs = [None] * num_processes
+    try:
+        for rank, proc in enumerate(procs):
+            left = deadline - time.monotonic()
+            if left <= 0:
+                raise subprocess.TimeoutExpired(proc.args, timeout)
+            outs[rank], _ = proc.communicate(timeout=left)
+    except subprocess.TimeoutExpired:
+        for proc in procs:
+            proc.kill()
+        for proc in procs:
+            proc.wait()
+        pytest.fail(f"multihost job ({num_processes} ranks) hung past "
+                    f"{timeout}s; killed all ranks", pytrace=False)
+
+    results = []
+    for rank, (proc, out) in enumerate(zip(procs, outs)):
+        assert proc.returncode == 0, (
+            f"rank {rank} exited {proc.returncode}:\n{(out or '')[-2500:]}")
+        lines = [ln for ln in (out or "").splitlines()
+                 if ln.startswith(RESULT_TAG)]
+        assert lines, (f"rank {rank} produced no {RESULT_TAG!r} line:\n"
+                       f"{(out or '')[-2500:]}")
+        results.append(json.loads(lines[-1][len(RESULT_TAG):]))
+    return results
+
+
+def run_forced_devices(num_devices: int, code: str, *,
+                       timeout: float = 900.0) -> str:
+    """Single-process leg with N forced host devices; returns stdout."""
+    env = _child_env(devices_per_process=num_devices)
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          env=env, capture_output=True, text=True,
+                          timeout=timeout)
+    assert proc.returncode == 0, proc.stderr[-2500:]
+    return proc.stdout
+
+
+@pytest.fixture
+def multihost():
+    """Fixture handle over `run_multihost` (keeps call sites terse)."""
+    return run_multihost

@@ -1,6 +1,7 @@
 """The unified solver registry: every registered solver runs through the
 single `solvers.run` entry point, decreases the L1-regularized objective
 on a small synthetic problem, and emits a well-formed `Trace`."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -11,14 +12,16 @@ from repro.core.partition import (PARTITION_SCHEMES, Partition,
 from repro.core.solvers import SolverConfig, Trace
 from repro.data.synthetic import make_sparse_classification
 
-ALL_SOLVERS = ("pscope", "pscope_lazy", "fista", "pgd", "prox_svrg",
-               "dpsgd", "dpsvrg", "admm", "owlqn", "dbcd", "cocoa")
+ALL_SOLVERS = ("pscope", "pscope_lazy", "pscope_mesh", "fista", "pgd",
+               "prox_svrg", "dpsgd", "dpsvrg", "admm", "owlqn", "dbcd",
+               "cocoa")
 
 # per-solver budgets sized so each clearly decreases the objective while
 # keeping the whole parametrized sweep CPU-cheap
 CONFIGS = {
     "pscope": SolverConfig(rounds=5, inner_epochs=1.0),
     "pscope_lazy": SolverConfig(rounds=5, inner_epochs=1.0),
+    "pscope_mesh": SolverConfig(rounds=5, inner_epochs=1.0),
     "fista": SolverConfig(rounds=40),
     "pgd": SolverConfig(rounds=40),
     "prox_svrg": SolverConfig(rounds=4, inner_epochs=0.5),
@@ -59,6 +62,10 @@ def test_unknown_solver_raises():
 @pytest.mark.parametrize("name", ALL_SOLVERS)
 def test_solver_decreases_objective_and_traces(prob, name):
     obj, reg, part = prob
+    if name == "pscope_mesh" and jax.device_count() < part.p:
+        # needs one device per partition worker; the forced-device and
+        # forked-process legs in tests/test_multihost.py cover it
+        pytest.skip(f"pscope_mesh needs >= {part.p} devices")
     trace = solvers.run(name, obj, reg, part, CONFIGS[name])
 
     # objective decreases on the L1-regularized problem
