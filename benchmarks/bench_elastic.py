@@ -1,0 +1,107 @@
+"""Elastic-recovery benchmark: the BENCH_elastic.json perf trail.
+
+Measures what a mid-run host failure actually costs under
+`launch.elastic.run_mesh_elastic` by driving the REAL multi-process
+CLI twice on the demo fixture — once clean, once with rank 2 SIGKILLed
+mid-run — and comparing end-to-end wall time:
+
+    elastic/clean_wall/p3_r6      3-rank elastic run, no failure
+                                  (the chunking + KV-barrier overhead
+                                  baseline)
+    elastic/degraded_wall/...     same run with one rank killed: wall
+                                  time including detection, re-mesh,
+                                  and orphan-shard adoption
+    elastic/remesh/p3             the re-mesh latency itself (from the
+                                  survivors' recovery event), with
+                                  rounds_to_recover in `derived`
+
+Both runs go through `python -m repro.launch.multihost --spawn` in a
+child process (jax pins the backend at first use, so the sweep cannot
+run in-process under `benchmarks.run`); the degraded run's `--verify`
+asserts the recovered trajectory still matches `run_scanned` — the
+benchmark doubles as an acceptance check.
+
+    PYTHONPATH=src python -m benchmarks.bench_elastic
+    PYTHONPATH=src python -m benchmarks.run --only elastic --json
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_RANKS = 3
+_ROUNDS = 6
+_CHECK_EVERY = 2
+_VICTIM = 2
+_KILL_AT = 3
+
+_ELASTIC_RE = re.compile(
+    r"ELASTIC OK: rank (\d+) killed at round (\d+), (\d+) survivors "
+    r"re-meshed in ([0-9.]+)s, resumed at round (\d+)")
+
+
+def _spawn_cli(workdir: str, *extra: str) -> tuple[float, str]:
+    """Run the multihost CLI, return (wall seconds, stdout)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    argv = [sys.executable, "-m", "repro.launch.multihost",
+            "--spawn", str(_RANKS), "--demo", "--elastic",
+            "--rounds", str(_ROUNDS), "--check-every", str(_CHECK_EVERY),
+            "--workdir", workdir, *extra]
+    t0 = time.monotonic()
+    proc = subprocess.run(argv, env=env, capture_output=True, text=True,
+                          timeout=600)
+    wall = time.monotonic() - t0
+    if proc.returncode != 0:
+        raise RuntimeError(f"{' '.join(argv)} exited {proc.returncode}:\n"
+                           f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}")
+    return wall, proc.stdout
+
+
+def main(full: bool = False) -> List[Dict]:
+    del full  # one fixture size: the cost being measured is protocol-side
+    rows: List[Dict] = []
+    base = tempfile.mkdtemp(prefix="bench_elastic_")
+
+    clean_wall, clean_out = _spawn_cli(os.path.join(base, "clean"))
+    assert "SPAWN OK" in clean_out, clean_out[-1500:]
+    rows.append({
+        "name": f"elastic/clean_wall/p{_RANKS}_r{_ROUNDS}",
+        "us_per_call": clean_wall * 1e6,
+        "derived": f"{_RANKS} ranks, {_ROUNDS} rounds, no failure",
+    })
+
+    kill_wall, kill_out = _spawn_cli(
+        os.path.join(base, "kill"), "--verify",
+        "--kill-rank", str(_VICTIM), "--kill-at-round", str(_KILL_AT))
+    m = _ELASTIC_RE.search(kill_out)
+    assert m and "VERIFY OK" in kill_out, kill_out[-1500:]
+    detect_round, survivors = int(m.group(2)), int(m.group(3))
+    remesh_s, resume_round = float(m.group(4)), int(m.group(5))
+    rows.append({
+        "name": f"elastic/degraded_wall/p{_RANKS}_r{_ROUNDS}"
+                f"_kill{_VICTIM}",
+        "us_per_call": kill_wall * 1e6,
+        "derived": f"rank {_VICTIM} killed; {kill_wall / clean_wall:.2f}x "
+                   f"clean wall; recovered trajectory verified",
+    })
+    rows.append({
+        "name": f"elastic/remesh/p{_RANKS}",
+        "us_per_call": remesh_s * 1e6,
+        "derived": f"{survivors} survivors; detected at round "
+                   f"{detect_round}, resumed at {resume_round}, "
+                   f"rounds_to_recover={detect_round - resume_round}",
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(f"{row['name']},{row['us_per_call']},{row['derived']}")

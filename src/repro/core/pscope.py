@@ -111,6 +111,29 @@ def init_state(w0: Array, seed: int = 0) -> PScopeState:
                        key=jax.random.PRNGKey(seed))
 
 
+@jax.jit
+def _advance_key_jit(key: Array, t: Array) -> Array:
+    return jax.lax.fori_loop(0, t, lambda i, k: jax.random.split(k)[0], key)
+
+
+def advance_key(key: Array, rounds: int) -> Array:
+    """The scan-carry key after `rounds` outer steps.
+
+    Every outer step derives `key, k_idx = jax.random.split(key)` and
+    carries the first half, so the key entering round t is split^t of
+    the seed key.  This is what lets a run RESUME mid-trajectory (the
+    elastic re-mesh path, `run_scanned(start_round=t)`): fast-forward
+    the seed key t splits and round t draws the identical per-worker
+    sample sequence the uninterrupted run would have drawn.
+    """
+    rounds = int(rounds)
+    if rounds < 0:
+        raise ValueError(f"cannot rewind a split chain (rounds={rounds})")
+    if rounds == 0:
+        return key
+    return _advance_key_jit(key, jnp.asarray(rounds, jnp.int32))
+
+
 # ---------------------------------------------------------------------------
 # Dense inner loop (fused elementwise path)
 # ---------------------------------------------------------------------------
@@ -522,9 +545,9 @@ def _sim_trajectory_fn(obj: Objective, reg: Regularizer, cfg: PScopeConfig,
     record_every)."""
     lazy = cfg.inner_path == "lazy"
 
-    def trajectory(w0, Xp, yp, parts, statics):
+    def trajectory(w0, key0, Xp, yp, parts, statics):
         obj_val = _objective_value_device(obj, reg, Xp, yp)
-        state = init_state(w0, cfg.seed)
+        state = PScopeState(w=w0, t=jnp.zeros((), jnp.int32), key=key0)
 
         def record(w):
             return obj_val(w), jnp.sum(jnp.abs(w) > NNZ_TOL)
@@ -549,7 +572,7 @@ def _sim_trajectory_fn(obj: Objective, reg: Regularizer, cfg: PScopeConfig,
 def run_scanned(obj: Objective, reg: Regularizer, Xp, yp: Array, w0: Array,
                 cfg: PScopeConfig,
                 participation_schedule: Optional[Callable] = None,
-                record_every: int = 1):
+                record_every: int = 1, start_round: int = 0):
     """The zero-sync simulation driver: T outer rounds in ONE compiled
     program.
 
@@ -561,15 +584,22 @@ def run_scanned(obj: Objective, reg: Regularizer, Xp, yp: Array, w0: Array,
     state buffers are donated to the scan, so the iterate is updated in
     place round over round.
 
+    `start_round=t` resumes mid-trajectory: the RNG key is fast-
+    forwarded t splits (see `advance_key`) so rounds t..t+T-1 draw the
+    sample sequences the uninterrupted run would have — pass the round-t
+    iterate as `w0` and the segment reproduces the tail of the full run
+    exactly (the elastic resume path and its tests rely on this).
+
     Returns (w_T, values, nnz) — numpy arrays of T // record_every + 1
-    entries, index 0 being the initial iterate.
+    entries, index 0 being the initial (round start_round) iterate.
     """
     cfg, Xp, yp, statics = _prepare_sim(obj, reg, Xp, yp, cfg)
     p = (Xp.vals.shape[0] if isinstance(Xp, CSRMatrix) else Xp.shape[0])
     parts = _stack_participation(participation_schedule, cfg.outer_steps, p)
     compiled = _sim_trajectory_fn(obj, reg, cfg, record_every)
     w0d = jnp.array(w0, dtype=jnp.float32, copy=True)
-    w, values, nnzs = compiled(w0d, Xp, yp, parts, statics)
+    key0 = advance_key(jax.random.PRNGKey(cfg.seed), start_round)
+    w, values, nnzs = compiled(w0d, key0, Xp, yp, parts, statics)
     return np.asarray(w), np.asarray(values), np.asarray(nnzs)
 
 
@@ -763,8 +793,8 @@ def _distributed_trajectory_fn(obj: Objective, reg: Regularizer,
     """Compiled distributed trajectory, cached per (obj, reg, cfg, mesh)."""
     step_core = make_distributed_outer_step_core(obj, reg, cfg, mesh, axis)
 
-    def trajectory(w0, X, y, statics):
-        state = init_state(w0, cfg.seed)
+    def trajectory(w0, key0, X, y, statics):
+        state = PScopeState(w=w0, t=jnp.zeros((), jnp.int32), key=key0)
         obj_val = _objective_value_device(obj, reg, X, y)
 
         def record(w):
@@ -784,9 +814,14 @@ def _distributed_trajectory_fn(obj: Objective, reg: Regularizer,
 
 def run_distributed_scanned(obj: Objective, reg: Regularizer, X, y: Array,
                             w0: Array, cfg: PScopeConfig, mesh,
-                            axis: str = "data", record_every: int = 1):
+                            axis: str = "data", record_every: int = 1,
+                            start_round: int = 0):
     """Zero-sync distributed driver: the T-round shard_map trajectory as
     one compiled scan with device-side history (cf. `run_scanned`).
+
+    `start_round` fast-forwards the RNG split chain exactly as in
+    `run_scanned` — a resumed segment reproduces the uninterrupted
+    trajectory's tail from the same iterate.
 
     Returns (w_T, values, nnz) as numpy arrays of T // record_every + 1
     entries.
@@ -795,7 +830,220 @@ def run_distributed_scanned(obj: Objective, reg: Regularizer, X, y: Array,
     compiled = _distributed_trajectory_fn(obj, reg, cfg, mesh, axis,
                                           record_every)
     w0d = jnp.array(w0, dtype=jnp.float32, copy=True)
-    w, values, nnzs = compiled(w0d, X, y, statics)
+    key0 = advance_key(jax.random.PRNGKey(cfg.seed), start_round)
+    w, values, nnzs = compiled(w0d, key0, X, y, statics)
+    return np.asarray(w), np.asarray(values), np.asarray(nnzs)
+
+
+# ---------------------------------------------------------------------------
+# Stacked-workers distributed execution: uneven workers-per-device.
+#
+# After an elastic re-mesh the surviving s devices own UNEVEN worker
+# sets (a survivor that adopted an orphan holds 2 shards, its peers 1)
+# — something `NamedSharding` row-sharding cannot express.  The stacked
+# layout can: each device holds a zero-padded (W_max, n_k, ...) stack
+# of its owned workers' shards plus an int32 slot→global-worker-id row
+# (-1 marks a pad slot).  The LOGICAL worker count p never changes:
+#   * pad slots carry all-zero vals, so their anchor-gradient scatter
+#     contributions vanish identically;
+#   * each real slot draws ITS ORIGINAL WORKER's sample sequence
+#     (key = split(round_key, p_total)[worker_id] — the same derivation
+#     simulation and even-mesh modes use);
+#   * phase 3 masks pad slots out of the iterate sum and divides by
+#     p_total, not by the slot count.
+# Net effect: the trajectory is a function of the p-worker partition
+# only, not of which device hosts which shard — placement transparency.
+# A post-re-mesh segment therefore matches `run_scanned(start_round=t)`
+# over the same p shards within fp32 reassociation, which is exactly
+# what the elastic acceptance tests pin.
+# ---------------------------------------------------------------------------
+
+def make_stacked_outer_step_core(obj: Objective, reg: Regularizer,
+                                 cfg: PScopeConfig, mesh,
+                                 axis: str = "workers", *, p_total: int):
+    """Unjitted outer step over stacked per-device worker slots.
+
+    Operands (all sharded over `axis` on dim 0; s = mesh size):
+      vals  (s, W_max, n_k, k)  float32, zero-padded pad slots
+      cols  (s, W_max, n_k, k)  int32
+      y     (s, W_max, n_k)     float32 (pad slots: any finite label)
+      slots (s, W_max)          int32 global worker ids, -1 = pad
+    Lazy engine only (the elastic path is CSR/store-backed).
+    """
+    h_prime = _require_lazy_support(obj, cfg)
+
+    def body(w_t, key, vals, cols, y, slots, statics=None):
+        vals, cols, y, slots = vals[0], cols[0], y[0], slots[0]
+        n_k = y.shape[-1]
+        d = w_t.shape[0]
+        valid = (slots >= 0)
+
+        # phase 1: per-slot anchor gradients; one all-reduce.  Each
+        # slot's full gradient is its shard mean, so the global anchor
+        # is sum-over-real-slots / p_total (pad slots are identically
+        # zero — vals==0 kills every scattered term — the mask is
+        # belt-and-braces).
+        g = jax.vmap(lambda v, c, yk: svrg.sparse_linear_model_full_gradient(
+            h_prime, w_t, v, c, yk, d))(vals, cols, y)
+        g_sum = jnp.sum(g * valid[:, None].astype(g.dtype), axis=0)
+        z = jax.lax.psum(g_sum, axis) / p_total
+
+        # phase 2: collective-free inner loops, one per slot.  The slot
+        # keys index the per-WORKER split, so worker k's sequence is
+        # identical wherever its shard currently lives (pad slots run a
+        # throwaway loop on zero data; phase 3 masks them out).
+        keys = jax.random.split(key, p_total)
+        k_slot = jnp.take(keys, jnp.clip(slots, 0, p_total - 1), axis=0)
+        idx = jax.vmap(
+            lambda kk: svrg.sample_microbatches(kk, n_k, cfg.inner_steps,
+                                                cfg.inner_batch))(k_slot)
+        inner = functools.partial(_lazy_inner_loop, h_prime, reg, cfg.eta)
+        if statics is None:
+            u = jax.vmap(lambda v, c, yk, ixk: inner(w_t, w_t, z, v, c,
+                                                     yk, ixk))(
+                vals, cols, y, idx)
+        else:
+            u = jax.vmap(lambda v, c, yk, ixk, st: inner(
+                w_t, w_t, z, v, c, yk, ixk, statics=st))(
+                vals, cols, y, idx, statics)
+
+        # phase 3: masked iterate average over the p_total real workers
+        u_sum = jnp.sum(u * valid[:, None].astype(u.dtype), axis=0)
+        return jax.lax.psum(u_sum, axis) / p_total
+
+    def make_shard_body(with_statics: bool):
+        extra = ((P(axis),) if with_statics else ())
+        in_specs = (P(), P()) + (P(axis),) * 4 + extra
+        fn = body
+        if with_statics:
+            def fn(w, key, vals, cols, y, slots, st):
+                st = jax.tree_util.tree_map(lambda x: x[0], st)
+                return body(w, key, vals, cols, y, slots, statics=st)
+        return compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                out_specs=P(), check_vma=False)
+
+    def outer_step(state: PScopeState, vals, cols, y, slots,
+                   statics=None) -> PScopeState:
+        key, sub = jax.random.split(state.key)
+        if statics is None:
+            w_next = make_shard_body(False)(state.w, sub, vals, cols, y,
+                                            slots)
+        else:
+            w_next = make_shard_body(True)(state.w, sub, vals, cols, y,
+                                           slots, statics)
+        return PScopeState(w=w_next, t=state.t + 1, key=key)
+
+    return outer_step
+
+
+def _stacked_statics(cfg: PScopeConfig, mesh, axis: str, vals_g, cols_g,
+                     p_total: int):
+    """Per-slot shard statics, sharded in the stacked (s, W_max) layout."""
+    _, W, n_k, k = vals_g.shape
+    with_member = plan_mod.default_with_member(n_k, k, workers=p_total,
+                                               inner_batch=cfg.inner_batch)
+    build = functools.partial(plan_mod.shard_statics,
+                              with_member=with_member)
+
+    def build_block(v, c):
+        st = jax.vmap(build)(v[0], c[0])
+        return jax.tree_util.tree_map(lambda x: x[None], st)
+
+    out_specs = plan_mod.ShardStatics(
+        xdup=P(axis), rep_row=P(axis),
+        member=P(axis) if with_member else None)
+    sharded = compat.shard_map(build_block, mesh=mesh,
+                               in_specs=(P(axis), P(axis)),
+                               out_specs=out_specs, check_vma=False)
+    return jax.jit(sharded)(vals_g, cols_g)
+
+
+def _stacked_objective_value(obj: Objective, reg: Regularizer, mesh,
+                             axis: str, p_total: int, n_k: int):
+    """(w, vals, cols, y, slots) -> P(w) with pad rows masked out.
+
+    `sparse_linear_model_loss` takes a mean over ALL rows, which would
+    let pad slots (margin 0, loss h(0, y) != 0) pollute the objective;
+    here the per-row losses are summed over REAL slots only and divided
+    by the true row count p_total * n_k.
+    """
+    h_loss = svrg.LINEAR_MODEL_H_LOSS[obj.name]
+
+    def local_loss_sum(w, vals, cols, y, slots):
+        vals, cols, y, slots = vals[0], cols[0], y[0], slots[0]
+        margins = jnp.sum(vals * jnp.take(w, cols, axis=0), axis=-1)
+        rows = h_loss(margins, y)                          # (W, n_k)
+        valid = (slots >= 0).astype(rows.dtype)
+        return jax.lax.psum(jnp.sum(rows * valid[:, None]), axis)
+
+    sharded = compat.shard_map(local_loss_sum, mesh=mesh,
+                               in_specs=(P(),) + (P(axis),) * 4,
+                               out_specs=P(), check_vma=False)
+
+    def value(w, vals, cols, y, slots):
+        return sharded(w, vals, cols, y, slots) / (p_total * n_k) \
+            + reg.value(w)
+
+    return value
+
+
+# bounded: each entry pins a compiled whole-trajectory executable (and a
+# Mesh); the elastic chunk driver re-enters with identical keys
+@functools.lru_cache(maxsize=32)
+def _stacked_trajectory_fn(obj: Objective, reg: Regularizer,
+                           cfg: PScopeConfig, mesh, axis: str,
+                           p_total: int, n_k: int, record_every: int = 1):
+    """Compiled stacked trajectory, cached per (obj, reg, cfg, mesh)."""
+    step_core = make_stacked_outer_step_core(obj, reg, cfg, mesh, axis,
+                                             p_total=p_total)
+    obj_val = _stacked_objective_value(obj, reg, mesh, axis, p_total, n_k)
+
+    def trajectory(w0, key0, vals, cols, y, slots, statics):
+        state = PScopeState(w=w0, t=jnp.zeros((), jnp.int32), key=key0)
+
+        def record(w):
+            return (obj_val(w, vals, cols, y, slots),
+                    jnp.sum(jnp.abs(w) > NNZ_TOL))
+
+        def step_fn(st, _):
+            return step_core(st, vals, cols, y, slots, statics)
+
+        v0, nnz0 = record(state.w)
+        state, (vs, nnzs) = _scan_with_recording(
+            step_fn, record, state, None, cfg.outer_steps, record_every)
+        return (state.w, jnp.concatenate([v0[None], vs]),
+                jnp.concatenate([nnz0[None], nnzs]))
+
+    return jax.jit(trajectory, donate_argnums=(0,))
+
+
+def run_stacked_scanned(obj: Objective, reg: Regularizer, vals_g, cols_g,
+                        y_g, slots_g, w0: Array, cfg: PScopeConfig, mesh,
+                        axis: str = "workers", record_every: int = 1,
+                        start_round: int = 0, *, p_total: int):
+    """Zero-sync scanned driver over the stacked uneven-ownership layout.
+
+    Same contract as `run_distributed_scanned` (returns (w, values,
+    nnz); index 0 = the round-`start_round` iterate) but the data
+    operands are the stacked per-device arrays described in
+    `make_stacked_outer_step_core` — built by
+    `launch.mesh.stacked_worker_arrays` from an ownership map.
+    `p_total` is the ORIGINAL logical worker count; it must equal the
+    number of distinct non-negative ids in `slots_g`.
+    """
+    if cfg.inner_path not in ("lazy", "auto"):
+        raise ValueError("the stacked driver is CSR-only; need "
+                         f"inner_path 'lazy'/'auto', got {cfg.inner_path!r}")
+    cfg = dataclasses.replace(cfg, inner_path="lazy")
+    _require_lazy_support(obj, cfg)
+    n_k = int(y_g.shape[-1])
+    statics = _stacked_statics(cfg, mesh, axis, vals_g, cols_g, p_total)
+    compiled = _stacked_trajectory_fn(obj, reg, cfg, mesh, axis, p_total,
+                                      n_k, record_every)
+    w0d = jnp.array(w0, dtype=jnp.float32, copy=True)
+    key0 = advance_key(jax.random.PRNGKey(cfg.seed), start_round)
+    w, values, nnzs = compiled(w0d, key0, vals_g, cols_g, y_g, slots_g,
+                               statics)
     return np.asarray(w), np.asarray(values), np.asarray(nnzs)
 
 

@@ -496,6 +496,73 @@ def _run_pscope_mesh(obj, reg, part, cfg, trace):
     return jnp.asarray(res.w)
 
 
+@register("pscope_elastic",
+          summary="pSCOPE under an elastic host-failure schedule: "
+                  "re-mesh survivors, adopt orphans, resume in place",
+          paper_ref="Algorithm 1; data-partition invariance under "
+                    "worker re-placement",
+          distributed=True,
+          comm_model="2 all-reduces per outer round + one KV barrier "
+                     "per re-mesh")
+def _run_pscope_elastic(obj, reg, part, cfg, trace):
+    """Single-process rehearsal of the elastic recovery path.
+
+    Simulates the failure schedule the multi-host layer
+    (`launch.elastic.run_mesh_elastic`) handles live: the trajectory
+    runs as `run_scanned` segments (RNG fast-forwarded via
+    `start_round`); at each scheduled failure the ownership map is
+    re-planned with `train.elastic.failure_plan` and the run resumes
+    from the in-memory iterate.  Because the logical worker count p
+    never changes — survivors merely adopt the orphaned shards — the
+    trace is identical to `pscope_lazy` on the same problem: that
+    placement transparency IS the correctness property, and the
+    recovery events land in ``trace.meta["elastic"]``.
+
+    extras:
+      hosts       initial host count (default: p, one worker each)
+      fail_at     round of the first failure (default: rounds // 2)
+      fail_ranks  ranks to kill at fail_at (default: highest rank)
+    """
+    from repro.train.elastic import failure_plan, initial_ownership
+
+    hosts = int(cfg.extras.get("hosts", part.p))
+    fail_at = int(cfg.extras.get("fail_at", max(1, cfg.rounds // 2)))
+    fail_ranks = set(int(r) for r in cfg.extras.get(
+        "fail_ranks", [hosts - 1]))
+    if not 0 < fail_at < cfg.rounds:
+        raise ValueError(f"fail_at must fall inside the run "
+                         f"(0 < {fail_at} < {cfg.rounds})")
+
+    pcfg = _pscope_config(obj, reg, part, cfg, "lazy")
+    ownership = initial_ownership(part.p, hosts)
+    t0 = time.perf_counter()
+    seg1 = dataclasses.replace(pcfg, outer_steps=fail_at)
+    w, v1, n1 = pscope.run_scanned(obj, reg, part.csr_p, part.yp,
+                                   _w0(part, cfg), seg1)
+    t_remesh = time.perf_counter()
+    ownership = failure_plan(ownership, fail_ranks)
+    remesh_s = time.perf_counter() - t_remesh
+    seg2 = dataclasses.replace(pcfg, outer_steps=cfg.rounds - fail_at)
+    w, v2, n2 = pscope.run_scanned(obj, reg, part.csr_p, part.yp, w, seg2,
+                                   start_round=fail_at)
+
+    values = np.concatenate([v1, v2[1:]])
+    nnzs = np.concatenate([n1, n2[1:]])
+    trace.meta["elastic"] = {
+        "hosts": hosts,
+        "events": [{"round": fail_at, "resume_round": fail_at,
+                    "rounds_to_recover": 0,
+                    "dead": sorted(fail_ranks), "epoch": 1,
+                    "remesh_seconds": remesh_s,
+                    "survivors": sorted(ownership),
+                    "ownership": {int(r): list(ws)
+                                  for r, ws in ownership.items()}}],
+    }
+    trace.record_history(values, nnzs, comm_per_record=2.0,
+                         total_seconds=time.perf_counter() - t0)
+    return jnp.asarray(w)
+
+
 @register("fista",
           summary="accelerated proximal gradient (Beck & Teboulle 2009)",
           paper_ref="Section 7.1 baseline; distributed gradient variant",

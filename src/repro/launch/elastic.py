@@ -1,0 +1,598 @@
+"""Elastic multi-host CALL: failure detection + survivor re-meshing.
+
+The static mesh layer (`launch.mesh.run_mesh`) dies with its first
+lost host: `MeshSpec.build()` wants its exact device count and a psum
+with a dead peer either raises or hangs.  This module makes the run
+survive: detect the death, re-mesh the survivors, adopt the orphaned
+shard extents, and resume the scanned trajectory from the replicated
+iterate — no restart, no lost rounds (at worst the current chunk is
+re-executed).
+
+Failure model (empirically pinned on the gloo CPU backend; see
+docs/multihost.md "Elastic recovery"):
+
+  * Survivor sub-mesh collectives WORK after a peer death — gloo
+    happily builds new communicators over the remaining processes —
+    as long as backend bring-up finished while everyone was alive.
+  * A collective that INCLUDES a dead rank is unreliable: it may raise
+    quickly or hang indefinitely, depending on rank.  Survivors must
+    therefore never enter a collective with a dead peer — detection is
+    host-side, at chunk boundaries, via the coordinator KV store.
+  * The coordination service itself would declare the dead task
+    missing after ~100 s and then TERMINATE the survivors; elastic
+    runs must be brought up with `init_distributed(elastic=True)`,
+    which raises that service threshold out of the way.
+  * Losing rank 0 is NOT survivable in-memory (it hosts the KV
+    coordinator); that — and a hung collective — is what the cold
+    checkpoint fallback is for.
+
+Execution structure: the T-round trajectory runs as chunks of
+`check_every` rounds through the stacked scanned driver
+(`pscope.run_stacked_scanned` — zero-sync within a chunk).  At every
+chunk boundary each rank publishes a round marker to the KV store; the
+leader (rank 0) collects them, consults the heartbeat table when a
+marker is missing, and publishes a verdict every survivor obeys:
+continue, or re-mesh at epoch+1 (new ownership from
+`train.elastic.failure_plan`, survivor mesh, orphan extents adopted via
+`ShardStore.local_slice`) and resume — from the just-computed iterate
+when every survivor finished the chunk, or rolled back to the chunk-
+start iterate (which everyone holds, replicated) when a survivor's
+collective blew up mid-chunk.  The RNG split chain is fast-forwarded
+per segment (`start_round`), so the recovered trajectory equals the
+uninterrupted p-worker run within fp32 — placement transparency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import signal
+import sys
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Ownership = Dict[int, Tuple[int, ...]]
+
+# env knob: "<rank>:<round>" — that rank SIGKILLs itself at the chunk
+# boundary AFTER completing the chunk containing <round>, before its
+# marker write.  Deterministic fault injection for tests/CI/benchmarks:
+# the death lands between collectives, so survivors detect it at the
+# marker barrier instead of inside a psum.
+KILL_ENV = "REPRO_ELASTIC_KILL"
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticConfig:
+    """Knobs of the elastic run layer.
+
+    check_every           rounds per chunk — the detection granularity:
+                          a failure costs at most this many re-executed
+                          rounds plus the re-mesh latency
+    heartbeat_interval_s  how often each rank bumps its liveness counter
+    heartbeat_timeout_s   counter unchanged for this long => rank is dead
+    marker_timeout_s      how long the leader waits for chunk markers
+                          before consulting the heartbeat table
+    verdict_timeout_s     how long followers wait for the leader's
+                          verdict (generously > marker_timeout_s; a
+                          timeout here usually means rank 0 died, which
+                          is not survivable in-memory)
+    poll_interval_s       KV polling period
+    namespace             KV key prefix (disambiguates concurrent runs)
+    checkpoint_dir        cold-fallback directory: rank 0 checkpoints
+                          the iterate at chunk boundaries, and a fresh
+                          run resumes from the newest step when
+                          in-memory recovery was impossible
+    checkpoint_every      chunks between checkpoint saves (0 = off even
+                          with a directory set)
+    """
+
+    check_every: int = 1
+    heartbeat_interval_s: float = 0.25
+    heartbeat_timeout_s: float = 4.0
+    marker_timeout_s: float = 6.0
+    verdict_timeout_s: float = 120.0
+    poll_interval_s: float = 0.05
+    namespace: str = "elastic"
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 1
+
+
+# ---------------------------------------------------------------------------
+# KV store: the jax.distributed coordinator service, or in-memory
+# ---------------------------------------------------------------------------
+
+class LocalKV:
+    """Dict-backed stand-in (single-process runs and protocol tests)."""
+
+    def __init__(self):
+        self._d: Dict[str, str] = {}
+        self._lock = threading.Lock()
+
+    def set(self, key: str, value: str) -> None:
+        with self._lock:
+            self._d[key] = value
+
+    def list(self, prefix: str) -> Dict[str, str]:
+        with self._lock:
+            return {k: v for k, v in self._d.items()
+                    if k.startswith(prefix)}
+
+
+class DistributedKV:
+    """The coordination-service KV store of the running
+    `jax.distributed` job.  Writes are visible to every live process;
+    a dead process's keys persist (its heartbeat counter simply stops
+    advancing — which is exactly the liveness signal)."""
+
+    def __init__(self):
+        from jax._src import distributed as _dist
+        client = getattr(_dist.global_state, "client", None)
+        if client is None:
+            raise RuntimeError("DistributedKV needs an initialized "
+                               "jax.distributed job (init_distributed)")
+        self._client = client
+
+    def set(self, key: str, value: str) -> None:
+        self._client.key_value_set(key, value, allow_overwrite=True)
+
+    def list(self, prefix: str) -> Dict[str, str]:
+        return {k: v for k, v in self._client.key_value_dir_get(prefix)}
+
+
+# ---------------------------------------------------------------------------
+# Heartbeats + failure detection
+# ---------------------------------------------------------------------------
+
+class Heartbeat(threading.Thread):
+    """Background publisher: bumps `{ns}/hb/{rank}` every interval.
+
+    The value is a monotonically increasing counter, NOT a wall-clock
+    timestamp — liveness is judged by whether the counter ADVANCES (as
+    observed on the reader's own clock), so cross-host clock skew can
+    never fake a death or hide one.
+    """
+
+    def __init__(self, kv, ns: str, rank: int, interval_s: float):
+        super().__init__(daemon=True, name=f"elastic-hb-{rank}")
+        self._kv = kv
+        self._key = f"{ns}/hb/{rank}"
+        self._interval = interval_s
+        self._stop = threading.Event()
+        self._n = 0
+
+    def run(self) -> None:
+        while not self._stop.is_set():
+            self._n += 1
+            try:
+                self._kv.set(self._key, str(self._n))
+            except Exception:      # noqa: BLE001 — a dying service; the
+                return             # detector will see the stall
+            self._stop.wait(self._interval)
+
+    def beat_once(self) -> None:
+        """Synchronous first beat (call before the run starts so the
+        detector has seen every rank at least once)."""
+        self._n += 1
+        self._kv.set(self._key, str(self._n))
+
+    def stop(self) -> None:
+        self._stop.set()
+
+
+class FailureDetector:
+    """Stale-heartbeat detector, local-clock based.
+
+    Tracks, per rank, the last observed counter value and WHEN (by this
+    process's monotonic clock) it last changed; `stale()` returns the
+    ranks whose counter hasn't advanced within the timeout.  A rank
+    never seen at all counts from the detector's construction time, so
+    a peer that died during bring-up is still caught.
+    """
+
+    def __init__(self, kv, ns: str, ranks: Sequence[int],
+                 timeout_s: float):
+        self._kv = kv
+        self._prefix = f"{ns}/hb/"
+        self._timeout = timeout_s
+        t0 = time.monotonic()
+        self._seen: Dict[int, Tuple[Optional[str], float]] = {
+            int(r): (None, t0) for r in ranks}
+
+    def refresh(self) -> None:
+        now = time.monotonic()
+        table = self._kv.list(self._prefix)
+        for key, val in table.items():
+            try:
+                rank = int(key.rsplit("/", 1)[-1])
+            except ValueError:
+                continue
+            prev = self._seen.get(rank)
+            if prev is None or prev[0] != val:
+                self._seen[rank] = (val, now)
+
+    def stale(self, among: Optional[Sequence[int]] = None) -> List[int]:
+        self.refresh()
+        now = time.monotonic()
+        ranks = self._seen if among is None else among
+        return sorted(r for r in ranks
+                      if now - self._seen[int(r)][1] > self._timeout)
+
+
+# ---------------------------------------------------------------------------
+# Chunk-boundary consensus: markers + the leader's verdict
+# ---------------------------------------------------------------------------
+
+def _marker_prefix(ns: str, epoch: int, chunk: int) -> str:
+    return f"{ns}/e{epoch}/done/c{chunk}/"
+
+
+def _verdict_prefix(ns: str, epoch: int, chunk: int) -> str:
+    # NOTE: the verdict lives at "<prefix>v", a DIRECTORY-style key —
+    # the coordination service's key_value_dir_get only returns keys
+    # strictly under "arg/", so an exact-key poll would never see it
+    return f"{ns}/e{epoch}/verdict/c{chunk}/"
+
+
+def _ready_prefix(ns: str, epoch: int) -> str:
+    return f"{ns}/e{epoch}/ready/"
+
+
+def publish_marker(kv, ns: str, epoch: int, chunk: int, rank: int,
+                   status: str, round_end: int) -> None:
+    kv.set(_marker_prefix(ns, epoch, chunk) + str(rank),
+           json.dumps({"status": status, "round": round_end}))
+
+
+def leader_verdict(kv, cfg: ElasticConfig, epoch: int, chunk: int,
+                   survivors: Sequence[int], detector: FailureDetector,
+                   chunk_start: int, chunk_end: int) -> dict:
+    """Rank 0's side of the chunk barrier.
+
+    Waits for every survivor's marker; once `marker_timeout_s` passes,
+    missing ranks are declared dead as soon as their heartbeats go
+    stale (a slow-but-alive rank keeps beating and keeps being waited
+    for).  The verdict — continue, or re-mesh with an explicit resume
+    round — is published under an epoch/chunk-scoped key; every
+    follower blocks on it, so all survivors act on identical state.
+
+      * every survivor ok            -> {"op": "continue"}  (resume ==
+        chunk_end; each rank keeps its just-computed iterate)
+      * dead ranks, survivors all ok -> {"op": "remesh",
+        "resume_round": chunk_end}
+      * any survivor reported a failed chunk (its collective raised
+        mid-chunk) -> {"op": "remesh", "resume_round": chunk_start} —
+        every survivor rolls back to the replicated chunk-start
+        iterate, and the chunk is re-executed on the new mesh.
+    """
+    prefix = _marker_prefix(ns := cfg.namespace, epoch, chunk)
+    deadline = time.monotonic() + cfg.marker_timeout_s
+    hard_deadline = time.monotonic() + cfg.verdict_timeout_s
+    dead: List[int] = []
+    while True:
+        markers = {}
+        for key, val in kv.list(prefix).items():
+            try:
+                markers[int(key.rsplit("/", 1)[-1])] = json.loads(val)
+            except (ValueError, json.JSONDecodeError):
+                continue
+        missing = [r for r in survivors if r not in markers]
+        if not missing:
+            break
+        if time.monotonic() > deadline:
+            dead = [r for r in detector.stale(missing)]
+            if sorted(dead) == sorted(missing):
+                break
+        if time.monotonic() > hard_deadline:
+            raise RuntimeError(
+                f"elastic: ranks {missing} neither reported chunk "
+                f"{chunk} (epoch {epoch}) nor went heartbeat-stale "
+                f"within {cfg.verdict_timeout_s}s — likely a hung "
+                f"collective; in-memory recovery is impossible "
+                f"(cold fallback: checkpoint_dir)")
+        time.sleep(cfg.poll_interval_s)
+
+    failed = [r for r, m in markers.items() if m.get("status") != "ok"]
+    if not dead and not failed:
+        verdict = {"op": "continue", "resume_round": chunk_end,
+                   "dead": []}
+    else:
+        # a failed chunk on a survivor without a detected death means
+        # someone died mid-collective: wait for the heartbeat table to
+        # name the corpse
+        while failed and not dead:
+            dead = detector.stale([r for r in survivors
+                                   if r not in failed])
+            if time.monotonic() > hard_deadline:
+                raise RuntimeError(
+                    f"elastic: survivors {failed} reported failed "
+                    f"chunks but no rank went heartbeat-stale — "
+                    f"cannot attribute the failure; aborting")
+            if not dead:
+                time.sleep(cfg.poll_interval_s)
+        resume = chunk_start if failed else chunk_end
+        verdict = {"op": "remesh", "resume_round": resume,
+                   "dead": sorted(int(r) for r in dead)}
+    kv.set(_verdict_prefix(ns, epoch, chunk) + "v", json.dumps(verdict))
+    return verdict
+
+
+def follower_verdict(kv, cfg: ElasticConfig, epoch: int, chunk: int,
+                     detector: FailureDetector) -> dict:
+    """Block until rank 0 publishes the chunk verdict."""
+    prefix = _verdict_prefix(cfg.namespace, epoch, chunk)
+    deadline = time.monotonic() + cfg.verdict_timeout_s
+    while True:
+        table = kv.list(prefix)
+        if table:
+            return json.loads(next(iter(table.values())))
+        if time.monotonic() > deadline:
+            zero_stale = 0 in detector.stale([0])
+            raise RuntimeError(
+                "elastic: no verdict for chunk "
+                f"{chunk} (epoch {epoch}) within "
+                f"{cfg.verdict_timeout_s}s"
+                + (" — rank 0 (the KV coordinator) is heartbeat-stale; "
+                   "losing the coordinator is not survivable in-memory "
+                   "(cold fallback: checkpoint_dir)" if zero_stale
+                   else ""))
+        time.sleep(cfg.poll_interval_s)
+
+
+def remesh_barrier(kv, cfg: ElasticConfig, epoch: int, rank: int,
+                   survivors: Sequence[int]) -> None:
+    """KV-polling barrier among the survivors before the new epoch's
+    first collective (so nobody enters the fresh gloo rendezvous while
+    a peer is still rebuilding its arrays)."""
+    prefix = _ready_prefix(cfg.namespace, epoch)
+    kv.set(prefix + str(rank), "1")
+    deadline = time.monotonic() + cfg.verdict_timeout_s
+    while True:
+        present = set()
+        for key in kv.list(prefix):
+            try:
+                present.add(int(key.rsplit("/", 1)[-1]))
+            except ValueError:
+                continue
+        if all(r in present for r in survivors):
+            return
+        if time.monotonic() > deadline:
+            missing = sorted(set(survivors) - present)
+            raise RuntimeError(f"elastic: ranks {missing} never reached "
+                               f"the epoch-{epoch} re-mesh barrier")
+        time.sleep(cfg.poll_interval_s)
+
+
+# ---------------------------------------------------------------------------
+# The elastic driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ElasticRunResult:
+    """One `run_mesh_elastic` trajectory plus its recovery accounting."""
+
+    w: np.ndarray
+    values: np.ndarray
+    nnz: np.ndarray
+    comm_bytes_per_round: float
+    events: Tuple[dict, ...]          # one per re-mesh (see below)
+    epoch: int                        # final mesh epoch (0 = no failure)
+    ownership: Ownership              # final worker->rank map
+    worker_ids: Tuple[int, ...]       # workers THIS rank ended up owning
+    survivors: Tuple[int, ...]
+    seconds: float
+    process_id: int
+    num_processes: int
+
+    @property
+    def degraded(self) -> bool:
+        return bool(self.events)
+
+
+def _parse_kill_env() -> Optional[Tuple[int, int]]:
+    raw = os.environ.get(KILL_ENV)
+    if not raw:
+        return None
+    rank_s, round_s = raw.split(":")
+    return int(rank_s), int(round_s)
+
+
+def _survivor_mesh(survivors: Sequence[int], axis: str):
+    """1-D mesh over the survivors' devices (one device per rank)."""
+    import jax
+    from jax.sharding import Mesh
+    alive = set(survivors)
+    devs = [d for d in jax.devices() if d.process_index in alive]
+    if len(devs) != len(survivors):
+        raise RuntimeError(
+            f"elastic needs exactly one device per rank "
+            f"({len(survivors)} survivors, {len(devs)} devices)")
+    return Mesh(np.asarray(devs), (axis,))
+
+
+def run_mesh_elastic(obj, reg, data, y, w0, cfg, *,
+                     ecfg: Optional[ElasticConfig] = None,
+                     axis: str = "workers") -> ElasticRunResult:
+    """pSCOPE over a real mesh that SURVIVES losing ranks mid-run.
+
+    Every process of the `jax.distributed` job calls this with the same
+    arguments (`data`: a committed `ShardStore`, or worker-major
+    `CSRMatrix` + labels for in-memory tests).  The caller must have
+    brought the job up with `init_distributed(elastic=True)` — the
+    default coordination-service liveness threshold would otherwise
+    terminate the survivors ~100 s after a death.
+
+    The trajectory runs in `ecfg.check_every`-round chunks through the
+    stacked scanned driver; chunk boundaries are the detection points
+    (see the module docstring for the protocol).  On a detected death
+    the survivors re-mesh, adopt the orphaned workers' shard extents,
+    and resume — the logical worker count p never changes, so the
+    returned history matches the uninterrupted p-worker trajectory
+    within fp32 (and is bit-identical across the surviving ranks).
+
+    After a degraded run the process MUST exit via `exit_now` (the
+    distributed shutdown barrier would wait forever for the dead rank).
+    """
+    import jax
+
+    from repro.core import pscope
+    from repro.launch.mesh import comm_bytes_per_round, stacked_worker_arrays
+    from repro.train.elastic import failure_plan, initial_ownership
+
+    ecfg = ecfg or ElasticConfig()
+    me = int(jax.process_index())
+    nprocs = int(jax.process_count())
+    survivors = list(range(nprocs))
+    ns = ecfg.namespace
+
+    from repro.datasets.shards import ShardStore
+    if isinstance(data, ShardStore):
+        p, d = int(data.p), int(data.d)
+    else:
+        p, d = int(data.vals.shape[0]), int(data.d)
+    ownership = initial_ownership(p, nprocs)
+    cfg = dataclasses.replace(cfg, inner_path="lazy")
+
+    kv = DistributedKV() if nprocs > 1 else LocalKV()
+    hb = Heartbeat(kv, ns, me, ecfg.heartbeat_interval_s)
+    hb.beat_once()
+    hb.start()
+    detector = FailureDetector(kv, ns, survivors,
+                               ecfg.heartbeat_timeout_s)
+    kill = _parse_kill_env()
+
+    # cold fallback: resume from the newest checkpoint when one exists
+    t0_round, w = 0, np.asarray(w0, np.float32)
+    if ecfg.checkpoint_dir:
+        from repro.train.checkpoint import latest_step, restore_checkpoint
+        step = latest_step(ecfg.checkpoint_dir)
+        if step is not None:
+            tree, meta = restore_checkpoint(ecfg.checkpoint_dir, step)
+            w = np.asarray(tree["w"], np.float32)
+            t0_round = int(meta["metadata"]["round"])
+    ckpt = None
+    if ecfg.checkpoint_dir and ecfg.checkpoint_every > 0 and me == 0:
+        from repro.train.checkpoint import AsyncCheckpointer
+        ckpt = AsyncCheckpointer(ecfg.checkpoint_dir)
+
+    mesh = _survivor_mesh(survivors, axis)
+    arrays = stacked_worker_arrays(mesh, axis, ownership, data, y)
+
+    T = cfg.outer_steps
+    epoch = 0
+    chunk = 0
+    t = t0_round
+    values: List[float] = []
+    nnzs: List[int] = []
+    events: List[dict] = []
+    wall0 = time.perf_counter()
+
+    while t < T:
+        chunk_len = min(ecfg.check_every, T - t)
+        seg_cfg = dataclasses.replace(cfg, outer_steps=chunk_len)
+        vals_g, cols_g, y_g, slots_g, p_total = arrays
+        status, w_new, seg_vals, seg_nnz = "ok", None, None, None
+        try:
+            w_new, seg_vals, seg_nnz = pscope.run_stacked_scanned(
+                obj, reg, vals_g, cols_g, y_g, slots_g, w, seg_cfg, mesh,
+                axis=axis, start_round=t, p_total=p_total)
+        except Exception as e:       # noqa: BLE001 — a peer died mid-
+            status = f"failed: {e}"  # collective; report, roll back
+            print(f"elastic: rank {me} chunk {chunk} (rounds {t}.."
+                  f"{t + chunk_len}) compute failed: {e!r}",
+                  file=sys.stderr, flush=True)
+        if kill is not None and kill[0] == me and t < kill[1] <= t + chunk_len:
+            # die AFTER the chunk's collectives, BEFORE the marker: the
+            # survivors detect the silence at the barrier, never inside
+            # a psum.  SIGKILL — no atexit, no shutdown barrier.
+            sys.stdout.flush()
+            sys.stderr.flush()
+            os.kill(os.getpid(), signal.SIGKILL)
+
+        if nprocs == 1:
+            verdict = {"op": "continue", "resume_round": t + chunk_len,
+                       "dead": []}
+            if status != "ok":
+                raise RuntimeError(f"elastic single-process chunk failed: "
+                                   f"{status}")
+        else:
+            publish_marker(kv, ns, epoch, chunk, me,
+                           "ok" if status == "ok" else "failed",
+                           t + chunk_len)
+            if me == survivors[0]:
+                verdict = leader_verdict(kv, ecfg, epoch, chunk, survivors,
+                                         detector, t, t + chunk_len)
+            else:
+                verdict = follower_verdict(kv, ecfg, epoch, chunk, detector)
+
+        if verdict["op"] == "continue":
+            if not values:
+                values.append(float(seg_vals[0]))
+                nnzs.append(int(seg_nnz[0]))
+            values.extend(float(v) for v in seg_vals[1:])
+            nnzs.extend(int(x) for x in seg_nnz[1:])
+            w, t = w_new, t + chunk_len
+            chunk += 1
+            if ckpt is not None and chunk % ecfg.checkpoint_every == 0:
+                ckpt.save(t, {"w": np.asarray(w)},
+                          metadata={"round": int(t), "epoch": int(epoch)})
+            continue
+
+        # --- re-mesh ------------------------------------------------------
+        dead = list(verdict["dead"])
+        resume = int(verdict["resume_round"])
+        if 0 in dead:
+            raise RuntimeError("elastic: rank 0 (the KV coordinator) "
+                               "died — not survivable in-memory")
+        t_remesh = time.perf_counter()
+        survivors = [r for r in survivors if r not in dead]
+        ownership = failure_plan(ownership, dead)
+        epoch += 1
+        mesh = _survivor_mesh(survivors, axis)
+        arrays = stacked_worker_arrays(mesh, axis, ownership, data, y)
+        remesh_barrier(kv, ecfg, epoch, me, survivors)
+        remesh_s = time.perf_counter() - t_remesh
+        if resume == t + chunk_len and status == "ok":
+            if not values:
+                values.append(float(seg_vals[0]))
+                nnzs.append(int(seg_nnz[0]))
+            values.extend(float(v) for v in seg_vals[1:])
+            nnzs.extend(int(x) for x in seg_nnz[1:])
+            w = w_new
+        # else: keep the chunk-start iterate (rollback; history untouched)
+        events.append({
+            "round": int(t + chunk_len), "resume_round": resume,
+            "rounds_to_recover": int(t + chunk_len - resume),
+            "dead": dead, "epoch": int(epoch),
+            "remesh_seconds": float(remesh_s),
+            "survivors": list(survivors),
+            "ownership": {int(r): list(ws)
+                          for r, ws in ownership.items()},
+        })
+        t = resume
+        chunk += 1
+
+    hb.stop()
+    if ckpt is not None:
+        ckpt.wait()
+    return ElasticRunResult(
+        w=np.asarray(w), values=np.asarray(values, np.float64),
+        nnz=np.asarray(nnzs, np.int64),
+        comm_bytes_per_round=comm_bytes_per_round(d),
+        events=tuple(events), epoch=epoch,
+        ownership=dict(ownership),
+        worker_ids=tuple(ownership.get(me, ())),
+        survivors=tuple(survivors),
+        seconds=time.perf_counter() - wall0,
+        process_id=me, num_processes=nprocs)
+
+
+def exit_now(code: int = 0) -> None:
+    """Flush and `os._exit` — the ONLY safe way to leave a degraded
+    process: normal interpreter exit runs the `jax.distributed`
+    shutdown barrier, which waits forever for the dead rank."""
+    sys.stdout.flush()
+    sys.stderr.flush()
+    os._exit(code)

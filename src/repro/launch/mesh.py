@@ -165,7 +165,13 @@ class MeshSpec:
 def init_distributed(coordinator: Optional[str] = None,
                      num_processes: Optional[int] = None,
                      process_id: Optional[int] = None, *,
-                     cpu_collectives: str = "gloo") -> Dict[str, int]:
+                     cpu_collectives: str = "gloo",
+                     initialization_timeout: Optional[float] = None,
+                     retries: Optional[int] = None,
+                     backoff_s: float = 1.0,
+                     elastic: bool = False,
+                     service_max_missing_heartbeats: int = 8640
+                     ) -> Dict[str, int]:
     """Bring this process into the `jax.distributed` job (idempotent).
 
     Selects the CPU collectives implementation (gloo: real TCP
@@ -176,6 +182,23 @@ def init_distributed(coordinator: Optional[str] = None,
     --spawn` and the test harness), and to jax's own cluster
     auto-detection when neither is given.
 
+    Bring-up is bounded and retried rather than hanging forever on a
+    dead coordinator: each attempt gets `initialization_timeout`
+    seconds (env-defaulted via ``REPRO_INIT_TIMEOUT``, default 120),
+    failures back off exponentially from `backoff_s`, and after
+    `retries` attempts (env ``REPRO_INIT_RETRIES``, default 3) a
+    RuntimeError NAMING THE COORDINATOR ADDRESS is raised — transient
+    coordinator hiccups are absorbed, a truly dead one is diagnosed.
+
+    `elastic=True` routes through the lower-level distributed-state
+    initializer so the coordination-service liveness knobs can be
+    raised: by default the service declares a silent task dead after
+    ~100 s (10 s x 10 heartbeats) and then TERMINATES every other
+    process — exactly what an elastic run must prevent, because
+    `launch.elastic` does its own KV-store heartbeat detection and
+    keeps the survivors alive.  `service_max_missing_heartbeats`
+    (default 8640 == one silent day) is the override.
+
     Returns {"process_id": ..., "num_processes": ...} for convenience.
     A second call is a no-op (jax pins distributed state at first use),
     so library code can call this defensively.
@@ -185,6 +208,11 @@ def init_distributed(coordinator: Optional[str] = None,
         num_processes = int(os.environ["REPRO_NUM_PROCESSES"])
     if process_id is None and "REPRO_PROCESS_ID" in os.environ:
         process_id = int(os.environ["REPRO_PROCESS_ID"])
+    if initialization_timeout is None:
+        initialization_timeout = float(os.environ.get("REPRO_INIT_TIMEOUT",
+                                                      120.0))
+    if retries is None:
+        retries = int(os.environ.get("REPRO_INIT_RETRIES", 3))
 
     from jax._src import distributed as _dist
     already = getattr(_dist.global_state, "client", None) is not None
@@ -194,14 +222,54 @@ def init_distributed(coordinator: Optional[str] = None,
             jax.config.update("jax_cpu_collectives_implementation",
                               cpu_collectives)
         if coordinator is not None:
-            jax.distributed.initialize(coordinator_address=coordinator,
-                                       num_processes=num_processes,
-                                       process_id=process_id)
+            _init_with_retries(coordinator, num_processes, process_id,
+                               timeout=initialization_timeout,
+                               retries=max(1, retries), backoff_s=backoff_s,
+                               elastic=elastic,
+                               service_max_missing_heartbeats=
+                               service_max_missing_heartbeats)
         elif num_processes is not None and num_processes > 1:
             raise ValueError("multi-process init needs a coordinator "
                              "address (host:port)")
     return {"process_id": jax.process_index(),
             "num_processes": jax.process_count()}
+
+
+def _init_with_retries(coordinator: str, num_processes, process_id, *,
+                       timeout: float, retries: int, backoff_s: float,
+                       elastic: bool,
+                       service_max_missing_heartbeats: int) -> None:
+    """Bounded-retry `jax.distributed` bring-up (see `init_distributed`)."""
+    from jax._src import distributed as _dist
+    last: Optional[BaseException] = None
+    for attempt in range(retries):
+        try:
+            if elastic:
+                _dist.global_state.initialize(
+                    coordinator_address=coordinator,
+                    num_processes=num_processes, process_id=process_id,
+                    initialization_timeout=int(timeout),
+                    service_max_missing_heartbeats=
+                    service_max_missing_heartbeats)
+            else:
+                jax.distributed.initialize(
+                    coordinator_address=coordinator,
+                    num_processes=num_processes, process_id=process_id,
+                    initialization_timeout=int(timeout))
+            return
+        except Exception as e:     # noqa: BLE001 — retried, then re-raised
+            last = e
+            try:                   # drop any partially-initialized state
+                _dist.global_state.shutdown()
+            except Exception:      # noqa: BLE001
+                pass
+            if attempt + 1 < retries:
+                time.sleep(backoff_s * (2.0 ** attempt))
+    raise RuntimeError(
+        f"init_distributed: process {process_id} could not join the "
+        f"jax.distributed job at coordinator {coordinator!r} after "
+        f"{retries} attempt(s) of {timeout:.0f}s each — is the "
+        f"coordinator (rank 0) up and reachable?") from last
 
 
 def local_worker_ids(mesh: Mesh, axis: Optional[str] = None
@@ -265,6 +333,94 @@ def global_worker_array(mesh: Mesh, axis: str,
                 shards.append(jax.device_put(blk, dev))
     return jax.make_array_from_single_device_arrays(
         (p * n_k,) + tail, sharding, shards)
+
+
+def stacked_worker_arrays(mesh: Mesh, axis: str,
+                          ownership: Mapping[int, Sequence[int]],
+                          data, y=None):
+    """Assemble the stacked uneven-ownership operands for
+    `pscope.run_stacked_scanned`.
+
+    `ownership` maps each SURVIVING rank to the worker ids it owns
+    (`train.elastic.failure_plan` output); `mesh` is the 1-D survivor
+    mesh, one device per surviving rank, in ascending-rank order (the
+    order `jax.devices()` preserves when the dead rank's devices are
+    filtered out).  `data` is a `ShardStore` (each host maps only the
+    extents it owns — orphan adoption is just a bigger
+    `store.local_slice`) or a worker-major `CSRMatrix` + labels.
+
+    Every device's owned shards are stacked into a zero-padded
+    (W_max, n_k, ...) block plus an int32 slot→worker-id row (-1 pad);
+    the global (s, W_max, ...) arrays are registered via
+    `jax.make_array_from_single_device_arrays`, so no host ever
+    materializes rows it does not own.  Returns
+    (vals, cols, yg, slots, p_total).
+    """
+    from repro.data.sparse import CSRMatrix
+    from repro.datasets.shards import ShardStore
+    from repro.train.elastic import slot_table
+
+    ranks = sorted(int(r) for r in ownership)
+    ax = mesh.axis_names.index(axis)
+    devs = np.moveaxis(mesh.devices, ax, 0).reshape(mesh.shape[axis], -1)
+    if devs.shape != (len(ranks), 1):
+        raise ValueError(
+            f"the stacked layout needs a 1-D mesh with one device per "
+            f"surviving rank ({len(ranks)} ranks, mesh axis {axis} has "
+            f"shape {devs.shape})")
+    slots = slot_table(ownership)
+    W = len(next(iter(slots.values())))
+    p_total = sum(len(tuple(ws)) for ws in ownership.values())
+    me = jax.process_index()
+
+    if isinstance(data, ShardStore):
+        n_k, K = int(data.n_k), int(data.max_nnz)
+
+        def blocks_for(ws):
+            sl = data.local_slice(tuple(ws))
+            return (np.asarray(sl.vals), np.asarray(sl.cols),
+                    np.asarray(sl.yp))
+    elif isinstance(data, CSRMatrix):
+        if y is None:
+            raise ValueError("worker-major CSR data needs labels yp")
+        yp = np.asarray(y)
+        _, n_k, K = data.vals.shape
+
+        def blocks_for(ws):
+            ws = list(ws)
+            return (np.asarray(data.vals)[ws], np.asarray(data.cols)[ws],
+                    yp[ws])
+    else:
+        raise ValueError("stacked_worker_arrays needs a ShardStore or a "
+                         f"worker-major CSRMatrix, got {type(data)!r}")
+
+    sharding = NamedSharding(mesh, P(axis))
+    shards = {"vals": [], "cols": [], "y": [], "slots": []}
+    for i, rank in enumerate(ranks):
+        dev = devs[i, 0]
+        if dev.process_index != me:
+            continue
+        ws = [w for w in slots[rank] if w >= 0]
+        v, c, yk = blocks_for(ws)
+        pad = lambda a, fill, dt: np.concatenate(
+            [np.asarray(a, dt),
+             np.full((W - len(ws),) + a.shape[1:], fill, dt)])[None]
+        shards["vals"].append(jax.device_put(
+            pad(v, 0, np.float32), dev))
+        shards["cols"].append(jax.device_put(pad(c, 0, np.int32), dev))
+        # pad labels with a FINITE value so h'(margin, y) stays finite
+        # on the throwaway pad-slot inner loops (phase 3 masks them out)
+        shards["y"].append(jax.device_put(pad(yk, 1.0, np.float32), dev))
+        shards["slots"].append(jax.device_put(
+            np.asarray(slots[rank], np.int32)[None], dev))
+
+    s = len(ranks)
+    mk = jax.make_array_from_single_device_arrays
+    return (mk((s, W, n_k, K), sharding, shards["vals"]),
+            mk((s, W, n_k, K), sharding, shards["cols"]),
+            mk((s, W, n_k), sharding, shards["y"]),
+            mk((s, W), sharding, shards["slots"]),
+            p_total)
 
 
 def comm_bytes_per_round(d: int, itemsize: int = 4) -> float:

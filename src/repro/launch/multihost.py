@@ -78,7 +78,7 @@ def _run_rank(args) -> int:
     from repro.launch.mesh import MeshSpec, init_distributed, run_mesh
 
     info = init_distributed(args.coordinator, args.num_processes,
-                            args.process_id)
+                            args.process_id, elastic=args.elastic)
     import jax
     import numpy as np
 
@@ -101,9 +101,24 @@ def _run_rank(args) -> int:
                        inner_batch=args.inner_batch,
                        outer_steps=args.rounds, seed=args.seed,
                        inner_path=args.inner_path)
-    spec = MeshSpec.for_workers(store.p)
-    res = run_mesh(LOGISTIC, reg, store, None,
-                   np.zeros(store.d, np.float32), cfg, spec)
+    if args.elastic:
+        from repro.launch.elastic import (ElasticConfig, KILL_ENV,
+                                          run_mesh_elastic)
+        if args.kill_rank is not None:
+            os.environ[KILL_ENV] = (
+                f"{args.kill_rank}:{args.kill_at_round}")
+        ecfg = ElasticConfig(check_every=args.check_every,
+                             heartbeat_interval_s=args.hb_interval,
+                             heartbeat_timeout_s=args.hb_timeout,
+                             marker_timeout_s=args.marker_timeout,
+                             checkpoint_dir=args.ckpt_dir)
+        res = run_mesh_elastic(LOGISTIC, reg, store, None,
+                               np.zeros(store.d, np.float32), cfg,
+                               ecfg=ecfg)
+    else:
+        spec = MeshSpec.for_workers(store.p)
+        res = run_mesh(LOGISTIC, reg, store, None,
+                       np.zeros(store.d, np.float32), cfg, spec)
 
     payload = {
         "process_id": res.process_id, "num_processes": res.num_processes,
@@ -112,8 +127,13 @@ def _run_rank(args) -> int:
         "comm_bytes_per_round": res.comm_bytes_per_round,
         "seconds": res.seconds,
     }
+    if args.elastic:
+        payload["events"] = list(res.events)
+        payload["epoch"] = res.epoch
+        payload["survivors"] = list(res.survivors)
     print("RESULT " + json.dumps(payload), flush=True)
 
+    rc = 0
     if info["process_id"] == 0:
         if args.out:
             Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
@@ -128,8 +148,18 @@ def _run_rank(args) -> int:
             print(f"VERIFY {'OK' if ok else 'FAIL'} max|dv|={diff:.3g}",
                   flush=True)
             if not ok:
-                return 1
-    return 0
+                rc = 1
+    if args.elastic and getattr(res, "degraded", False):
+        # a rank died this run: the jax.distributed shutdown barrier
+        # would wait forever for it — hard-exit past it.  Rank 0 hosts
+        # the coordination service, so it lingers: exiting first would
+        # close the service socket and terminate followers that haven't
+        # flushed their RESULT line yet.
+        from repro.launch.elastic import exit_now
+        if res.process_id == 0:
+            time.sleep(2.0)
+        exit_now(rc)
+    return rc
 
 
 def _spawn(args) -> int:
@@ -155,6 +185,16 @@ def _spawn(args) -> int:
         passthrough += ["--verify"]
     if args.out:
         passthrough += ["--out", args.out]
+    if args.elastic:
+        passthrough += ["--elastic", "--check-every", str(args.check_every),
+                        "--hb-interval", str(args.hb_interval),
+                        "--hb-timeout", str(args.hb_timeout),
+                        "--marker-timeout", str(args.marker_timeout)]
+        if args.ckpt_dir:
+            passthrough += ["--ckpt-dir", args.ckpt_dir]
+        if args.kill_rank is not None:
+            passthrough += ["--kill-rank", str(args.kill_rank),
+                            "--kill-at-round", str(args.kill_at_round)]
 
     env = dict(os.environ)
     env.setdefault("JAX_PLATFORMS", "cpu")
@@ -181,9 +221,13 @@ def _spawn(args) -> int:
               "killed all ranks", file=sys.stderr)
         return 2
 
+    victim = args.kill_rank if (args.elastic and
+                                args.kill_rank is not None) else None
     results = []
     for r, (proc, out) in enumerate(zip(procs, outs)):
         sys.stdout.write(out or "")
+        if r == victim:
+            continue   # SIGKILLed mid-run by design: no exit code contract
         if proc.returncode != 0:
             print(f"rank {r} exited {proc.returncode}", file=sys.stderr)
             return proc.returncode or 1
@@ -197,7 +241,18 @@ def _spawn(args) -> int:
     if len(set(vals)) != 1:
         print("FAIL: ranks returned divergent traces", file=sys.stderr)
         return 1
-    print(f"SPAWN OK: {n} ranks, bit-identical traces, "
+    if victim is not None:
+        events = results[0].get("events", [])
+        if not events or events[-1]["dead"] != [victim]:
+            print(f"FAIL: survivors recorded no re-mesh naming rank "
+                  f"{victim}: {events}", file=sys.stderr)
+            return 1
+        ev = events[-1]
+        print(f"ELASTIC OK: rank {victim} killed at round "
+              f"{ev['round']}, {len(results)} survivors re-meshed in "
+              f"{ev['remesh_seconds']:.2f}s, resumed at round "
+              f"{ev['resume_round']}")
+    print(f"SPAWN OK: {len(results)} ranks, bit-identical traces, "
           f"{results[0]['comm_bytes_per_round']:.0f} comm bytes/round")
     return 0
 
@@ -236,6 +291,26 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--inner-path", default="lazy",
                     choices=("dense", "lazy", "auto"))
+    ap.add_argument("--elastic", action="store_true",
+                    help="chunked elastic driver: survives rank deaths "
+                         "by re-meshing the survivors (see "
+                         "docs/multihost.md)")
+    ap.add_argument("--check-every", type=int, default=2,
+                    help="(--elastic) rounds per failure-detection chunk")
+    ap.add_argument("--hb-interval", type=float, default=0.25,
+                    help="(--elastic) heartbeat publish period, seconds")
+    ap.add_argument("--hb-timeout", type=float, default=4.0,
+                    help="(--elastic) stale-heartbeat death threshold")
+    ap.add_argument("--marker-timeout", type=float, default=6.0,
+                    help="(--elastic) chunk-marker wait before the "
+                         "leader consults heartbeats")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="(--elastic) cold-fallback checkpoint directory")
+    ap.add_argument("--kill-rank", type=int, default=None,
+                    help="(--elastic) fault injection: this rank "
+                         "SIGKILLs itself mid-run")
+    ap.add_argument("--kill-at-round", type=int, default=3,
+                    help="(--elastic) round after which --kill-rank dies")
     args = ap.parse_args(argv)
 
     if args.spawn is not None:

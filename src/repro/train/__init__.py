@@ -1,8 +1,9 @@
 from repro.train.checkpoint import (save_checkpoint, restore_checkpoint,
                                     latest_step, AsyncCheckpointer)
 from repro.train.compression import topk_compress, topk_decompress_add
-from repro.train.elastic import reshard_tree
+from repro.train.elastic import (reshard_tree, failure_plan,
+                                 initial_ownership)
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
            "AsyncCheckpointer", "topk_compress", "topk_decompress_add",
-           "reshard_tree"]
+           "reshard_tree", "failure_plan", "initial_ownership"]

@@ -50,6 +50,25 @@ _BYTE_VIEWS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
                "float8_e5m2": np.uint8}
 
 
+def _view_as_stored_dtype(arr: np.ndarray, want: str) -> np.ndarray:
+    """Reinterpret a byte-view array back to its manifest dtype.
+
+    ml_dtypes (which registers bfloat16/fp8 with numpy) is imported
+    only when a checkpoint actually CONTAINS such an array — fp32-only
+    checkpoints restore on machines without it."""
+    if str(arr.dtype) == want:
+        return arr
+    if want in _BYTE_VIEWS:
+        try:
+            import ml_dtypes  # noqa: F401 — registers the dtype names
+        except ImportError as e:
+            raise ImportError(
+                f"this checkpoint stores a {want!r} array, which needs "
+                f"the ml_dtypes package to decode; fp32/int checkpoints "
+                f"restore without it") from e
+    return arr.view(np.dtype(want))
+
+
 def save_checkpoint(directory: str, step: int, tree, metadata: Optional[dict]
                     = None) -> str:
     """Atomic host-side save. Returns the final path."""
@@ -98,16 +117,12 @@ def restore_checkpoint(directory: str, step: Optional[int] = None,
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
-    import ml_dtypes
     dtypes = meta.get("dtypes", {})
     with np.load(os.path.join(path, "arrays.npz")) as z:
         flat = {}
         for k in z.files:
             arr = z[k]
-            want = dtypes.get(k, str(arr.dtype))
-            if str(arr.dtype) != want:
-                arr = arr.view(np.dtype(want))
-            flat[k] = arr
+            flat[k] = _view_as_stored_dtype(arr, dtypes.get(k, str(arr.dtype)))
     tree = _unflatten(flat)
     if shardings is not None:
         tree = jax.tree_util.tree_map(
@@ -126,24 +141,34 @@ def prune_old(directory: str, keep: int = 3) -> None:
 
 class AsyncCheckpointer:
     """Overlaps the host write with training: device_get happens on the
-    caller thread (cheap on CPU, DMA on TPU), np.savez on a worker."""
+    caller thread (cheap on CPU, DMA on TPU), np.savez on a worker.
+
+    A failed background write is never silent: the error is recorded
+    under a lock (tagged with the step that failed) and re-raised at
+    the next `save()` or `wait()` — BEFORE a new write starts, so a
+    crashed step_N save can't be papered over by a successful step_N+1.
+    """
 
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
         self.last_error: Optional[BaseException] = None
+        self._failed_step: Optional[int] = None
 
     def save(self, step: int, tree, metadata: Optional[dict] = None):
-        self.wait()
+        self.wait()   # joins the in-flight write; raises if it failed
         host_tree = jax.device_get(tree)
 
         def work():
             try:
                 save_checkpoint(self.directory, step, host_tree, metadata)
                 prune_old(self.directory, self.keep)
-            except BaseException as e:   # surfaced on next wait()
-                self.last_error = e
+            except BaseException as e:   # surfaced on next save()/wait()
+                with self._lock:
+                    self.last_error = e
+                    self._failed_step = step
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -152,6 +177,10 @@ class AsyncCheckpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
-        if self.last_error is not None:
+        with self._lock:
             err, self.last_error = self.last_error, None
-            raise err
+            step, self._failed_step = self._failed_step, None
+        if err is not None:
+            raise RuntimeError(
+                f"async checkpoint save of step {step} under "
+                f"{self.directory} failed: {err!r}") from err

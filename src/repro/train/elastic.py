@@ -1,17 +1,38 @@
-"""Elastic scaling: resume the same logical state on a different mesh.
+"""Elastic scaling: the worker-ownership policy behind host loss.
 
-The checkpoint format is host-numpy (mesh-independent); resharding is
-`device_put` against the new mesh's NamedShardings.  The data pipeline
-is step-indexed (batch content is a pure function of the global step),
-so a resized job replays no data and skips none.  A node failure is
-handled the same way: restart with the survivors' mesh, restore, go.
+Two recovery paths share this module:
+
+  * **Cold resume** (restart from a checkpoint on a different mesh):
+    the checkpoint format is host-numpy (mesh-independent), so
+    `reshard_tree` just device_puts every leaf against the new mesh's
+    NamedShardings.  The data pipeline is step-indexed (batch content
+    is a pure function of the global step), so a resized job replays no
+    data and skips none.
+  * **In-memory re-mesh** (`launch.elastic.run_mesh_elastic`): on a
+    detected dead rank the survivors agree on a new worker-ownership
+    map — every one of the original p logical workers must land on
+    exactly one surviving rank — rebuild a smaller mesh, adopt the
+    orphaned shard extents via `ShardStore.local_slice`, and resume the
+    scanned trajectory from the replicated iterate.  The logical worker
+    count p NEVER changes across a re-mesh: Lemma 2's partition metric
+    only improves as shards merge, and keeping p fixed makes the
+    resumed trajectory bit-compatible (up to fp32 reassociation) with
+    the uninterrupted p-worker run — placement transparency, which the
+    elastic acceptance tests pin.
+
+The ownership computation is deterministic and survivor-local: every
+survivor evaluates `failure_plan` on the same (ownership, dead-set)
+inputs and gets the same answer, so no extra coordination round is
+needed beyond agreeing on WHO died.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Dict, Iterable, Mapping, Tuple
 
 import jax
 from jax.sharding import NamedSharding
+
+Ownership = Dict[int, Tuple[int, ...]]
 
 
 def reshard_tree(tree, mesh, pspecs) -> Any:
@@ -21,18 +42,88 @@ def reshard_tree(tree, mesh, pspecs) -> Any:
         tree, pspecs)
 
 
-def failure_plan(mesh_shape, failed_hosts: int, hosts: int):
-    """Pick the largest viable mesh after losing `failed_hosts` hosts.
+def initial_ownership(p: int, hosts: int) -> Ownership:
+    """The launch-time worker→rank map: contiguous blocks, rank-major.
 
-    Policy: drop whole data-parallel slices (pSCOPE workers) — the CALL
-    framework tolerates a changed worker count p without retuning
-    (Lemma 2's gamma bound only improves as shards grow), so we shrink
-    the `data` axis and keep `model` intact.
+    Matches `launch.mesh.local_worker_ids` for the 1-D CALL mesh built
+    over `jax.devices()` (device order is process-major): rank r owns
+    the r-th contiguous block of the p workers.  When p doesn't divide
+    evenly the first `p % hosts` ranks own one extra worker — every
+    rank owns at least one (p >= hosts required).
     """
-    alive = hosts - failed_hosts
-    if not mesh_shape:
-        return ()
-    data = mesh_shape[0]
-    per_host = max(1, data // hosts)
-    new_data = max(1, per_host * alive)
-    return (new_data,) + tuple(mesh_shape[1:])
+    if p < 1 or hosts < 1:
+        raise ValueError(f"need p >= 1 and hosts >= 1, got p={p}, "
+                         f"hosts={hosts}")
+    if p < hosts:
+        raise ValueError(f"cannot spread {p} workers over {hosts} ranks "
+                         f"with every rank owning at least one")
+    base, extra = divmod(p, hosts)
+    out: Ownership = {}
+    start = 0
+    for r in range(hosts):
+        size = base + (1 if r < extra else 0)
+        out[r] = tuple(range(start, start + size))
+        start += size
+    return out
+
+
+def failure_plan(ownership: Mapping[int, Iterable[int]],
+                 dead: Iterable[int]) -> Ownership:
+    """Remap the dead ranks' workers onto the survivors.
+
+    `ownership` is the current worker→rank map (rank -> worker ids);
+    `dead` the ranks declared lost.  Every orphaned worker is adopted
+    by the currently least-loaded survivor (ties broken by lowest
+    rank), in ascending worker order — a deterministic, load-balanced
+    assignment every survivor computes identically from the same
+    inputs.  Returns the new map over the surviving ranks only.
+
+    Raises if the survivors are empty or the input map is not an exact
+    partition (a worker owned twice, or by nobody, is a correctness
+    bug upstream — better to die loudly than to double-count a shard).
+    """
+    dead_set = set(int(r) for r in dead)
+    owners: Ownership = {int(r): tuple(sorted(int(w) for w in ws))
+                         for r, ws in ownership.items()}
+    seen: Dict[int, int] = {}
+    for r, ws in owners.items():
+        for w in ws:
+            if w in seen:
+                raise ValueError(f"worker {w} owned by both rank "
+                                 f"{seen[w]} and rank {r}")
+            seen[w] = r
+    p = len(seen)
+    if sorted(seen) != list(range(p)):
+        raise ValueError(f"ownership is not a partition of range({p}): "
+                         f"workers {sorted(seen)}")
+    survivors = sorted(set(owners) - dead_set)
+    if not survivors:
+        raise ValueError(f"no survivors: all of {sorted(owners)} dead")
+
+    new: Dict[int, list] = {r: list(owners[r]) for r in survivors}
+    orphans = sorted(w for r in dead_set if r in owners
+                     for w in owners[r])
+    for w in orphans:
+        adopter = min(survivors, key=lambda r: (len(new[r]), r))
+        new[adopter].append(w)
+    return {r: tuple(sorted(ws)) for r, ws in new.items()}
+
+
+def max_workers_per_rank(ownership: Mapping[int, Iterable[int]]) -> int:
+    """The stacked-driver slot count W_max = max_r |workers(r)|."""
+    return max((len(tuple(ws)) for ws in ownership.values()), default=0)
+
+
+def slot_table(ownership: Mapping[int, Iterable[int]]
+               ) -> Dict[int, Tuple[int, ...]]:
+    """Per-rank worker-id slot rows, -1 padded to a common W_max.
+
+    This is the int32 slot→global-worker-id table the stacked scanned
+    driver consumes: rank r's row lists its owned workers (ascending)
+    followed by -1 pad slots.  All rows share one width so the stack is
+    a rectangular (s, W_max) array.
+    """
+    wmax = max_workers_per_rank(ownership)
+    return {int(r): tuple(sorted(int(w) for w in ws)) +
+            (-1,) * (wmax - len(tuple(ws)))
+            for r, ws in ownership.items()}

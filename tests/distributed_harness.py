@@ -30,7 +30,10 @@ import os
 import socket
 import subprocess
 import sys
+import tempfile
 import textwrap
+import threading
+import time
 
 import pytest
 
@@ -44,12 +47,28 @@ import os as _os
 
 from repro.launch.mesh import init_distributed
 
-_info = init_distributed()          # REPRO_* env vars set by the harness
+# REPRO_* env vars set by the harness; elastic legs raise the
+# coordination-service liveness threshold so survivors outlive a kill
+_info = init_distributed(
+    elastic=bool(int(_os.environ.get("REPRO_HARNESS_ELASTIC", "0"))))
 
 {body}
 
 _out = main()
 print({tag!r} + _json.dumps(_out), flush=True)
+if _os.environ.get("REPRO_HARNESS_HARD_EXIT"):
+    # skip the jax.distributed shutdown barrier: after a rank death the
+    # normal interpreter exit would wait forever for the dead peer
+    import sys as _sys
+    import time as _time
+    if int(_os.environ["REPRO_PROCESS_ID"]) == 0:
+        # rank 0 hosts the coordination service: exiting first closes
+        # the service socket, which terminates peers that haven't
+        # printed their result yet — linger so the followers go first
+        _time.sleep(2.0)
+    _sys.stdout.flush()
+    _sys.stderr.flush()
+    _os._exit(0)
 """
 
 
@@ -73,54 +92,121 @@ def _child_env(extra=None, devices_per_process: int = 1) -> dict:
     return env
 
 
+def _tail(path: str, limit: int = 1200) -> str:
+    try:
+        with open(path, "r", errors="replace") as f:
+            out = f.read()
+        return out[-limit:] if out else "<no output>"
+    except OSError as e:
+        return f"<unreadable: {e}>"
+
+
 def run_multihost(num_processes: int, body: str, *, timeout: float = 600.0,
-                  devices_per_process: int = 1, env=None):
+                  devices_per_process: int = 1, env=None,
+                  kill_rank=None, allowed_failures=(), elastic=False,
+                  hard_exit=False):
     """Fork `num_processes` ranks running `body`'s ``main()``.
 
     Returns the rank-ordered list of each rank's jsonable return value.
     Fails the calling test on any non-zero exit, missing result, or
     timeout (all ranks are killed — a deadlocked collective cannot
     stall the suite past `timeout`).
+
+    Each rank's stdout+stderr streams to a temp file, so a timeout
+    failure reports every rank's PARTIAL output — the hung collective's
+    last words — instead of discarding it with the pipes.
+
+    Fault injection / elastic knobs:
+      kill_rank=(rank, after_s)  parent-side timer SIGKILLs that rank
+                                 `after_s` seconds into the run
+      allowed_failures=(ranks,)  ranks whose non-zero exit / missing
+                                 result are tolerated (their slot in
+                                 the returned list is None); ranks
+                                 killed by `kill_rank` are implicitly
+                                 allowed
+      elastic=True               children init with
+                                 `init_distributed(elastic=True)`
+      hard_exit=True             children `os._exit(0)` after printing
+                                 their result (required when a rank
+                                 died: normal exit hangs at the
+                                 distributed shutdown barrier)
     """
     port = free_port()
     script = _WRAPPER.format(body=textwrap.dedent(body), tag=RESULT_TAG)
-    procs = []
+    tmpdir = tempfile.mkdtemp(prefix="multihost_")
+    logs = [os.path.join(tmpdir, f"rank{r}.out")
+            for r in range(num_processes)]
+    procs, sinks = [], []
+    extra_common = dict(env or {})
+    if elastic:
+        extra_common["REPRO_HARNESS_ELASTIC"] = "1"
+    if hard_exit:
+        extra_common["REPRO_HARNESS_HARD_EXIT"] = "1"
     for rank in range(num_processes):
         rank_env = _child_env(extra={
             "REPRO_COORDINATOR": f"127.0.0.1:{port}",
             "REPRO_NUM_PROCESSES": num_processes,
             "REPRO_PROCESS_ID": rank,
-            **(env or {}),
+            **extra_common,
         }, devices_per_process=devices_per_process)
+        sink = open(logs[rank], "w")
+        sinks.append(sink)
         procs.append(subprocess.Popen(
             [sys.executable, "-c", script], env=rank_env,
-            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True))
+            stdout=sink, stderr=subprocess.STDOUT, text=True))
 
-    import time
+    killed = set()
+    timer = None
+    if kill_rank is not None:
+        victim, after_s = kill_rank
+
+        def _fire():
+            killed.add(victim)
+            procs[victim].kill()          # SIGKILL: no goodbye, no flush
+
+        timer = threading.Timer(after_s, _fire)
+        timer.start()
+
     deadline = time.monotonic() + timeout
-    outs = [None] * num_processes
     try:
-        for rank, proc in enumerate(procs):
+        for proc in procs:
             left = deadline - time.monotonic()
             if left <= 0:
                 raise subprocess.TimeoutExpired(proc.args, timeout)
-            outs[rank], _ = proc.communicate(timeout=left)
+            proc.wait(timeout=left)
     except subprocess.TimeoutExpired:
         for proc in procs:
             proc.kill()
         for proc in procs:
             proc.wait()
+        tails = "\n".join(
+            f"--- rank {r} (exit {procs[r].returncode}) partial output "
+            f"---\n{_tail(logs[r])}" for r in range(num_processes))
         pytest.fail(f"multihost job ({num_processes} ranks) hung past "
-                    f"{timeout}s; killed all ranks", pytrace=False)
+                    f"{timeout}s; killed all ranks\n{tails}",
+                    pytrace=False)
+    finally:
+        if timer is not None:
+            timer.cancel()
+        for sink in sinks:
+            sink.close()
 
+    allowed = set(allowed_failures) | killed
     results = []
-    for rank, (proc, out) in enumerate(zip(procs, outs)):
-        assert proc.returncode == 0, (
-            f"rank {rank} exited {proc.returncode}:\n{(out or '')[-2500:]}")
-        lines = [ln for ln in (out or "").splitlines()
+    for rank, proc in enumerate(procs):
+        out = _tail(logs[rank], limit=1 << 20)
+        lines = [ln for ln in out.splitlines()
                  if ln.startswith(RESULT_TAG)]
+        if rank in allowed:
+            # a tolerated rank may still have produced a result (e.g.
+            # the kill timer fired after it finished) — hand it back
+            results.append(json.loads(lines[-1][len(RESULT_TAG):])
+                           if lines else None)
+            continue
+        assert proc.returncode == 0, (
+            f"rank {rank} exited {proc.returncode}:\n{out[-2500:]}")
         assert lines, (f"rank {rank} produced no {RESULT_TAG!r} line:\n"
-                       f"{(out or '')[-2500:]}")
+                       f"{out[-2500:]}")
         results.append(json.loads(lines[-1][len(RESULT_TAG):]))
     return results
 

@@ -133,15 +133,18 @@ def test_elastic_mesh_resize_checkpoint():
         import numpy as np, jax, jax.numpy as jnp, tempfile
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.train.checkpoint import save_checkpoint, restore_checkpoint
-        from repro.train.elastic import reshard_tree, failure_plan
+        from repro.train.elastic import (reshard_tree, failure_plan,
+                                         initial_ownership)
 
         mesh4 = jax.make_mesh((4,), ("data",))
         w = jax.device_put(jnp.arange(16.0).reshape(4, 4),
                            NamedSharding(mesh4, P("data")))
         d = tempfile.mkdtemp()
         save_checkpoint(d, 1, {"w": w})
-        # simulate losing half the hosts
-        assert failure_plan((4,), failed_hosts=1, hosts=2) == (2,)
+        # simulate losing one of the two hosts: the survivor adopts
+        # every orphaned worker (p stays 4, the mesh shrinks to 2)
+        plan = failure_plan(initial_ownership(4, 2), dead={1})
+        assert plan == {0: (0, 1, 2, 3)}, plan
         mesh2 = jax.make_mesh((2,), ("data",))
         tree, _ = restore_checkpoint(d)
         out = reshard_tree(tree, mesh2, {"w": P("data")})

@@ -12,9 +12,9 @@ from repro.core.partition import (PARTITION_SCHEMES, Partition,
 from repro.core.solvers import SolverConfig, Trace
 from repro.data.synthetic import make_sparse_classification
 
-ALL_SOLVERS = ("pscope", "pscope_lazy", "pscope_mesh", "fista", "pgd",
-               "prox_svrg", "dpsgd", "dpsvrg", "admm", "owlqn", "dbcd",
-               "cocoa")
+ALL_SOLVERS = ("pscope", "pscope_lazy", "pscope_mesh", "pscope_elastic",
+               "fista", "pgd", "prox_svrg", "dpsgd", "dpsvrg", "admm",
+               "owlqn", "dbcd", "cocoa")
 
 # per-solver budgets sized so each clearly decreases the objective while
 # keeping the whole parametrized sweep CPU-cheap
@@ -22,6 +22,8 @@ CONFIGS = {
     "pscope": SolverConfig(rounds=5, inner_epochs=1.0),
     "pscope_lazy": SolverConfig(rounds=5, inner_epochs=1.0),
     "pscope_mesh": SolverConfig(rounds=5, inner_epochs=1.0),
+    "pscope_elastic": SolverConfig(rounds=5, inner_epochs=1.0,
+                                   extras={"hosts": 2, "fail_at": 2}),
     "fista": SolverConfig(rounds=40),
     "pgd": SolverConfig(rounds=40),
     "prox_svrg": SolverConfig(rounds=4, inner_epochs=0.5),
