@@ -7,7 +7,9 @@ fixture (real LIBSVM text, generated offline and cached under
     ingest/parse/<ds>         chunked vectorized parse only
     ingest/parse_hash/<ds>    parse + signed feature hashing
     ingest/shard/<ds>/<pl>    full ingest: parse -> place -> spill ->
-                              padded mmap segments (per placement)
+                              padded mmap segments (per placement; a
+                              `sequential+delta+bf16` leg ingests with
+                              the segment codec and reports the ratio)
     ingest/solve/<ds>         pscope_lazy on the mmap shards — proof the
                               parse->hash->shard->solve path is live
 
@@ -60,19 +62,22 @@ def bench_parse(fixture, name: str, hash_dim_log2=None) -> Dict:
     return _throughput_row(f"ingest/{stage}/{name}", stats)
 
 
-def bench_shard(fixture, name: str, placement: str, p: int, d: int) -> Dict:
-    out = fixture.parent / f"_bench.{name}.{placement}"
+def bench_shard(fixture, name: str, placement: str, p: int, d: int,
+                codec: str = None) -> Dict:
+    tag = f"{placement}+{codec}" if codec else placement
+    out = fixture.parent / f"_bench.{name}.{tag}"
     shutil.rmtree(out, ignore_errors=True)
     store = datasets.ingest_libsvm(fixture, out, p, placement=placement,
                                    n_features=d, zero_based=False,
-                                   chunk_bytes=CHUNK_BYTES)
+                                   codec=codec, chunk_bytes=CHUNK_BYTES)
     s = store.manifest["stats"]
     stats = IngestStats(rows=s["rows"], nnz=s["nnz"],
                         bytes_read=s["bytes_read"], chunks=s["chunks"],
                         seconds=s["seconds"])
-    row = _throughput_row(
-        f"ingest/shard/{name}/{placement}", stats,
-        extra=f";store_mb={store.nbytes / 1e6:.1f};n_k={store.n_k}")
+    extra = f";store_mb={store.nbytes / 1e6:.1f};n_k={store.n_k}"
+    if codec:
+        extra += f";ratio={store.raw_nbytes / store.nbytes:.2f}"
+    row = _throughput_row(f"ingest/shard/{name}/{tag}", stats, extra=extra)
     shutil.rmtree(out, ignore_errors=True)
     return row
 
@@ -137,6 +142,9 @@ def main(full: bool = False, smoke: bool = False) -> List[Dict]:
             if pl == "gamma" and prof.d > 8192:
                 continue               # O(p*d) per row: fixture-scale only
             rows.append(bench_shard(fixture, name, pl, p, prof.d))
+        # codec leg: same ingest, delta+bf16 segments (ratio in derived)
+        rows.append(bench_shard(fixture, name, "sequential", p, prof.d,
+                                codec="delta+bf16"))
     rows.append(bench_solve(grid[0][0], p=4 if smoke else p,
                             scale=grid[0][1]))
     return rows

@@ -104,7 +104,7 @@ def main() -> None:
     from benchmarks import (fig1_convergence, table2_timing, fig2a_speedup,
                             fig2b_partition, recovery_bench, roofline_report,
                             bench_lazy_inner, bench_partition, bench_ingest,
-                            bench_comm, bench_elastic)
+                            bench_shard_codec, bench_comm, bench_elastic)
     suites = [
         ("fig1", lambda: fig1_convergence.main(full=args.full,
                                                dataset=args.dataset)),
@@ -116,6 +116,7 @@ def main() -> None:
         ("lazy_inner", lambda: bench_lazy_inner.main(full=args.full)),
         ("partition", lambda: bench_partition.main(full=args.full)),
         ("ingest", lambda: bench_ingest.main(full=args.full)),
+        ("ingest_codec", lambda: bench_shard_codec.main(full=args.full)),
         ("comm", lambda: bench_comm.main(full=args.full)),
         ("elastic", lambda: bench_elastic.main(full=args.full)),
     ]

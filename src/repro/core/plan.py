@@ -259,7 +259,12 @@ class EpochGathers(NamedTuple):
     epoch, so every step's gathers of them can be batched into single
     (M, ...) operations instead of M scan-step gathers:
 
-    vb  (M, b, k)        microbatch values
+    vb  (M, b, k)        microbatch values — float32, OR uint16 bf16
+                         bit patterns when the shard is stored encoded
+                         (datasets codec): the gather then moves half
+                         the bytes and the epoch kernels bitcast the
+                         bits to f32 at use (kernels/ops dispatches on
+                         this dtype)
     yb  (M, b)           labels
     zg  (M, S)           z at the active columns
     sw  (M, b)           h'(x_i . w_anchor, y_i) — the anchor half of
@@ -279,13 +284,19 @@ class EpochGathers(NamedTuple):
 def epoch_gathers(h_prime, w_anchor: Array, z: Array, vals_k: Array,
                   yk: Array, idx: Array, cflat: Array,
                   statics: Optional[ShardStatics] = None) -> EpochGathers:
+    """`vals_k` is (n_k, k) float32, or uint16 bf16 bits from an
+    encoded shard — in the latter case `vb` STAYS in bits (the decode
+    is fused into the consuming kernel) and only the anchor-coefficient
+    reduction here reads a transient f32 view."""
+    from repro.data.sparse import bf16_bits_to_f32
     M, b = idx.shape
     k = vals_k.shape[-1]
     vb = jnp.take(vals_k, idx, axis=0)                           # (M, b, k)
+    vbf = bf16_bits_to_f32(vb) if vb.dtype == jnp.uint16 else vb
     yb = jnp.take(yk, idx, axis=0)                               # (M, b)
     zg = jnp.take(z, cflat, axis=0)                              # (M, S)
     wg = jnp.take(w_anchor, cflat, axis=0).reshape(M, b, k)
-    sw = h_prime(jnp.sum(vb * wg, axis=-1), yb)                  # (M, b)
+    sw = h_prime(jnp.sum(vbf * wg, axis=-1), yb)                 # (M, b)
     xd = None
     if b == 1 and statics is not None:
         xd = jnp.take(statics.xdup, idx.reshape(-1), axis=0)     # (M, k)

@@ -68,7 +68,7 @@ from repro.core import svrg
 from repro.core.prox import Regularizer, prox_elastic_net
 from repro.core.recovery import recovery_catch_up
 from repro.core.objectives import Objective
-from repro.data.sparse import CSRMatrix, dense_to_csr
+from repro.data.sparse import CSRMatrix, EncodedCSR, dense_to_csr
 from repro.kernels import ops
 
 Array = jax.Array
@@ -216,6 +216,41 @@ def _lazy_inner_loop(h_prime: Callable, reg: Regularizer, eta: float,
                                 inner_batch=idx.shape[1])
 
 
+def _lazy_inner_loop_enc(h_prime: Callable, reg: Regularizer, eta: float,
+                         u0: Array, w_anchor: Array, z: Array,
+                         vals16_k: Array, colb_k: Array, dcols_k: Array,
+                         nnz_k: Array, yk: Array, idx: Array,
+                         statics: Optional[plan_mod.ShardStatics] = None
+                         ) -> Array:
+    """`_lazy_inner_loop` over an ENCODED shard (datasets codec leaves).
+
+    The decode is fused into the epoch, not materialized up front:
+    columns are reconstructed from (first col, deltas, row_nnz) by a
+    masked cumsum feeding the plan build directly, and the value gather
+    moves uint16 bf16 bits — half the bytes of f32 — which the epoch
+    kernels bitcast to f32 at use (`EpochGathers.vb` dtype dispatch).
+    On bf16-representable data the trajectory is bitwise identical to
+    the raw-store path: the bits -> f32 bitcast is exact, and the plan
+    depends only on the (exactly reconstructed) integer columns.
+    """
+    d = u0.shape[0]
+    enc = EncodedCSR(vals16=vals16_k, colb=colb_k, dcols=dcols_k,
+                     row_nnz=nnz_k, d=d)
+    cols_k = enc.decode_cols()
+    if statics is None:
+        n_k, k = cols_k.shape
+        statics = plan_mod.shard_statics(
+            enc.decode_vals(), cols_k,
+            with_member=plan_mod.default_with_member(
+                n_k, k, inner_batch=idx.shape[1]))
+    eplan = plan_mod.build_epoch_plan(cols_k, idx, d, statics)
+    gathers = plan_mod.epoch_gathers(h_prime, w_anchor, z, vals16_k, yk,
+                                     idx, eplan.cflat, statics)
+    return ops.fused_lazy_epoch(u0, z, eplan, gathers, h_prime=h_prime,
+                                eta=eta, lam1=reg.lam1, lam2=reg.lam2,
+                                inner_batch=idx.shape[1])
+
+
 def _lazy_inner_loop_ref(h_prime: Callable, reg: Regularizer, eta: float,
                          u0: Array, w_anchor: Array, z: Array,
                          vals_k: Array, cols_k: Array, yk: Array,
@@ -277,9 +312,10 @@ def _require_lazy_support(obj: Objective, cfg: PScopeConfig):
     return h_prime
 
 
-def _as_csr_shards(Xp, yp) -> "tuple[CSRMatrix, Array]":
-    """Accept worker-major CSR directly, or convert dense (p, n_k, d)."""
-    if isinstance(Xp, CSRMatrix):
+def _as_csr_shards(Xp, yp):
+    """Accept worker-major CSR/encoded directly, or convert dense
+    (p, n_k, d)."""
+    if isinstance(Xp, (CSRMatrix, EncodedCSR)):
         return Xp, yp
     p, n_k, d = Xp.shape
     flat = dense_to_csr(jnp.reshape(Xp, (p * n_k, d)))
@@ -299,10 +335,10 @@ def _resolve_inner_path(obj: Objective, cfg: PScopeConfig,
     """
     if cfg.inner_path != "auto":
         return cfg
-    if isinstance(X, CSRMatrix):
-        # CSR input can only feed the lazy engine — there is no dense
-        # view to fall back to, so the cost model has no choice to make
-        # (an unsupported objective still gets the clear
+    if isinstance(X, (CSRMatrix, EncodedCSR)):
+        # CSR/encoded input can only feed the lazy engine — there is no
+        # dense view to fall back to, so the cost model has no choice to
+        # make (an unsupported objective still gets the clear
         # _require_lazy_support error downstream)
         return dataclasses.replace(cfg, inner_path="lazy")
     lazy_ok = svrg.LINEAR_MODEL_H_PRIME.get(obj.name) is not None
@@ -315,14 +351,23 @@ def _resolve_inner_path(obj: Objective, cfg: PScopeConfig,
     return dataclasses.replace(cfg, inner_path=path)
 
 
-def _sim_statics(csr_p: CSRMatrix, cfg: PScopeConfig) -> plan_mod.ShardStatics:
-    """Per-worker shard statics for simulation mode, built once per run."""
-    p, n_k, k = csr_p.vals.shape
+def _sim_statics(csr_p, cfg: PScopeConfig) -> plan_mod.ShardStatics:
+    """Per-worker shard statics for simulation mode, built once per run.
+
+    Encoded shards decode once here — the statics (duplicate sums,
+    representatives) are f32/int32 precomputes either way, and the
+    decode is exact, so statics from an encoded store equal the raw
+    store's bitwise.
+    """
+    if isinstance(csr_p, EncodedCSR):
+        vals, cols = csr_p.decode_vals(), csr_p.decode_cols()
+    else:
+        vals, cols = csr_p.vals, csr_p.cols
+    p, n_k, k = vals.shape
     with_member = plan_mod.default_with_member(n_k, k, workers=p,
                                                inner_batch=cfg.inner_batch)
     return jax.vmap(functools.partial(plan_mod.shard_statics,
-                                      with_member=with_member))(
-        csr_p.vals, csr_p.cols)
+                                      with_member=with_member))(vals, cols)
 
 
 # ---------------------------------------------------------------------------
@@ -363,17 +408,28 @@ def _outer_step_lazy_core(obj: Objective, reg: Regularizer,
                           participation: Optional[Array],
                           statics: Optional[plan_mod.ShardStatics]
                           ) -> PScopeState:
-    """One fused-lazy outer iteration (unjitted core; scan-able)."""
+    """One fused-lazy outer iteration (unjitted core; scan-able).
+
+    `csr_p` is worker-major: a `CSRMatrix`, or an `EncodedCSR` from a
+    codec shard store — the encoded form is consumed directly (phase 1
+    decodes inside the jit where XLA fuses the bitcast/cumsum into the
+    scatter-add; phase 2 gathers bf16 bits, see `_lazy_inner_loop_enc`).
+    """
     h_prime = _require_lazy_support(obj, cfg)
-    p, n_k, _ = csr_p.vals.shape
+    encoded = isinstance(csr_p, EncodedCSR)
+    p, n_k = yp.shape
     d = state.w.shape[0]
     w_t, key = state.w, state.key
     key, k_idx = jax.random.split(key)
 
     # --- phase 1: anchor gradient via sparse scatter-add ------------------
+    if encoded:
+        vals_p, cols_p = csr_p.decode_vals(), csr_p.decode_cols()
+    else:
+        vals_p, cols_p = csr_p.vals, csr_p.cols
     local_grads = jax.vmap(
         lambda v, c, y: svrg.sparse_linear_model_full_gradient(
-            h_prime, w_t, v, c, y, d))(csr_p.vals, csr_p.cols, yp)
+            h_prime, w_t, v, c, y, d))(vals_p, cols_p, yp)
     z = jnp.mean(local_grads, axis=0)
 
     # --- phase 2: fused lazy autonomous local learning --------------------
@@ -381,16 +437,32 @@ def _outer_step_lazy_core(obj: Objective, reg: Regularizer,
         lambda k: svrg.sample_microbatches(k, n_k, cfg.inner_steps,
                                            cfg.inner_batch)
     )(jax.random.split(k_idx, p))
-    inner = functools.partial(_lazy_inner_loop, h_prime, reg, cfg.eta)
-    if statics is None:
-        u_final = jax.vmap(
-            lambda v, c, yk, ixk: inner(w_t, w_t, z, v, c, yk, ixk))(
-                csr_p.vals, csr_p.cols, yp, idx)
+    if encoded:
+        inner = functools.partial(_lazy_inner_loop_enc, h_prime, reg,
+                                  cfg.eta)
+        if statics is None:
+            u_final = jax.vmap(
+                lambda v16, cb, dc, nz, yk, ixk: inner(
+                    w_t, w_t, z, v16, cb, dc, nz, yk, ixk))(
+                    csr_p.vals16, csr_p.colb, csr_p.dcols, csr_p.row_nnz,
+                    yp, idx)
+        else:
+            u_final = jax.vmap(
+                lambda v16, cb, dc, nz, yk, ixk, st: inner(
+                    w_t, w_t, z, v16, cb, dc, nz, yk, ixk, statics=st))(
+                    csr_p.vals16, csr_p.colb, csr_p.dcols, csr_p.row_nnz,
+                    yp, idx, statics)
     else:
-        u_final = jax.vmap(
-            lambda v, c, yk, ixk, st: inner(w_t, w_t, z, v, c, yk, ixk,
-                                            statics=st))(
-                csr_p.vals, csr_p.cols, yp, idx, statics)
+        inner = functools.partial(_lazy_inner_loop, h_prime, reg, cfg.eta)
+        if statics is None:
+            u_final = jax.vmap(
+                lambda v, c, yk, ixk: inner(w_t, w_t, z, v, c, yk, ixk))(
+                    csr_p.vals, csr_p.cols, yp, idx)
+        else:
+            u_final = jax.vmap(
+                lambda v, c, yk, ixk, st: inner(w_t, w_t, z, v, c, yk, ixk,
+                                                statics=st))(
+                    csr_p.vals, csr_p.cols, yp, idx, statics)
 
     # --- phase 3: cooperative averaging -----------------------------------
     return PScopeState(w=_average(u_final, participation), t=state.t + 1,
@@ -437,8 +509,16 @@ def _average(u_final: Array, participation: Optional[Array]) -> Array:
 
 def _objective_value_device(obj: Objective, reg: Regularizer, Xp, yp):
     """w -> P(w) over the full dataset as a pure device function."""
-    if isinstance(Xp, CSRMatrix):
+    if isinstance(Xp, (CSRMatrix, EncodedCSR)):
         h_loss = svrg.LINEAR_MODEL_H_LOSS[obj.name]
+        if isinstance(Xp, EncodedCSR):
+            # decode lazily inside the jit'd evaluation — only recorded
+            # rounds pay it, and XLA fuses the bitcast into the margins
+            k = Xp.vals16.shape[-1]
+            enc, yflat = Xp, yp.reshape(-1)
+            return lambda w: svrg.sparse_linear_model_loss(
+                h_loss, w, enc.decode_vals().reshape(-1, k),
+                enc.decode_cols().reshape(-1, k), yflat) + reg.value(w)
         k = Xp.vals.shape[-1]
         vals = Xp.vals.reshape(-1, k)
         cols = Xp.cols.reshape(-1, k)
@@ -494,9 +574,9 @@ def _prepare_sim(obj: Objective, reg: Regularizer, Xp, yp,
         _require_lazy_support(obj, cfg)
         Xp, yp = _as_csr_shards(Xp, yp)
         statics = _sim_statics(Xp, cfg)
-    elif isinstance(Xp, CSRMatrix):
-        raise ValueError("dense inner_path cannot consume CSRMatrix data; "
-                         "set PScopeConfig(inner_path='lazy')")
+    elif isinstance(Xp, (CSRMatrix, EncodedCSR)):
+        raise ValueError("dense inner_path cannot consume CSRMatrix/"
+                         "EncodedCSR data; set PScopeConfig(inner_path='lazy')")
     return cfg, Xp, yp, statics
 
 
@@ -594,7 +674,7 @@ def run_scanned(obj: Objective, reg: Regularizer, Xp, yp: Array, w0: Array,
     entries, index 0 being the initial (round start_round) iterate.
     """
     cfg, Xp, yp, statics = _prepare_sim(obj, reg, Xp, yp, cfg)
-    p = (Xp.vals.shape[0] if isinstance(Xp, CSRMatrix) else Xp.shape[0])
+    p = yp.shape[0]
     parts = _stack_participation(participation_schedule, cfg.outer_steps, p)
     compiled = _sim_trajectory_fn(obj, reg, cfg, record_every)
     w0d = jnp.array(w0, dtype=jnp.float32, copy=True)
@@ -735,11 +815,31 @@ def make_distributed_outer_step_core(obj: Objective, reg: Regularizer,
         # phase 3: one all-reduce to average iterates
         return jax.lax.pmean(u, axis)
 
-    def make_shard_body(with_statics: bool):
-        n_data = 3 if lazy else 2
+    def body_enc(w_t, key, vals16, y, colb, dcols, nnz):
+        # encoded-shard variant: the registered device operands are the
+        # codec leaves (uint16 bf16 bits, delta columns) — about half
+        # the raw CSR bytes — and the decode is fused into each phase
+        # (cumsum+bitcast into the anchor scatter-add, bit-gather into
+        # the epoch kernels) instead of materializing a decoded copy.
+        d = w_t.shape[0]
+        enc = EncodedCSR(vals16=vals16, colb=colb, dcols=dcols,
+                         row_nnz=nnz, d=d)
+        z_local = svrg.sparse_linear_model_full_gradient(
+            h_prime, w_t, enc.decode_vals(), enc.decode_cols(), y, d)
+        z = jax.lax.pmean(z_local, axis)
+        widx = jax.lax.axis_index(axis)
+        k_local = jnp.take(jax.random.split(key, p), widx, axis=0)
+        idx = svrg.sample_microbatches(k_local, y.shape[0],
+                                       cfg.inner_steps, cfg.inner_batch)
+        u = _lazy_inner_loop_enc(h_prime, reg, cfg.eta, w_t, w_t, z,
+                                 vals16, colb, dcols, nnz, y, idx)
+        return jax.lax.pmean(u, axis)
+
+    def make_shard_body(with_statics: bool, encoded: bool = False):
+        n_data = 5 if encoded else (3 if lazy else 2)
         extra = ((P(axis),) if with_statics else ())
         in_specs = (P(), P()) + (P(axis),) * n_data + extra
-        fn = body
+        fn = body_enc if encoded else body
         if with_statics:
             fn = lambda w, key, vals, y, cols, st: body(w, key, vals, y,
                                                         cols, statics=st)
@@ -752,10 +852,16 @@ def make_distributed_outer_step_core(obj: Objective, reg: Regularizer,
         )
 
     if lazy:
-        def outer_step(state: PScopeState, csr: CSRMatrix, y: Array,
+        def outer_step(state: PScopeState, csr, y: Array,
                        statics=None) -> PScopeState:
             key, sub = jax.random.split(state.key)
-            if statics is None:
+            if isinstance(csr, EncodedCSR):
+                # statics are rebuilt inside the epoch on this path (a
+                # data-only precompute; identical plans either way)
+                w_next = make_shard_body(False, encoded=True)(
+                    state.w, sub, csr.vals16, y, csr.colb, csr.dcols,
+                    csr.row_nnz)
+            elif statics is None:
                 w_next = make_shard_body(False)(state.w, sub, csr.vals, y,
                                                 csr.cols)
             else:
@@ -775,6 +881,14 @@ def make_distributed_outer_step_core(obj: Objective, reg: Regularizer,
 def _prepare_distributed(obj: Objective, reg: Regularizer, X, y,
                          cfg: PScopeConfig, mesh, axis: str):
     cfg = _resolve_inner_path(obj, cfg, X)
+    if isinstance(X, EncodedCSR):
+        # encoded shards skip the sharded statics precompute (they are
+        # rebuilt from the decoded shard inside each epoch — identical
+        # plans) so the registered operands stay compressed
+        if cfg.inner_path != "lazy":
+            raise ValueError("EncodedCSR data requires inner_path "
+                             f"'lazy'/'auto', got {cfg.inner_path!r}")
+        return cfg, X, None
     if cfg.inner_path == "lazy" and not isinstance(X, CSRMatrix):
         X = dense_to_csr(X)
     statics = None

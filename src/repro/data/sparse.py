@@ -80,6 +80,107 @@ class CSRMatrix:
         return jnp.take(self.vals, idx, axis=0), jnp.take(self.cols, idx, axis=0)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class EncodedCSR:
+    """Storage-encoded padded CSR: bf16 value bits + delta columns.
+
+    The device twin of a `codec="delta+bf16"` shard store (see
+    `repro.datasets.codec`): values are carried as bf16 bit patterns
+    and columns as a per-row base plus deltas, so the arrays a solve
+    holds (and a kernel reads from HBM) are ~half the raw CSR bytes.
+    Decode is exact and cheap — a u16 -> f32 bitcast for values (the
+    epoch kernels fuse it into the gather) and a masked cumsum for
+    columns (done once per epoch on the gathered working set):
+
+        vals16   (..., max_nnz) uint16   bf16 bits; padding 0x0000,
+                                         which bitcasts to exactly 0.0f
+        colb     (...,)         int32    absolute first column per row
+        dcols    (..., max_nnz) int16/int32  deltas; dcols[..., 0] == 0
+        row_nnz  (...,)         int32    true nonzeros per row
+
+    `cols[j] = colb + sum(dcols[:j+1])` for j < row_nnz, else 0 — the
+    identical padding convention as `CSRMatrix` (padding points at
+    column 0 with value 0).  Same leading-dimension freedom as
+    `CSRMatrix`: (n, k) flat or (p, n_k, k) worker-major.
+    """
+
+    vals16: Array    # (..., max_nnz) uint16
+    colb: Array      # (...,)         int32
+    dcols: Array     # (..., max_nnz) int16 or int32
+    row_nnz: Array   # (...,)         int32
+    d: int
+
+    def tree_flatten(self):
+        return (self.vals16, self.colb, self.dcols, self.row_nnz), self.d
+
+    @classmethod
+    def tree_unflatten(cls, d, children):
+        vals16, colb, dcols, row_nnz = children
+        return cls(vals16=vals16, colb=colb, dcols=dcols, row_nnz=row_nnz,
+                   d=d)
+
+    @property
+    def max_nnz(self) -> int:
+        return int(self.vals16.shape[-1])
+
+    @property
+    def n(self) -> int:
+        return int(np.prod(self.vals16.shape[:-1]))
+
+    def decode_cols(self) -> Array:
+        """Exact padded int32 columns (padding decodes to column 0)."""
+        c = self.colb[..., None] + jnp.cumsum(
+            self.dcols.astype(jnp.int32), axis=-1)
+        mask = jnp.arange(self.max_nnz) < self.row_nnz[..., None]
+        return jnp.where(mask, c, 0)
+
+    def decode_vals(self) -> Array:
+        """Exact fp32 values via the u16 -> u32<<16 bitcast; padding
+        bits are 0x0000 so no mask is needed."""
+        return bf16_bits_to_f32(self.vals16)
+
+    def decode(self) -> CSRMatrix:
+        return CSRMatrix(vals=self.decode_vals(), cols=self.decode_cols(),
+                         row_nnz=self.row_nnz, d=self.d)
+
+
+def bf16_bits_to_f32(bits: Array) -> Array:
+    """uint16 bf16 bit patterns -> exact float32 (device-side)."""
+    return jax.lax.bitcast_convert_type(
+        jnp.asarray(bits).astype(jnp.uint32) << 16, jnp.float32)
+
+
+def encode_csr(csr: CSRMatrix, delta16: Optional[bool] = None) -> EncodedCSR:
+    """Host-side CSRMatrix -> EncodedCSR (bf16 values are rounded; the
+    column transform is exact).  `delta16=None` auto-narrows `dcols` to
+    int16 when every delta fits."""
+    from repro.datasets import codec as _codec
+    cols = np.asarray(csr.cols, np.int64)
+    nnz = np.asarray(csr.row_nnz, np.int32)
+    lead = cols.shape[:-1]
+    K = cols.shape[-1]
+    flat_cols = cols.reshape(-1, K)
+    flat_nnz = nnz.reshape(-1)
+    mask = np.arange(K)[None, :] < flat_nnz[:, None]
+    dmat = flat_cols.copy()
+    dmat[:, 1:] -= flat_cols[:, :-1]
+    colb = np.where(flat_nnz > 0, flat_cols[:, 0], 0).astype(np.int32)
+    dmat[:, 0] = 0
+    dmat[~mask] = 0
+    if delta16 is None:
+        delta16 = bool(np.abs(dmat).max(initial=0)
+                       <= np.iinfo(np.int16).max)
+    dcols = dmat.astype(np.int16 if delta16 else np.int32)
+    vals16 = _codec.bf16_encode(np.asarray(csr.vals, np.float32))
+    vals16 = np.where(np.arange(K) < nnz[..., None], vals16,
+                      np.uint16(0))
+    return EncodedCSR(vals16=jnp.asarray(vals16.astype(np.uint16)),
+                      colb=jnp.asarray(colb.reshape(lead)),
+                      dcols=jnp.asarray(dcols.reshape(lead + (K,))),
+                      row_nnz=jnp.asarray(nnz), d=csr.d)
+
+
 # ---------------------------------------------------------------------------
 # converters
 # ---------------------------------------------------------------------------

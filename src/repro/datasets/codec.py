@@ -1,0 +1,262 @@
+"""Segment codecs for the shard store: delta/narrow-int columns + bf16
+values, block-structured so decode streams with bounded memory.
+
+The solve hot path is bytes-from-storage bound after the fused epoch
+kernel (see docs/kernels.md): each inner epoch reads the shard's
+vals/cols once, so shrinking the stored bytes is the same lever as
+shrinking all-reduced bytes on the wire.  rcv1-class LIBSVM data is
+~3x compressible with two elementary transforms:
+
+  * **cols -> delta + narrow int.**  Real entries only (padding is
+    dropped; it is reconstructed from `row_nnz`), each row stored as
+    its absolute first column followed by successive deltas.  Sorted
+    column ids (the LIBSVM norm) make deltas small; each block is
+    written in the narrowest of two widths — fixed int16 when every
+    value fits, else zigzag-LEB128 varints (handles unsorted and
+    duplicate ids, whose deltas can be negative or zero).
+  * **vals -> bf16.**  Round-to-nearest-even truncation to the high 16
+    bits of the fp32 pattern, real entries only.  Exact whenever the
+    source values carry <= 8 mantissa bits (registry fixtures are
+    generated bf16-quantized, so the codec is lossless there — the
+    manifest records `vals_lossless` from an actual round-trip check).
+
+Both packed segments share one block structure: a worker's extent is a
+contiguous byte range (multi-host `local_slice` maps only owned
+extents, same as the raw layout) split into blocks of `block_rows`
+rows.  The per-block `[rel_off, nbytes, rows(, width)]` tables live in
+`manifest["codec"]`, so decode is random-access at block granularity
+and never needs more than one block plus the output in memory.
+
+Everything here is host-side numpy; the device-side half of the story
+(`EncodedCSR`, bf16 bitcast inside the epoch gather) lives in
+`repro.data.sparse` and `repro.kernels`.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+import ml_dtypes
+
+CODEC_DELTA_BF16 = "delta+bf16"
+CODECS = (CODEC_DELTA_BF16,)
+
+# block width tags for the cols.delta segment
+WIDTH_VARINT = 0      # zigzag LEB128
+WIDTH_I16 = 2         # fixed little-endian int16
+
+
+# ---------------------------------------------------------------------------
+# bf16 (value codec)
+# ---------------------------------------------------------------------------
+
+def bf16_encode(x: np.ndarray) -> np.ndarray:
+    """fp32 -> bf16 bit pattern (uint16), round-to-nearest-even."""
+    return np.asarray(x, np.float32).astype(ml_dtypes.bfloat16).view(
+        np.uint16)
+
+
+def bf16_decode(u: np.ndarray) -> np.ndarray:
+    """bf16 bit pattern (uint16) -> exact fp32 (low mantissa zeros)."""
+    return (np.asarray(u, np.uint16).astype(np.uint32) << 16).view(
+        np.float32)
+
+
+def bf16_lossless(x: np.ndarray) -> bool:
+    """True iff encode->decode reproduces `x` bitwise."""
+    x = np.asarray(x, np.float32)
+    return bool(np.array_equal(bf16_decode(bf16_encode(x)).view(np.uint32),
+                               x.view(np.uint32)))
+
+
+# ---------------------------------------------------------------------------
+# zigzag varints (LEB128), vectorized both ways
+# ---------------------------------------------------------------------------
+
+def zigzag_encode(v: np.ndarray) -> np.ndarray:
+    v = np.asarray(v, np.int64)
+    return ((v << 1) ^ (v >> 63)).view(np.uint64)
+
+
+def zigzag_decode(u: np.ndarray) -> np.ndarray:
+    u = np.asarray(u, np.uint64)
+    return ((u >> np.uint64(1)).astype(np.int64)
+            ^ -((u & np.uint64(1)).astype(np.int64)))
+
+
+def varint_encode(u: np.ndarray) -> np.ndarray:
+    """uint64 values -> concatenated LEB128 bytes (7 payload bits per
+    byte, high bit = continuation)."""
+    u = np.asarray(u, np.uint64)
+    if u.size == 0:
+        return np.zeros(0, np.uint8)
+    nb = np.ones(u.shape, np.int64)
+    for k in range(1, 10):
+        nb += (u >= (np.uint64(1) << np.uint64(7 * k))).astype(np.int64)
+    width = int(nb.max())
+    shifts = (np.uint64(7) * np.arange(width, dtype=np.uint64))[None, :]
+    mat = ((u[:, None] >> shifts) & np.uint64(0x7F)).astype(np.uint8)
+    j = np.arange(width)[None, :]
+    mat |= np.where(j < nb[:, None] - 1, np.uint8(0x80), np.uint8(0))
+    return mat[j < nb[:, None]]        # row-major: per-value byte order kept
+
+
+def varint_decode(buf: np.ndarray, count: int) -> np.ndarray:
+    """LEB128 bytes -> `count` uint64 values (vectorized: one scatter-add
+    over (group, 7*position) instead of a byte loop)."""
+    b = np.asarray(buf, np.uint8)
+    if count == 0:
+        if b.size:
+            raise ValueError("varint stream has bytes but count=0")
+        return np.zeros(0, np.uint64)
+    term = (b & 0x80) == 0
+    if int(term.sum()) != count:
+        raise ValueError(f"varint stream has {int(term.sum())} terminators, "
+                         f"expected {count} values")
+    gid = np.zeros(b.size, np.int64)
+    gid[1:] = np.cumsum(term[:-1])
+    starts = np.zeros(count, np.int64)
+    starts[1:] = np.flatnonzero(term)[:-1] + 1
+    pos = (np.arange(b.size) - starts[gid]).astype(np.uint64)
+    out = np.zeros(count, np.uint64)
+    np.add.at(out, gid, (b & np.uint8(0x7F)).astype(np.uint64)
+              << (np.uint64(7) * pos))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# block codecs (one block = `rows` consecutive rows of one worker)
+# ---------------------------------------------------------------------------
+
+def _entry_mask(nnz: np.ndarray, K: int) -> np.ndarray:
+    return np.arange(K)[None, :] < np.asarray(nnz)[:, None]
+
+
+def encode_cols_block(cols: np.ndarray, nnz: np.ndarray
+                      ) -> Tuple[bytes, int]:
+    """(rows, K) padded int32 columns -> (payload, width_tag).
+
+    Stream = per row: absolute first column, then deltas — real entries
+    only, row-major.  Width is chosen per block: fixed int16 iff every
+    streamed value fits, else zigzag varints.
+    """
+    cols = np.asarray(cols, np.int64)
+    nnz = np.asarray(nnz, np.int64)
+    dmat = cols.copy()
+    dmat[:, 1:] -= cols[:, :-1]
+    stream = dmat[_entry_mask(nnz, cols.shape[1])]
+    if stream.size == 0:
+        return b"", WIDTH_I16
+    if stream.min() >= np.iinfo(np.int16).min and \
+            stream.max() <= np.iinfo(np.int16).max:
+        return stream.astype("<i2").tobytes(), WIDTH_I16
+    return varint_encode(zigzag_encode(stream)).tobytes(), WIDTH_VARINT
+
+
+def decode_cols_block(payload: np.ndarray, nnz: np.ndarray, K: int,
+                      width: int) -> Tuple[np.ndarray, np.ndarray]:
+    """payload bytes -> (colb (rows,) int32, dcols (rows, K) int32).
+
+    `colb` is each row's absolute first column (0 for empty rows);
+    `dcols[:, 0] == 0` and `dcols[:, j]` is the j-th delta, zero-padded
+    — so `colb[:, None] + cumsum(dcols)` masked by `row_nnz` is the
+    exact padded cols array (padding decodes to column 0, the store
+    convention).
+    """
+    nnz = np.asarray(nnz, np.int64)
+    count = int(nnz.sum())
+    buf = np.frombuffer(payload, np.uint8) if isinstance(
+        payload, (bytes, bytearray)) else np.asarray(payload, np.uint8)
+    if width == WIDTH_I16:
+        stream = np.frombuffer(buf.tobytes(), "<i2").astype(np.int64)
+        if stream.size != count:
+            raise ValueError(f"i16 cols block has {stream.size} entries, "
+                             f"expected {count}")
+    elif width == WIDTH_VARINT:
+        stream = zigzag_decode(varint_decode(buf, count))
+    else:
+        raise ValueError(f"unknown cols block width tag {width}")
+    mask = _entry_mask(nnz, K)
+    tmp = np.zeros((len(nnz), K), np.int64)
+    tmp[mask] = stream
+    colb = tmp[:, 0].astype(np.int32)
+    dcols = tmp.astype(np.int32)
+    dcols[:, 0] = 0
+    return colb, dcols
+
+
+def encode_vals_block(vals: np.ndarray, nnz: np.ndarray) -> bytes:
+    """(rows, K) padded float32 -> packed bf16 of real entries."""
+    vals = np.asarray(vals, np.float32)
+    stream = vals[_entry_mask(nnz, vals.shape[1])]
+    return bf16_encode(stream).astype("<u2").tobytes()
+
+
+def decode_vals_block(payload: np.ndarray, nnz: np.ndarray, K: int
+                      ) -> np.ndarray:
+    """packed bf16 bytes -> padded (rows, K) uint16 bit patterns
+    (padding = 0x0000, which bitcasts to exactly 0.0f — no mask needed
+    downstream)."""
+    nnz = np.asarray(nnz, np.int64)
+    buf = np.frombuffer(payload, np.uint8) if isinstance(
+        payload, (bytes, bytearray)) else np.asarray(payload, np.uint8)
+    stream = np.frombuffer(buf.tobytes(), "<u2")
+    count = int(nnz.sum())
+    if stream.size != count:
+        raise ValueError(f"bf16 vals block has {stream.size} entries, "
+                         f"expected {count}")
+    out = np.zeros((len(nnz), K), np.uint16)
+    out[_entry_mask(nnz, K)] = stream
+    return out
+
+
+def cols_delta_fits_i16(colb_or_dcols_max: int) -> bool:
+    return abs(int(colb_or_dcols_max)) <= np.iinfo(np.int16).max
+
+
+# ---------------------------------------------------------------------------
+# whole-worker encoders (streamed in `block_rows` blocks by the builder)
+# ---------------------------------------------------------------------------
+
+def encode_worker(cols: np.ndarray, vals: np.ndarray, nnz: np.ndarray,
+                  block_rows: int):
+    """Generator over one worker's blocks.
+
+    Yields (cols_payload, width, vals_payload, rows, max_abs_delta,
+    vals_lossless) per block; the builder appends payloads to the
+    packed segment files and accumulates the block tables.  Peak memory
+    is one (block_rows, K) slab — the same bound as pass 2 of ingest.
+    """
+    n_k = len(nnz)
+    for r0 in range(0, n_k, block_rows):
+        r1 = min(r0 + block_rows, n_k)
+        cb = np.asarray(cols[r0:r1], np.int64)
+        vb = np.asarray(vals[r0:r1], np.float32)
+        nb = np.asarray(nnz[r0:r1], np.int64)
+        cpay, width = encode_cols_block(cb, nb)
+        vpay = encode_vals_block(vb, nb)
+        mask = _entry_mask(nb, cb.shape[1])
+        dmat = cb.copy()
+        dmat[:, 1:] -= cb[:, :-1]
+        dmat[:, 0] = 0                       # first col is colb, not a delta
+        mad = int(np.abs(dmat[mask]).max()) if mask.any() else 0
+        lossless = bf16_lossless(vb[mask]) if mask.any() else True
+        yield cpay, width, vpay, r1 - r0, mad, lossless
+
+
+# ---------------------------------------------------------------------------
+# narrow-int codecs for the fixed-stride side segments
+# ---------------------------------------------------------------------------
+
+def narrow_nnz_dtype(max_nnz: int) -> np.dtype:
+    if max_nnz <= np.iinfo(np.uint8).max:
+        return np.dtype(np.uint8)
+    if max_nnz <= np.iinfo(np.uint16).max:
+        return np.dtype(np.uint16)
+    return np.dtype(np.int32)
+
+
+def narrow_members_dtype(max_member: int) -> np.dtype:
+    if max_member <= np.iinfo(np.int32).max:
+        return np.dtype(np.int32)
+    return np.dtype(np.int64)

@@ -17,10 +17,13 @@ Python.  Each chunk of bytes is parsed in whole-array numpy passes:
      from the per-line token counts (cumsum arithmetic);
   3. drop comment tokens (everything from a ``#``-initial token to the
      end of its line) and re-derive per-line counts;
-  4. gather all surviving token bytes into one fixed-width ``(T, m)``
-     uint8 matrix, view it as an ``S{m}`` string array, and convert to
-     float64 with a single C-level ``astype`` — position-in-line parity
-     then says which numbers are labels, indices, and values.
+  4. convert each token CLASS separately (position-in-line parity says
+     which tokens are labels, indices, and values): feature indices —
+     half of all tokens — are pure decimal integers and parse with
+     whole-array digit arithmetic (no per-token strtod at all), while
+     labels and values gather into a class-local fixed-width ``(T, m)``
+     uint8 matrix, viewed as ``S{m}`` strings and converted to float64
+     with a single C-level ``astype``.
 
 Rows with no features (a bare label), duplicate or unsorted indices,
 ``\r\n`` endings, and trailing whitespace all parse correctly;
@@ -182,26 +185,26 @@ def parse_libsvm_bytes(data: bytes, one_based: bool = True) -> ParsedChunk:
             f"malformed LIBSVM line {int(bad)}: dangling feature index "
             "(expected <label> <index>:<value> ... pairs)")
 
-    # ---- one C-level text->float conversion for every token -------------
-    # (T, m) uint8 token matrix via an int32 gather: the parse working
-    # set is ~m * 5 bytes per token — proportional to chunk_bytes,
-    # independent of file size
+    # ---- two-pass conversion: separator positions above named every
+    # token; now each token CLASS converts with the cheapest machinery
+    # that is exact for it.  Feature indices (every odd position — half
+    # of all tokens) are plain decimal integers, so they parse with
+    # whole-array digit arithmetic instead of a per-token C strtod;
+    # labels and values keep the strtod path (bitwise float round-trips)
+    # over a class-local fixed-width matrix, whose width is no longer
+    # inflated by the widest token of the OTHER classes.
     widths = (ends - starts).astype(np.int32)
-    m = int(widths.max())
-    gather = starts.astype(np.int32)[:, None] + np.arange(m, dtype=np.int32)
-    valid = np.arange(m, dtype=np.int32)[None, :] < widths[:, None]
-    mat = np.where(valid, a[np.minimum(gather, a.size - 1)], 0)
-    tokens = np.ascontiguousarray(mat.astype(np.uint8)).view(f"S{m}").ravel()
-    try:
-        nums = tokens.astype(np.float64)
-    except ValueError:
-        bad = tokens[_first_bad_token(tokens)]
-        raise ValueError(f"unparseable LIBSVM token {bad!r}") from None
-
-    labels = nums[pos_in_line == 0].astype(np.float32)
     idx_mask = (pos_in_line % 2) == 1                     # 1st, 3rd, ... feat
-    cols = nums[idx_mask].astype(np.int64)
-    vals = nums[~idx_mask & (pos_in_line > 0)].astype(np.float32)
+    lab_mask = pos_in_line == 0
+
+    cols = _parse_uint_tokens(a, starts[idx_mask], widths[idx_mask])
+    if cols is None:                   # non-decimal index token (e.g. 1e3):
+        cols = _tokens_to_f64(          # fall back to the strtod grammar
+            a, starts[idx_mask], widths[idx_mask]).astype(np.int64)
+    flt = _tokens_to_f64(a, starts[~idx_mask], widths[~idx_mask])
+    sub_lab = lab_mask[~idx_mask]
+    labels = flt[sub_lab].astype(np.float32)
+    vals = flt[~sub_lab].astype(np.float32)
     if one_based:
         if cols.size and cols.min() < 1:
             raise ValueError(
@@ -214,6 +217,52 @@ def parse_libsvm_bytes(data: bytes, one_based: bool = True) -> ParsedChunk:
     indptr = np.zeros(n_rows + 1, np.int64)
     indptr[1:] = np.cumsum(feat_counts // 2)
     return ParsedChunk(labels=labels, indptr=indptr, cols=cols, vals=vals)
+
+
+def _parse_uint_tokens(a: np.ndarray, starts: np.ndarray,
+                       widths: np.ndarray) -> Optional[np.ndarray]:
+    """Vectorized base-10 parse of pure-digit tokens -> int64.
+
+    Returns None when any token contains a non-digit byte or is too
+    wide for exact int64 place values — the caller falls back to the
+    strtod grammar for the whole class (correctness over speed for
+    pathological inputs; real LIBSVM indices never take the fallback).
+    """
+    if starts.size == 0:
+        return np.zeros(0, np.int64)
+    m = int(widths.max())
+    if m > 18:                         # 10^18 < 2^63: place values exact
+        return None
+    gather = starts.astype(np.int32)[:, None] + np.arange(m, dtype=np.int32)
+    digits = a[np.minimum(gather, a.size - 1)].astype(np.int16) - 48
+    place = widths[:, None] - 1 - np.arange(m, dtype=np.int32)[None, :]
+    valid = place >= 0
+    if np.any(valid & ((digits < 0) | (digits > 9))):
+        return None
+    pw = np.power(10, np.maximum(place, 0), dtype=np.int64)
+    return np.sum(np.where(valid, digits, 0).astype(np.int64) * pw, axis=1)
+
+
+def _tokens_to_f64(a: np.ndarray, starts: np.ndarray,
+                   widths: np.ndarray) -> np.ndarray:
+    """(T,) float64 from token byte ranges — one C-level strtod pass.
+
+    (T, m) uint8 token matrix via an int32 gather: the parse working
+    set is ~m * 5 bytes per token — proportional to chunk_bytes,
+    independent of file size.
+    """
+    if starts.size == 0:
+        return np.zeros(0, np.float64)
+    m = int(widths.max())
+    gather = starts.astype(np.int32)[:, None] + np.arange(m, dtype=np.int32)
+    valid = np.arange(m, dtype=np.int32)[None, :] < widths[:, None]
+    mat = np.where(valid, a[np.minimum(gather, a.size - 1)], 0)
+    tokens = np.ascontiguousarray(mat.astype(np.uint8)).view(f"S{m}").ravel()
+    try:
+        return tokens.astype(np.float64)
+    except ValueError:
+        bad = tokens[_first_bad_token(tokens)]
+        raise ValueError(f"unparseable LIBSVM token {bad!r}") from None
 
 
 def _first_bad_token(tokens: np.ndarray) -> int:

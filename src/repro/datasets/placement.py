@@ -84,11 +84,10 @@ class GammaPlacement:
                                            slack=slack, track_members=False)
 
     def assign_chunk(self, chunk: ParsedChunk) -> np.ndarray:
-        out = np.empty(chunk.n, np.int64)
-        for i in range(chunk.n):             # inherently sequential policy
-            vals, cols = chunk.row(i)
-            out[i] = self._assigner.assign(vals, cols)
-        return out
+        # sequential accepts, but batched setup + vectorized candidate
+        # scoring — see StreamingAssigner.assign_many
+        return self._assigner.assign_many(chunk.vals, chunk.cols,
+                                          chunk.indptr)
 
     def gamma(self) -> float:
         return self._assigner.gamma()

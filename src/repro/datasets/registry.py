@@ -99,21 +99,57 @@ def data_root(root: Optional[Union[str, Path]] = None) -> Path:
     return Path.home() / ".cache" / "repro-datasets"
 
 
+def _fixture_layout(csr, y, d: int, seed: int):
+    """Post-process generator output into the v2 fixture layout.
+
+    The raw generators emit constant per-row nnz with unsorted columns
+    and full-f32 values — none of which real LIBSVM corpora look like,
+    and all of which flatter the raw padded layout (zero padding slack)
+    while starving the codec (wide deltas, lossy bf16).  v2 makes the
+    fixture storage-realistic: per-row nnz drawn uniformly from
+    [1, max_nnz], columns sorted ascending within each row, and values
+    (plus regression labels) rounded to bf16 so `codec=delta+bf16` is
+    exactly lossless on every fixture.
+    """
+    from repro.datasets.codec import bf16_decode, bf16_encode
+    vals = np.asarray(csr.vals)
+    cols = np.asarray(csr.cols)
+    n, k = vals.shape
+    rng = np.random.RandomState((seed + 0x9E3779B9) & 0x7FFFFFFF)
+    nnz = rng.randint(1, k + 1, size=n).astype(np.int32)
+    mask = np.arange(k, dtype=np.int32)[None, :] < nnz[:, None]
+    order = np.argsort(np.where(mask, cols, d), axis=1, kind="stable")
+    vals = np.take_along_axis(vals, order, axis=1)
+    cols = np.take_along_axis(cols, order, axis=1)
+    vals = bf16_decode(bf16_encode(np.where(mask, vals, np.float32(0.0))))
+    cols = np.where(mask, cols, np.int32(0))
+    y = bf16_decode(bf16_encode(np.asarray(y, np.float32)))
+    import jax.numpy as jnp
+    csr2 = sparse_data.CSRMatrix(vals=jnp.asarray(vals),
+                                 cols=jnp.asarray(cols),
+                                 row_nnz=jnp.asarray(nnz), d=d)
+    return csr2, y
+
+
 def reference_arrays(name: str, scale: float = 1.0, seed: int = 0):
     """The fixture's source arrays, regenerated in memory:
     (CSRMatrix, y, w_true) — bitwise identical to what the fixture text
-    encodes (write_libsvm's %.9g round-trips float32 exactly)."""
+    encodes (write_libsvm's %.9g round-trips float32 exactly, and the
+    v2 layout's bf16 rounding happens BEFORE the text is written)."""
     prof = get(name)
     gen = (sparse_data.make_csr_regression if prof.task == "regression"
            else sparse_data.make_csr_classification)
-    return gen(prof.rows_at(scale), prof.d, prof.density, seed=seed)
+    csr, y, w_true = gen(prof.rows_at(scale), prof.d, prof.density,
+                         seed=seed)
+    csr, y = _fixture_layout(csr, y, prof.d, seed)
+    return csr, y, w_true
 
 
 def fixture_path(name: str, scale: float = 1.0, seed: int = 0,
                  root: Optional[Union[str, Path]] = None) -> Path:
     prof = get(name)
     return (data_root(root) / "fixtures"
-            / f"{prof.name}.s{scale:g}.seed{seed}.libsvm")
+            / f"{prof.name}.s{scale:g}.seed{seed}.v2.libsvm")
 
 
 def ensure_fixture(name: str, scale: float = 1.0, seed: int = 0,
@@ -157,6 +193,7 @@ class LoadedDataset:
 
 def load(name: str, *, p: int = 8, scale: float = 1.0, seed: int = 0,
          placement: str = "sequential", hash_dim_log2: Optional[int] = None,
+         codec: Optional[str] = None,
          root: Optional[Union[str, Path]] = None,
          chunk_bytes: int = 1 << 20, overwrite: bool = False,
          obj=None, reg=None, **placement_kw) -> LoadedDataset:
@@ -164,6 +201,14 @@ def load(name: str, *, p: int = 8, scale: float = 1.0, seed: int = 0,
 
     The whole path is cached: a second `load` with the same arguments
     opens the committed store without touching the fixture text.
+
+    `codec` selects the segment codec the store is written with (e.g.
+    ``"delta+bf16"``, see datasets/codec); it is deliberately NOT part
+    of the cache tag — the codec changes the store's byte layout, not
+    the dataset, so re-loading a cached store with a different codec
+    raises the cached-manifest mismatch error instead of silently
+    shadowing one encoding with another.  Pass ``overwrite=True`` to
+    re-ingest with the new codec.
     """
     prof = get(name)
     fixture = ensure_fixture(name, scale, seed, root)
@@ -173,7 +218,7 @@ def load(name: str, *, p: int = 8, scale: float = 1.0, seed: int = 0,
     out_dir = data_root(root) / "shards" / f"{fixture.stem}.{tag}"
     store = ingest_libsvm(
         fixture, out_dir, p, placement=placement, n_features=prof.d,
-        hash_dim_log2=hash_dim_log2, zero_based=False,
+        hash_dim_log2=hash_dim_log2, zero_based=False, codec=codec,
         chunk_bytes=chunk_bytes, seed=seed, obj=obj, reg=reg,
         overwrite=overwrite, **placement_kw)
     return LoadedDataset(profile=prof, store=store, fixture=fixture)

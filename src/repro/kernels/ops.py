@@ -158,7 +158,12 @@ def fused_lazy_epoch(u0: jax.Array, z: jax.Array, plan, gathers, *, h_prime,
                  + jax.lax.broadcasted_iota(jnp.int32, (M, b, kp), 1) * kp)
     pad_mask = jax.lax.broadcasted_iota(jnp.int32, (M, b, kp), 2) >= k
     rep_p = jnp.where(pad_mask, slot_iota, rep_padded).reshape(M, Sp)
-    vb_p = pad_slots(gathers.vb.reshape(M, S), 0.0, jnp.float32)
+    # encoded shards deliver vb as uint16 bf16 bits (plan.EpochGathers);
+    # pad in the native dtype and let the kernel bitcast in VMEM —
+    # padding bits 0x0000 decode to exactly 0.0f, same as f32 padding
+    vals_bf16 = gathers.vb.dtype == jnp.uint16
+    vb_p = pad_slots(gathers.vb.reshape(M, S), 0,
+                     jnp.uint16 if vals_bf16 else jnp.float32)
     zg_p = pad_slots(gathers.zg, 0.0, jnp.float32)
     u0_t = _tiles_with_spare(u0, d, jnp.float32)
     z_t = _tiles_with_spare(z, d, jnp.float32)
@@ -168,7 +173,7 @@ def fused_lazy_epoch(u0: jax.Array, z: jax.Array, plan, gathers, *, h_prime,
         gathers.yb.reshape(M, b).astype(jnp.float32), zg_p,
         gathers.sw.reshape(M, b).astype(jnp.float32), h_prime=h_prime,
         eta=eta, eta_eff=eta_eff, lam1=lam1, lam2=lam2, b=b,
-        interpret=_interpret())
+        vals_bf16=vals_bf16, interpret=_interpret())
     return out.reshape(-1)[:d].astype(u0.dtype)
 
 

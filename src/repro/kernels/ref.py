@@ -36,7 +36,17 @@ def fused_lazy_epoch_ref(u0, z, plan, gathers, *, h_prime, eta, lam1, lam2,
     The catch-up replays the standard-prox iteration at the effective
     step size eta_eff = eta / (1 + eta*lam1) (see docs/kernels.md,
     "prox-convention bridge").
+
+    Encoded shards (`gathers.vb` as uint16 bf16 bits, see
+    plan.EpochGathers) are decoded here at operand-pack time: the
+    bits -> f32 bitcast is exact and XLA fuses it into the pack
+    concatenation, so the scan body is unchanged and bitwise identical
+    to the f32-input path on bf16-representable data.
     """
+    from repro.data.sparse import bf16_bits_to_f32
+    vb_all = gathers.vb
+    if vb_all.dtype == jnp.uint16:
+        vb_all = bf16_bits_to_f32(vb_all)
     eta_eff = eta / (1.0 + eta * lam1)
     b = inner_batch
     M, S = plan.cflat.shape
@@ -82,7 +92,7 @@ def fused_lazy_epoch_ref(u0, z, plan, gathers, *, h_prime, eta, lam1, lam2,
         # b = 1 fast path: duplicate groups resolved via the statically
         # dup-summed values, no scatter-add in the scan
         packed = pack([plan.cflat, plan.q],
-                      [gathers.vb.reshape(M, k), gathers.xd, gathers.zg,
+                      [vb_all.reshape(M, k), gathers.xd, gathers.zg,
                        gathers.sw.reshape(M, 1), gathers.yb.reshape(M, 1)])
 
         def step(u, x):
@@ -99,7 +109,7 @@ def fused_lazy_epoch_ref(u0, z, plan, gathers, *, h_prime, eta, lam1, lam2,
         # general path: per-slot gradient entries accumulated across
         # duplicates by a segment-sum keyed on the plan's representative
         packed = pack([plan.cflat, plan.q, plan.rep],
-                      [gathers.vb.reshape(M, S), gathers.zg,
+                      [vb_all.reshape(M, S), gathers.zg,
                        gathers.sw.reshape(M, b), gathers.yb.reshape(M, b)])
 
         def step(u, x):

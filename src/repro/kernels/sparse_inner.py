@@ -46,7 +46,7 @@ _LANES = 128
 
 def _epoch_kernel(u0_ref, z_ref, qf_ref, cf_ref, q_ref, rep_ref, vb_ref,
                   yb_ref, zg_ref, sw_ref, o_ref, *, h_prime, eta, eta_eff,
-                  lam1, lam2, b, kp, n_steps):
+                  lam1, lam2, b, kp, n_steps, vals_bf16):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -58,6 +58,13 @@ def _epoch_kernel(u0_ref, z_ref, qf_ref, cf_ref, q_ref, rep_ref, vb_ref,
     cf = cf_ref[0, :]
     rp = rep_ref[0, :]
     vbm = vb_ref[0, :]
+    if vals_bf16:
+        # encoded-shard path: the values streamed into VMEM are raw
+        # bf16 bit patterns (half the HBM bytes of f32); widen + shift
+        # + bitcast reconstructs the exact f32 the raw path reads
+        # (padding bits 0x0000 decode to exactly 0.0f)
+        vbm = jax.lax.bitcast_convert_type(
+            vbm.astype(jnp.uint32) << 16, jnp.float32)
     zgm = zg_ref[0, :]
     Sp = cf.shape[0]
 
@@ -85,26 +92,32 @@ def _epoch_kernel(u0_ref, z_ref, qf_ref, cf_ref, q_ref, rep_ref, vb_ref,
 
 @functools.partial(jax.jit, static_argnames=("h_prime", "eta", "eta_eff",
                                              "lam1", "lam2", "b",
-                                             "interpret"))
+                                             "vals_bf16", "interpret"))
 def fused_lazy_epoch_pallas(u0_t: jax.Array, z_t: jax.Array, qf_t: jax.Array,
                             cflat: jax.Array, q: jax.Array, rep: jax.Array,
                             vb: jax.Array, yb: jax.Array, zg: jax.Array,
                             sw: jax.Array, *, h_prime, eta: float,
                             eta_eff: float, lam1: float, lam2: float,
-                            b: int, interpret: bool = True) -> jax.Array:
+                            b: int, vals_bf16: bool = False,
+                            interpret: bool = True) -> jax.Array:
     """u0_t/z_t: (rows, 128) f32; qf_t: (rows, 128) i32; plan rows
-    (M, Sp) with Sp = b * kp a 128-multiple; yb/sw: (M, b)."""
+    (M, Sp) with Sp = b * kp a 128-multiple; yb/sw: (M, b).
+
+    `vals_bf16=True` streams `vb` as (M, Sp) uint16 bf16 bit patterns
+    and decodes them in VMEM (encoded shards, see datasets/codec) —
+    the per-step value traffic from HBM halves."""
     M, Sp = cflat.shape
     kp = Sp // b
     rows, lanes = u0_t.shape
     assert lanes == _LANES and rows % 8 == 0, (rows, lanes)
     assert Sp % _LANES == 0, Sp
+    assert (vb.dtype == jnp.uint16) == vals_bf16, (vb.dtype, vals_bf16)
     full = pl.BlockSpec((rows, _LANES), lambda i: (0, 0))
     row_s = pl.BlockSpec((1, Sp), lambda i: (i, 0))
     row_b = pl.BlockSpec((1, b), lambda i: (i, 0))
     kernel = functools.partial(_epoch_kernel, h_prime=h_prime, eta=eta,
                                eta_eff=eta_eff, lam1=lam1, lam2=lam2, b=b,
-                               kp=kp, n_steps=M)
+                               kp=kp, n_steps=M, vals_bf16=vals_bf16)
     return pl.pallas_call(
         kernel,
         grid=(M,),

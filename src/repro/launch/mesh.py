@@ -523,15 +523,36 @@ def run_mesh(obj, reg, data, y, w0, cfg, spec: Optional[MeshSpec] = None, *,
         store = payload
         sl = store.local_slice(owned)
         pos = {w: i for i, w in enumerate(sl.worker_ids)}
-        X = CSRMatrix(
-            vals=global_worker_array(mesh, axis,
-                                     {w: sl.vals[pos[w]] for w in owned}),
-            cols=global_worker_array(mesh, axis,
-                                     {w: sl.cols[pos[w]] for w in owned}),
-            row_nnz=global_worker_array(mesh, axis,
-                                        {w: sl.row_nnz[pos[w]]
-                                         for w in owned}),
-            d=d)
+        if store.codec is not None:
+            # codec store: register the ENCODED leaves (uint16 bf16
+            # bits, delta columns — about half the raw CSR bytes on
+            # device) and let the solve path fuse the decode into the
+            # epoch gather (pscope's EncodedCSR branch).  Each host
+            # still decodes only the byte extents of the workers it
+            # owns (`LocalShardSlice._packed_decoded`).
+            from repro.data.sparse import EncodedCSR
+            X = EncodedCSR(
+                vals16=global_worker_array(
+                    mesh, axis, {w: sl.vals16[pos[w]] for w in owned}),
+                colb=global_worker_array(
+                    mesh, axis, {w: sl.colb[pos[w]] for w in owned}),
+                dcols=global_worker_array(
+                    mesh, axis, {w: sl.dcols[pos[w]] for w in owned}),
+                row_nnz=global_worker_array(
+                    mesh, axis, {w: sl.row_nnz[pos[w]] for w in owned}),
+                d=d)
+        else:
+            X = CSRMatrix(
+                vals=global_worker_array(mesh, axis,
+                                         {w: sl.vals[pos[w]]
+                                          for w in owned}),
+                cols=global_worker_array(mesh, axis,
+                                         {w: sl.cols[pos[w]]
+                                          for w in owned}),
+                row_nnz=global_worker_array(mesh, axis,
+                                            {w: sl.row_nnz[pos[w]]
+                                             for w in owned}),
+                d=d)
         yg = global_worker_array(mesh, axis,
                                  {w: sl.yp[pos[w]] for w in owned})
     elif kind == "csr":

@@ -46,7 +46,7 @@ def _free_port() -> int:
 
 def _build_demo_store(workdir: Path, p: int, *, n: int = 256, d: int = 32,
                       density: float = 0.3, seed: int = 0,
-                      timeout: float = 120.0):
+                      codec: str | None = None, timeout: float = 120.0):
     """Rank 0 ingests the fixture; other ranks wait for the manifest."""
     import numpy as np
     import jax
@@ -64,7 +64,7 @@ def _build_demo_store(workdir: Path, p: int, *, n: int = 256, d: int = 32,
         svm = workdir / "demo.svm"
         write_libsvm(svm, np.asarray(csr.vals), np.asarray(csr.cols),
                      np.asarray(csr.row_nnz), np.asarray(y))
-        return ingest_libsvm(svm, shards, p=p, n_features=d)
+        return ingest_libsvm(svm, shards, p=p, n_features=d, codec=codec)
     deadline = time.monotonic() + timeout
     while not (shards / MANIFEST).exists():
         if time.monotonic() > deadline:
@@ -92,7 +92,7 @@ def _run_rank(args) -> int:
                        os.environ.get("REPRO_MULTIHOST_WORKDIR", "."))
         workdir.mkdir(parents=True, exist_ok=True)
         store = _build_demo_store(workdir, p=jax.device_count(),
-                                  seed=args.seed)
+                                  seed=args.seed, codec=args.codec)
     else:
         raise SystemExit("need --store DIR or --demo")
 
@@ -181,6 +181,8 @@ def _spawn(args) -> int:
         passthrough += ["--store", args.store]
     else:
         passthrough += ["--demo"]
+        if args.codec:
+            passthrough += ["--codec", args.codec]
     if args.verify:
         passthrough += ["--verify"]
     if args.out:
@@ -277,6 +279,11 @@ def main(argv=None) -> int:
                     help="rank 0 ingests a small synthetic fixture store")
     ap.add_argument("--workdir", default=None,
                     help="where --demo writes its fixture store")
+    ap.add_argument("--codec", default=None, metavar="NAME",
+                    help="(--demo) ingest the fixture store with this "
+                         "segment codec (e.g. delta+bf16); every rank "
+                         "then maps compressed extents and the mesh "
+                         "solver decodes values in-kernel")
     ap.add_argument("--verify", action="store_true",
                     help="rank 0 checks the mesh trace against the "
                          "single-process run_scanned reference")

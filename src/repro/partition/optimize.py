@@ -224,6 +224,18 @@ class StreamingAssigner:
         self._members: Optional[List[List[int]]] = (
             [[] for _ in range(p)] if track_members else None)
         self._next_index = 0
+        # cached scoring aggregates (see _score_candidates): the (p, d)
+        # diagonals plus their per-coordinate mean and reciprocal mean,
+        # maintained incrementally across accepts and rebuilt exactly
+        # every _REFRESH accepts to bound f64 drift
+        self._A = self._diags(self._S, self._counts)
+        self._Ainv = 1.0 / self._A
+        self._m = self._A.mean(axis=0)
+        self._H = self._Ainv.mean(axis=0)
+        self._since_refresh = 0
+        self._scratch: Optional[np.ndarray] = None
+
+    _REFRESH = 128
 
     def _diags(self, S: np.ndarray, counts: np.ndarray) -> np.ndarray:
         return self._c * S / np.maximum(counts, 1)[:, None] + self._base
@@ -234,6 +246,86 @@ class StreamingAssigner:
     def gamma(self) -> float:
         """Surrogate gamma~ of the shards assigned so far."""
         return self._gamma_if(self._S, self._counts)
+
+    def _score_candidates(self, r: np.ndarray,
+                          eligible: np.ndarray) -> np.ndarray:
+        """gamma~ after placing squared-row `r` on each eligible shard.
+
+        Uses the closed form gamma = max_i (m_i^2 * H_i - m_i) with
+        m = mean_k A_k and H = mean_k 1/A_k (expand Lemma 5's
+        (m - A)^2 / A and the cross term collapses), so one candidate
+        costs O(d) — not O(p*d) — and ALL candidates score as one
+        (E, d) vectorized pass.  A count bump rescales candidate k's
+        whole diagonal row, so the update cannot be support-restricted.
+        """
+        E = eligible.size
+        if self._scratch is None or self._scratch.shape[1] != self.d:
+            self._scratch = np.empty((3, self.p, self.d), np.float64)
+        An, P, Q = (self._scratch[0, :E], self._scratch[1, :E],
+                    self._scratch[2, :E])
+        ne = self._counts[eligible].astype(np.float64)
+        denom = (ne + 1.0)[:, None]
+        scale = np.maximum(ne, 1.0)[:, None] / denom
+        A_old = self._A[eligible]
+        # A_new = scale*(A_old - base) + base + (c/denom)*r; every pass
+        # writes a preallocated scratch row (fresh (E, d) temporaries
+        # per arriving row cost more than the arithmetic), and 1/A_old
+        # comes from the cached reciprocal — division is the slow ufunc
+        np.multiply(scale, A_old, out=An)
+        An += self._base * (1.0 - scale)
+        np.multiply(r[None, :], self._c / denom, out=P)
+        An += P
+        np.subtract(An, A_old, out=P)
+        P *= 1.0 / self.p
+        P += self._m[None, :]
+        np.divide(1.0, An, out=Q)
+        Q -= self._Ainv[eligible]
+        Q *= 1.0 / self.p
+        Q += self._H[None, :]
+        # score = P^2 Q - P = P * (P*Q - 1)
+        Q *= P
+        Q -= 1.0
+        Q *= P
+        return Q.max(axis=1)
+
+    def _accept(self, r: np.ndarray, eligible: np.ndarray) -> int:
+        scores = self._score_candidates(r, eligible)
+        counts = self._counts
+        best_k, best_gamma = int(eligible[0]), np.inf
+        for g, k in zip(scores.tolist(), eligible.tolist()):
+            # scalar np.isclose semantics, inlined: the ufunc call
+            # machinery costs more than this row's entire (E, d) score
+            if g < best_gamma - 1e-15 or (
+                    abs(g - best_gamma) <= 1e-8 + 1e-5 * abs(best_gamma)
+                    and counts[k] < counts[best_k]):
+                best_k, best_gamma = int(k), float(g)
+        A_old = self._A[best_k].copy()
+        Ainv_old = self._Ainv[best_k].copy()
+        self._S[best_k] += r
+        self._counts[best_k] += 1
+        self._since_refresh += 1
+        if self._since_refresh >= self._REFRESH:
+            self._A = self._diags(self._S, self._counts)
+            self._Ainv = 1.0 / self._A
+            self._m = self._A.mean(axis=0)
+            self._H = self._Ainv.mean(axis=0)
+            self._since_refresh = 0
+        else:
+            self._A[best_k] = (self._c * self._S[best_k]
+                               / self._counts[best_k] + self._base)
+            self._Ainv[best_k] = 1.0 / self._A[best_k]
+            self._m += (self._A[best_k] - A_old) / self.p
+            self._H += (self._Ainv[best_k] - Ainv_old) / self.p
+        return best_k
+
+    def _record(self, best_k: int, index: Optional[int]) -> None:
+        if self._members is not None:
+            i = self._next_index if index is None else int(index)
+            self._members[best_k].append(i)
+        self._next_index += 1
+
+    def _eligible(self) -> np.ndarray:
+        return np.where(self._counts < self._counts.min() + self._slack)[0]
 
     def assign(self, row, cols=None, index: Optional[int] = None) -> int:
         """Place one row; returns the chosen shard.
@@ -249,31 +341,39 @@ class StreamingAssigner:
         else:
             np.add.at(r, np.asarray(cols),
                       np.asarray(row, dtype=np.float64) ** 2)
-        eligible = np.where(
-            self._counts < self._counts.min() + self._slack)[0]
-        # only shard k's diagonal row changes under a candidate
-        # placement, so score candidates by swapping that one row in a
-        # shared diag matrix instead of copying the (p, d) state per
-        # candidate (the ingest hot path: one assign per arriving row)
-        D = self._diags(self._S, self._counts)
-        best_k, best_gamma = int(eligible[0]), np.inf
-        for k in eligible:
-            row_old = D[k].copy()
-            D[k] = (self._c * (self._S[k] + r) / (self._counts[k] + 1)
-                    + self._base)
-            g = gamma_surrogate_from_diags(D)
-            D[k] = row_old
-            if g < best_gamma - 1e-15 or (
-                    np.isclose(g, best_gamma) and
-                    self._counts[k] < self._counts[best_k]):
-                best_k, best_gamma = int(k), g
-        self._S[best_k] += r
-        self._counts[best_k] += 1
-        if self._members is not None:
-            i = self._next_index if index is None else int(index)
-            self._members[best_k].append(i)
-        self._next_index += 1
+        best_k = self._accept(r, self._eligible())
+        self._record(best_k, index)
         return best_k
+
+    def assign_many(self, vals: np.ndarray, cols: np.ndarray,
+                    indptr: np.ndarray, *,
+                    block_rows: int = 64) -> np.ndarray:
+        """Place a ragged-CSR batch of rows; returns (n,) shard ids.
+
+        The policy is inherently sequential (each accept moves the
+        state the next score reads), but the per-row setup is not: the
+        dense squared-row vectors are scattered `block_rows` at a time
+        in one `np.add.at`, and each row's candidate scoring is the
+        single vectorized (E, d) pass of `_score_candidates` — the
+        ingest batching that makes `--placement gamma` usable at scale.
+        """
+        indptr = np.asarray(indptr, dtype=np.int64)
+        n = indptr.size - 1
+        out = np.empty(n, np.int64)
+        v2 = np.asarray(vals, dtype=np.float64) ** 2
+        cols = np.asarray(cols)
+        for lo in range(0, n, block_rows):
+            hi = min(lo + block_rows, n)
+            width = indptr[lo + 1:hi + 1] - indptr[lo:hi]
+            rows_of = np.repeat(np.arange(hi - lo), width)
+            R = np.zeros((hi - lo, self.d), np.float64)
+            np.add.at(R, (rows_of, cols[indptr[lo]:indptr[hi]]),
+                      v2[indptr[lo]:indptr[hi]])
+            for j in range(hi - lo):
+                best_k = self._accept(R[j], self._eligible())
+                self._record(best_k, None)
+                out[lo + j] = best_k
+        return out
 
     def partition_idx(self) -> np.ndarray:
         if self._members is None:

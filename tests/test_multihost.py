@@ -72,6 +72,31 @@ def reference_trace(store):
     return values, nnz
 
 
+@pytest.fixture(scope="module")
+def codec_store_pair(tmp_path_factory):
+    """raw/codec twin stores ingested from ONE bf16-representable
+    LIBSVM text — their decoded views (and hence solver traces) are
+    bitwise comparable."""
+    from repro.data.sparse import dense_to_csr
+    from repro.data.synthetic import make_sparse_classification
+    from repro.datasets.codec import bf16_decode, bf16_encode
+    from repro.datasets.libsvm import write_libsvm
+    from repro.datasets.shards import ingest_libsvm
+
+    root = tmp_path_factory.mktemp("mh-codec")
+    X, y, _ = make_sparse_classification(256, FIXTURE_D, density=0.3,
+                                         seed=1)
+    X = bf16_decode(bf16_encode(np.asarray(X, np.float32)))
+    csr = dense_to_csr(X)
+    svm = root / "data.svm"
+    write_libsvm(svm, np.asarray(csr.vals), np.asarray(csr.cols),
+                 np.asarray(csr.row_nnz), np.asarray(y))
+    raw = ingest_libsvm(svm, root / "raw", p=4, n_features=FIXTURE_D)
+    enc = ingest_libsvm(svm, root / "enc", p=4, n_features=FIXTURE_D,
+                        codec="delta+bf16")
+    return raw, enc
+
+
 # ---------------------------------------------------------------------------
 # MeshSpec: declarative layout / mesh-shape separation
 # ---------------------------------------------------------------------------
@@ -251,6 +276,18 @@ def _random_raw_store(root, rng, p, n_k, K):
     return _write_raw_store(root, vals, cols, row_nnz, labels, members)
 
 
+def _encode_raw_store(store, block_rows=2):
+    """Re-encode a committed raw store in place with the segment codec
+    and reopen it — the test-side analogue of `codec=` at ingest."""
+    from repro.datasets.shards import MANIFEST, _encode_store, open_store
+    mf = dict(store.manifest)
+    mf["codec"] = _encode_store(store.root, mf["p"], mf["n_k"],
+                                mf["max_nnz"], "delta+bf16", block_rows)
+    with open(store.root / MANIFEST, "w") as f:
+        json.dump(mf, f)
+    return open_store(store.root)
+
+
 def _host_partition(rng, p, hosts):
     ids = np.arange(p)
     cuts = np.sort(rng.choice(np.arange(1, p), size=hosts - 1,
@@ -260,7 +297,6 @@ def _host_partition(rng, p, hosts):
 
 
 def _assert_slices_tile_store(st_obj):
-    from repro.datasets.shards import _SEGMENTS
     store, hosts = st_obj
     for key in SEG_KEYS:
         cat = np.concatenate(
@@ -271,7 +307,8 @@ def _assert_slices_tile_store(st_obj):
         sl = store.local_slice(ids)
         for key in SEG_KEYS:
             _slice_view(sl, key)
-            fname, _ = _SEGMENTS[key]
+            # codec-aware: packed segments live in their codec file
+            fname = store._seg_info(key)[0]
             assert sl.mapped_ranges[fname] == sl.owned_extents(key)
             total = sum(ln for _, ln in sl.mapped_ranges[fname])
             assert total == sum(store.segment_extent(key, w)[1]
@@ -294,6 +331,8 @@ def test_local_slice_round_trip_property(p, n_k, K, seed):
         store = _random_raw_store(tmp, rng, p, n_k, K)
         hosts = _host_partition(rng, p, hosts=int(rng.integers(1, p + 1)))
         _assert_slices_tile_store((store, hosts))
+        # same invariants over the compressed extents of the codec store
+        _assert_slices_tile_store((_encode_raw_store(store), hosts))
 
 
 def test_local_slice_round_trip_seeded_sweep(tmp_path):
@@ -303,10 +342,13 @@ def test_local_slice_round_trip_seeded_sweep(tmp_path):
                                      (6, 1, 4), (4, 5, 2)]):
         rng = np.random.default_rng(100 + i)
         store = _random_raw_store(str(tmp_path / f"s{i}"), rng, p, n_k, K)
-        for hosts_n in range(1, p + 1):
-            hosts = _host_partition(np.random.default_rng(i * 7 + hosts_n),
-                                    p, hosts_n)
+        partitions = [_host_partition(np.random.default_rng(i * 7 + h),
+                                      p, h) for h in range(1, p + 1)]
+        for hosts in partitions:
             _assert_slices_tile_store((store, hosts))
+        enc = _encode_raw_store(store)       # mutates the dir in place
+        for hosts in partitions:
+            _assert_slices_tile_store((enc, hosts))
 
 
 # ---------------------------------------------------------------------------
@@ -516,6 +558,46 @@ def test_forked_2proc_mesh_matches_single_process(store, reference_trace,
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_array_equal(results[0]["nnz"], nnz_ref)
     assert results[0]["comm"] == comm_bytes_per_round(FIXTURE_D)
+
+
+def test_forked_2proc_mesh_codec_store(codec_store_pair, multihost):
+    """A real 2-process jax.distributed run over a COMPRESSED store:
+    each rank maps only its packed extents and decode happens inside
+    the epoch gather, yet the trace matches the single-process
+    run_scanned trajectory over the raw twin (same bf16-representable
+    source text, so the decoded bits agree exactly)."""
+    import jax.numpy as jnp
+    from repro.core import LOGISTIC, PScopeConfig, Regularizer
+    from repro.core.pscope import run_scanned
+
+    raw, enc = codec_store_pair
+    cfg = PScopeConfig(**FIXTURE_KW, inner_path="lazy")
+    _, v_ref, nnz_ref = run_scanned(LOGISTIC, Regularizer(1e-3, 1e-3),
+                                    raw.csr_p, np.asarray(raw.yp),
+                                    jnp.zeros(raw.d), cfg)
+    results = multihost(2, f"""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import Regularizer, LOGISTIC, PScopeConfig
+        from repro.launch.mesh import run_mesh
+        from repro.datasets.shards import open_store
+
+        def main():
+            store = open_store({str(enc.root)!r})
+            assert store.codec is not None
+            cfg = PScopeConfig(**{FIXTURE_KW!r}, inner_path="lazy")
+            res = run_mesh(LOGISTIC, Regularizer(1e-3, 1e-3), store, None,
+                           jnp.zeros(store.d), cfg)
+            return {{"rank": res.process_id,
+                     "owned": list(res.worker_ids),
+                     "values": res.values.tolist(),
+                     "nnz": res.nnz.tolist()}}
+    """, devices_per_process=2, timeout=600)
+    assert [r["rank"] for r in results] == [0, 1]
+    assert results[0]["owned"] == [0, 1] and results[1]["owned"] == [2, 3]
+    assert results[0]["values"] == results[1]["values"]
+    np.testing.assert_allclose(results[0]["values"], v_ref,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(results[0]["nnz"], nnz_ref)
 
 
 def test_forked_4proc_smoke(store, reference_trace, multihost):
