@@ -14,8 +14,20 @@ mid-run — and comparing end-to-end wall time:
     elastic/remesh/p3             the re-mesh latency itself (from the
                                   survivors' recovery event), with
                                   rounds_to_recover in `derived`
+    elastic/coordinator_loss_wall/...
+                                  rank 0 — the KV coordinator — killed
+                                  under `--chaos kill-coordinator@K`:
+                                  file control plane + external service
+                                  host, a survivor fences itself in as
+                                  the new verdict issuer
+    elastic/rejoin_wall/...       kill-then-rejoin schedule: the
+                                  revived rank is re-admitted at a
+                                  chunk boundary (W -> W+1, no restart)
+    elastic/remesh_overlap/p3     seconds of orphan-shard host-block
+                                  build hidden behind the re-mesh
+                                  barrier by the background builder
 
-Both runs go through `python -m repro.launch.multihost --spawn` in a
+All runs go through `python -m repro.launch.multihost --spawn` in a
 child process (jax pins the backend at first use, so the sweep cannot
 run in-process under `benchmarks.run`); the degraded run's `--verify`
 asserts the recovered trajectory still matches `run_scanned` — the
@@ -26,6 +38,7 @@ benchmark doubles as an acceptance check.
 """
 from __future__ import annotations
 
+import json
 import os
 import re
 import subprocess
@@ -65,6 +78,16 @@ def _spawn_cli(workdir: str, *extra: str) -> tuple[float, str]:
     return wall, proc.stdout
 
 
+def _rank_payloads(spawn_out: str) -> Dict[int, Dict]:
+    """The per-rank RESULT payloads echoed through the spawner."""
+    payloads: Dict[int, Dict] = {}
+    for line in spawn_out.splitlines():
+        if line.startswith("RESULT "):
+            p = json.loads(line[len("RESULT "):])
+            payloads[p["process_id"]] = p
+    return payloads
+
+
 def main(full: bool = False) -> List[Dict]:
     del full  # one fixture size: the cost being measured is protocol-side
     rows: List[Dict] = []
@@ -98,6 +121,52 @@ def main(full: bool = False) -> List[Dict]:
         "derived": f"{survivors} survivors; detected at round "
                    f"{detect_round}, resumed at {resume_round}, "
                    f"rounds_to_recover={detect_round - resume_round}",
+    })
+
+    # coordinator loss: --chaos implies the file control plane and an
+    # external service host, so rank 0's death is survivable IN MEMORY
+    coord_wall, coord_out = _spawn_cli(
+        os.path.join(base, "coord"), "--verify",
+        "--chaos", f"kill-coordinator@{_KILL_AT}")
+    assert "CHAOS OK" in coord_out and "VERIFY OK" in coord_out, \
+        coord_out[-1500:]
+    ev = _rank_payloads(coord_out)[1]["events"][0]
+    rows.append({
+        "name": f"elastic/coordinator_loss_wall/p{_RANKS}_r{_ROUNDS}",
+        "us_per_call": coord_wall * 1e6,
+        "derived": f"rank 0 (coordinator) killed at round {_KILL_AT}; "
+                   f"survivors {ev['survivors']} promoted a new verdict "
+                   f"issuer, rounds_to_recover="
+                   f"{ev['rounds_to_recover']}; no checkpoint fallback; "
+                   f"verified",
+    })
+
+    # kill-then-rejoin: scale back up W -> W+1 mid-run (needs 8 rounds
+    # so the re-admission boundary leaves a non-empty suffix)
+    rejoin_wall, rejoin_out = _spawn_cli(
+        os.path.join(base, "rejoin"), "--verify", "--rounds", "8",
+        "--chaos", f"kill:{_VICTIM}@{_KILL_AT},rejoin@{_KILL_AT + 1}")
+    assert "REJOIN OK" in rejoin_out and "VERIFY OK" in rejoin_out, \
+        rejoin_out[-1500:]
+    payloads = _rank_payloads(rejoin_out)
+    join_ev = payloads[0]["events"][-1]
+    overlap_s = max(p.get("remesh_overlap_saved_s", 0.0)
+                    for p in payloads.values())
+    rows.append({
+        "name": f"elastic/rejoin_wall/p{_RANKS}_r8",
+        "us_per_call": rejoin_wall * 1e6,
+        "derived": f"rank {_VICTIM} killed at {_KILL_AT}, re-admitted "
+                   f"at round {join_ev['resume_round']} owning "
+                   f"{join_ev['ownership'][str(_VICTIM)]}; "
+                   f"rounds_to_recover={join_ev['rounds_to_recover']}; "
+                   f"suffix verified",
+    })
+    rows.append({
+        "name": f"elastic/remesh_overlap/p{_RANKS}",
+        "us_per_call": overlap_s * 1e6,
+        "derived": "orphan host-block build seconds hidden behind the "
+                   "re-mesh barrier (remesh_overlap_saved_s, max over "
+                   "ranks)",
     })
     return rows
 

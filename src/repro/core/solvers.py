@@ -522,16 +522,27 @@ def _run_pscope_elastic(obj, reg, part, cfg, trace):
       hosts       initial host count (default: p, one worker each)
       fail_at     round of the first failure (default: rounds // 2)
       fail_ranks  ranks to kill at fail_at (default: highest rank)
+      rejoin_at   round the killed ranks rejoin (default: no rejoin);
+                  ownership re-planned with `rebalance_plan` — the
+                  scale-up inverse of `failure_plan`
     """
-    from repro.train.elastic import failure_plan, initial_ownership
+    from repro.train.elastic import (failure_plan, initial_ownership,
+                                     rebalance_plan)
 
     hosts = int(cfg.extras.get("hosts", part.p))
     fail_at = int(cfg.extras.get("fail_at", max(1, cfg.rounds // 2)))
     fail_ranks = set(int(r) for r in cfg.extras.get(
         "fail_ranks", [hosts - 1]))
+    rejoin_at = cfg.extras.get("rejoin_at")
     if not 0 < fail_at < cfg.rounds:
         raise ValueError(f"fail_at must fall inside the run "
                          f"(0 < {fail_at} < {cfg.rounds})")
+    if rejoin_at is not None:
+        rejoin_at = int(rejoin_at)
+        if not fail_at < rejoin_at < cfg.rounds:
+            raise ValueError(
+                f"rejoin_at must land strictly between fail_at "
+                f"({fail_at}) and rounds ({cfg.rounds}), got {rejoin_at}")
 
     pcfg = _pscope_config(obj, reg, part, cfg, "lazy")
     ownership = initial_ownership(part.p, hosts)
@@ -542,22 +553,43 @@ def _run_pscope_elastic(obj, reg, part, cfg, trace):
     t_remesh = time.perf_counter()
     ownership = failure_plan(ownership, fail_ranks)
     remesh_s = time.perf_counter() - t_remesh
-    seg2 = dataclasses.replace(pcfg, outer_steps=cfg.rounds - fail_at)
-    w, v2, n2 = pscope.run_scanned(obj, reg, part.csr_p, part.yp, w, seg2,
-                                   start_round=fail_at)
+    events = [{"round": fail_at, "resume_round": fail_at,
+               "rounds_to_recover": 0, "joiners": [],
+               "dead": sorted(fail_ranks), "epoch": 1,
+               "remesh_seconds": remesh_s,
+               "survivors": sorted(ownership),
+               "ownership": {int(r): list(ws)
+                             for r, ws in ownership.items()}}]
 
-    values = np.concatenate([v1, v2[1:]])
-    nnzs = np.concatenate([n1, n2[1:]])
-    trace.meta["elastic"] = {
-        "hosts": hosts,
-        "events": [{"round": fail_at, "resume_round": fail_at,
-                    "rounds_to_recover": 0,
-                    "dead": sorted(fail_ranks), "epoch": 1,
-                    "remesh_seconds": remesh_s,
-                    "survivors": sorted(ownership),
-                    "ownership": {int(r): list(ws)
-                                  for r, ws in ownership.items()}}],
-    }
+    segments = []
+    if rejoin_at is not None:
+        segments.append((fail_at, rejoin_at, None))
+        segments.append((rejoin_at, cfg.rounds, sorted(fail_ranks)))
+    else:
+        segments.append((fail_at, cfg.rounds, None))
+
+    values, nnzs = [v1], [n1]
+    for start, end, joiners in segments:
+        if joiners:
+            t_remesh = time.perf_counter()
+            ownership = rebalance_plan(ownership, joiners)
+            events.append({
+                "round": start, "resume_round": start,
+                "rounds_to_recover": 0, "joiners": joiners,
+                "dead": [], "epoch": len(events) + 1,
+                "remesh_seconds": time.perf_counter() - t_remesh,
+                "survivors": sorted(ownership),
+                "ownership": {int(r): list(ws)
+                              for r, ws in ownership.items()}})
+        seg = dataclasses.replace(pcfg, outer_steps=end - start)
+        w, v, n = pscope.run_scanned(obj, reg, part.csr_p, part.yp, w,
+                                     seg, start_round=start)
+        values.append(v[1:])
+        nnzs.append(n[1:])
+
+    values = np.concatenate(values)
+    nnzs = np.concatenate(nnzs)
+    trace.meta["elastic"] = {"hosts": hosts, "events": events}
     trace.record_history(values, nnzs, comm_per_record=2.0,
                          total_seconds=time.perf_counter() - t0)
     return jnp.asarray(w)

@@ -1,4 +1,5 @@
-"""Elastic multi-host CALL: failure detection + survivor re-meshing.
+"""Elastic multi-host CALL: failure detection, survivor re-meshing,
+coordinator survival, and scale-up re-admission.
 
 The static mesh layer (`launch.mesh.run_mesh`) dies with its first
 lost host: `MeshSpec.build()` wants its exact device count and a psum
@@ -6,7 +7,11 @@ with a dead peer either raises or hangs.  This module makes the run
 survive: detect the death, re-mesh the survivors, adopt the orphaned
 shard extents, and resume the scanned trajectory from the replicated
 iterate — no restart, no lost rounds (at worst the current chunk is
-re-executed).
+re-executed).  A recovered or replacement rank can come BACK mid-run:
+it announces itself on the control plane and is re-admitted at the
+next chunk boundary (`train.elastic.rebalance_plan` hands shards back,
+the mesh grows W -> W+1, the joiner restores the replicated iterate
+and the RNG fast-forward).
 
 Failure model (empirically pinned on the gloo CPU backend; see
 docs/multihost.md "Elastic recovery"):
@@ -17,32 +22,44 @@ docs/multihost.md "Elastic recovery"):
   * A collective that INCLUDES a dead rank is unreliable: it may raise
     quickly or hang indefinitely, depending on rank.  Survivors must
     therefore never enter a collective with a dead peer — detection is
-    host-side, at chunk boundaries, via the coordinator KV store.
+    host-side, at chunk boundaries, via the control plane.
   * The coordination service itself would declare the dead task
     missing after ~100 s and then TERMINATE the survivors; elastic
     runs must be brought up with `init_distributed(elastic=True)`,
     which raises that service threshold out of the way.
-  * Losing rank 0 is NOT survivable in-memory (it hosts the KV
-    coordinator); that — and a hung collective — is what the cold
-    checkpoint fallback is for.
+  * Losing rank 0 is survivable IFF the control plane outlives it:
+    either the file-backed store (`ElasticConfig.control="file:..."`)
+    or the coordination-service KV with the service hosted OUTSIDE the
+    ranks (`--service-host` + `init_distributed(external_service=
+    True)`).  The lowest live survivor then PROMOTES itself to
+    verdict-issuer (first-wins fence claim, so a zombie ex-leader can
+    never split-brain).  With the classic in-rank-0 service, rank-0
+    loss remains the cold `checkpoint_dir` fallback.
 
 Execution structure: the T-round trajectory runs as chunks of
 `check_every` rounds through the stacked scanned driver
 (`pscope.run_stacked_scanned` — zero-sync within a chunk).  At every
-chunk boundary each rank publishes a round marker to the KV store; the
-leader (rank 0) collects them, consults the heartbeat table when a
-marker is missing, and publishes a verdict every survivor obeys:
-continue, or re-mesh at epoch+1 (new ownership from
-`train.elastic.failure_plan`, survivor mesh, orphan extents adopted via
-`ShardStore.local_slice`) and resume — from the just-computed iterate
-when every survivor finished the chunk, or rolled back to the chunk-
-start iterate (which everyone holds, replicated) when a survivor's
-collective blew up mid-chunk.  The RNG split chain is fast-forwarded
-per segment (`start_round`), so the recovered trajectory equals the
-uninterrupted p-worker run within fp32 — placement transparency.
+chunk boundary each rank publishes a round marker to the control
+plane; the leader (lowest surviving rank) collects them, consults the
+heartbeat table when a marker is missing, folds in any pending join
+requests, and publishes a verdict — via first-write-wins claim, so
+every survivor obeys the SAME verdict even across a leader change:
+continue, or re-mesh at epoch+1 and resume — from the just-computed
+iterate when every survivor finished the chunk, or rolled back to the
+chunk-start iterate (which everyone holds, replicated) when a
+survivor's collective blew up mid-chunk.  The re-mesh barrier is
+itself leader-verdicted, so a death DURING recovery just triggers
+another re-mesh round instead of a deadlock.  While survivors wait at
+that barrier, the orphan-shard `local_slice` mmaps and stacked
+slot-tables build on a background thread — the rebuild hides behind
+the barrier wait (`ElasticRunResult.remesh_overlap_saved_s`).  The RNG
+split chain is fast-forwarded per segment (`start_round`), so the
+recovered trajectory equals the uninterrupted p-worker run within
+fp32 — placement transparency.
 """
 from __future__ import annotations
 
+import base64
 import dataclasses
 import json
 import os
@@ -54,19 +71,39 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.launch.control import (DistributedKVControlPlane,
+                                  LocalControlPlane, claim_fence,
+                                  join_request_key, make_control_plane,
+                                  newest_fence, publish_progress,
+                                  read_progress, validate_control_spec)
+
 Ownership = Dict[int, Tuple[int, ...]]
 
-# env knob: "<rank>:<round>" — that rank SIGKILLs itself at the chunk
-# boundary AFTER completing the chunk containing <round>, before its
-# marker write.  Deterministic fault injection for tests/CI/benchmarks:
-# the death lands between collectives, so survivors detect it at the
-# marker barrier instead of inside a psum.
+# env knob: comma-separated "<rank>:<round>[:barrier]" entries — each
+# named rank SIGKILLs itself at the chunk boundary AFTER completing the
+# chunk containing <round>, before its marker write (or, with the
+# ":barrier" suffix, after obeying a re-mesh verdict but right BEFORE
+# entering the re-mesh barrier — the death-during-recovery schedule).
+# Deterministic fault injection for tests/CI/benchmarks: the death
+# lands between collectives, so survivors detect it at the marker
+# barrier instead of inside a psum.
 KILL_ENV = "REPRO_ELASTIC_KILL"
+
+# env knob: "<rank>:<depart_round>:<rejoin_round>" — that rank goes
+# protocol-dead (stops heartbeats/markers/collectives) at the chunk
+# boundary after <depart_round>, is declared dead and re-meshed out,
+# then announces itself on the control plane once the run reaches
+# <rejoin_round> and is re-admitted.  This is the "park/revive"
+# simulation of losing and recovering a host: a genuinely SIGKILLed
+# process cannot re-enter a jax.distributed job (the service refuses
+# the reconnect), so a replacement PROCESS needs the cold checkpoint
+# path — but a recovered HOST is exactly this schedule.
+DEPART_ENV = "REPRO_ELASTIC_DEPART"
 
 
 @dataclasses.dataclass(frozen=True)
 class ElasticConfig:
-    """Knobs of the elastic run layer.
+    """Knobs of the elastic run layer (validated at construction).
 
     check_every           rounds per chunk — the detection granularity:
                           a failure costs at most this many re-executed
@@ -76,17 +113,23 @@ class ElasticConfig:
     marker_timeout_s      how long the leader waits for chunk markers
                           before consulting the heartbeat table
     verdict_timeout_s     how long followers wait for the leader's
-                          verdict (generously > marker_timeout_s; a
-                          timeout here usually means rank 0 died, which
-                          is not survivable in-memory)
-    poll_interval_s       KV polling period
-    namespace             KV key prefix (disambiguates concurrent runs)
-    checkpoint_dir        cold-fallback directory: rank 0 checkpoints
-                          the iterate at chunk boundaries, and a fresh
-                          run resumes from the newest step when
-                          in-memory recovery was impossible
+                          verdict before promoting a new leader (on a
+                          coordinator-survivable control plane) or
+                          giving up (generously > marker_timeout_s)
+    poll_interval_s       control-plane polling period
+    namespace             key prefix (disambiguates concurrent runs)
+    checkpoint_dir        cold-fallback directory: the leader
+                          checkpoints the iterate at chunk boundaries,
+                          and a fresh run resumes from the newest step
+                          when in-memory recovery was impossible
     checkpoint_every      chunks between checkpoint saves (0 = off even
                           with a directory set)
+    control               control-plane backend: "kv" (the
+                          jax.distributed coordination-service store —
+                          survives rank 0 only with an external
+                          --service-host), "file:<path>" (NFS/local
+                          directory, survives any single failure), or
+                          "local" (in-process; single-rank runs)
     """
 
     check_every: int = 1
@@ -98,48 +141,56 @@ class ElasticConfig:
     namespace: str = "elastic"
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 1
+    control: str = "kv"
+
+    def __post_init__(self):
+        if self.check_every <= 0:
+            raise ValueError(
+                f"check_every must be >= 1 (got {self.check_every}): "
+                f"chunk boundaries are the only failure-detection points")
+        if self.heartbeat_interval_s <= 0 or self.poll_interval_s <= 0 \
+                or self.marker_timeout_s <= 0:
+            raise ValueError(
+                f"heartbeat_interval_s, poll_interval_s and "
+                f"marker_timeout_s must be positive (got "
+                f"{self.heartbeat_interval_s}, {self.poll_interval_s}, "
+                f"{self.marker_timeout_s})")
+        if self.heartbeat_timeout_s <= self.heartbeat_interval_s:
+            raise ValueError(
+                f"heartbeat_timeout_s ({self.heartbeat_timeout_s}) must "
+                f"exceed heartbeat_interval_s "
+                f"({self.heartbeat_interval_s}): a counter published "
+                f"every interval cannot be judged stale sooner, so no "
+                f"death would ever be detected")
+        if self.verdict_timeout_s < self.marker_timeout_s:
+            raise ValueError(
+                f"verdict_timeout_s ({self.verdict_timeout_s}) is the "
+                f"hard deadline and must cover marker_timeout_s "
+                f"({self.marker_timeout_s})")
+        if self.verdict_timeout_s <= self.heartbeat_timeout_s:
+            raise ValueError(
+                f"verdict_timeout_s ({self.verdict_timeout_s}) must "
+                f"exceed heartbeat_timeout_s "
+                f"({self.heartbeat_timeout_s}): a dead rank could never "
+                f"be declared before the hard deadline, so every "
+                f"failure would abort the run instead of re-meshing")
+        if self.checkpoint_every < 0:
+            raise ValueError(f"checkpoint_every must be >= 0 (got "
+                             f"{self.checkpoint_every})")
+        validate_control_spec(self.control)
 
 
 # ---------------------------------------------------------------------------
-# KV store: the jax.distributed coordinator service, or in-memory
+# KV store: PR-7 names, now thin aliases of launch.control backends
 # ---------------------------------------------------------------------------
 
-class LocalKV:
+class LocalKV(LocalControlPlane):
     """Dict-backed stand-in (single-process runs and protocol tests)."""
 
-    def __init__(self):
-        self._d: Dict[str, str] = {}
-        self._lock = threading.Lock()
 
-    def set(self, key: str, value: str) -> None:
-        with self._lock:
-            self._d[key] = value
-
-    def list(self, prefix: str) -> Dict[str, str]:
-        with self._lock:
-            return {k: v for k, v in self._d.items()
-                    if k.startswith(prefix)}
-
-
-class DistributedKV:
+class DistributedKV(DistributedKVControlPlane):
     """The coordination-service KV store of the running
-    `jax.distributed` job.  Writes are visible to every live process;
-    a dead process's keys persist (its heartbeat counter simply stops
-    advancing — which is exactly the liveness signal)."""
-
-    def __init__(self):
-        from jax._src import distributed as _dist
-        client = getattr(_dist.global_state, "client", None)
-        if client is None:
-            raise RuntimeError("DistributedKV needs an initialized "
-                               "jax.distributed job (init_distributed)")
-        self._client = client
-
-    def set(self, key: str, value: str) -> None:
-        self._client.key_value_set(key, value, allow_overwrite=True)
-
-    def list(self, prefix: str) -> Dict[str, str]:
-        return {k: v for k, v in self._client.key_value_dir_get(prefix)}
+    `jax.distributed` job (see `launch.control`)."""
 
 
 # ---------------------------------------------------------------------------
@@ -240,23 +291,25 @@ def _ready_prefix(ns: str, epoch: int) -> str:
     return f"{ns}/e{epoch}/ready/"
 
 
+def _go_prefix(ns: str, epoch: int) -> str:
+    return f"{ns}/e{epoch}/go/"
+
+
 def publish_marker(kv, ns: str, epoch: int, chunk: int, rank: int,
                    status: str, round_end: int) -> None:
     kv.set(_marker_prefix(ns, epoch, chunk) + str(rank),
            json.dumps({"status": status, "round": round_end}))
 
 
-def leader_verdict(kv, cfg: ElasticConfig, epoch: int, chunk: int,
-                   survivors: Sequence[int], detector: FailureDetector,
-                   chunk_start: int, chunk_end: int) -> dict:
-    """Rank 0's side of the chunk barrier.
+def _decide_verdict(kv, cfg: ElasticConfig, epoch: int, chunk: int,
+                    survivors: Sequence[int], detector: FailureDetector,
+                    chunk_start: int, chunk_end: int) -> dict:
+    """The leader's decision logic (no publication — see callers).
 
     Waits for every survivor's marker; once `marker_timeout_s` passes,
     missing ranks are declared dead as soon as their heartbeats go
     stale (a slow-but-alive rank keeps beating and keeps being waited
-    for).  The verdict — continue, or re-mesh with an explicit resume
-    round — is published under an epoch/chunk-scoped key; every
-    follower blocks on it, so all survivors act on identical state.
+    for).
 
       * every survivor ok            -> {"op": "continue"}  (resume ==
         chunk_end; each rank keeps its just-computed iterate)
@@ -267,7 +320,7 @@ def leader_verdict(kv, cfg: ElasticConfig, epoch: int, chunk: int,
         every survivor rolls back to the replicated chunk-start
         iterate, and the chunk is re-executed on the new mesh.
     """
-    prefix = _marker_prefix(ns := cfg.namespace, epoch, chunk)
+    prefix = _marker_prefix(cfg.namespace, epoch, chunk)
     deadline = time.monotonic() + cfg.marker_timeout_s
     hard_deadline = time.monotonic() + cfg.verdict_timeout_s
     dead: List[int] = []
@@ -296,32 +349,46 @@ def leader_verdict(kv, cfg: ElasticConfig, epoch: int, chunk: int,
 
     failed = [r for r, m in markers.items() if m.get("status") != "ok"]
     if not dead and not failed:
-        verdict = {"op": "continue", "resume_round": chunk_end,
-                   "dead": []}
-    else:
-        # a failed chunk on a survivor without a detected death means
-        # someone died mid-collective: wait for the heartbeat table to
-        # name the corpse
-        while failed and not dead:
-            dead = detector.stale([r for r in survivors
-                                   if r not in failed])
-            if time.monotonic() > hard_deadline:
-                raise RuntimeError(
-                    f"elastic: survivors {failed} reported failed "
-                    f"chunks but no rank went heartbeat-stale — "
-                    f"cannot attribute the failure; aborting")
-            if not dead:
-                time.sleep(cfg.poll_interval_s)
-        resume = chunk_start if failed else chunk_end
-        verdict = {"op": "remesh", "resume_round": resume,
-                   "dead": sorted(int(r) for r in dead)}
-    kv.set(_verdict_prefix(ns, epoch, chunk) + "v", json.dumps(verdict))
+        return {"op": "continue", "resume_round": chunk_end, "dead": []}
+    # a failed chunk on a survivor without a detected death means
+    # someone died mid-collective: wait for the heartbeat table to
+    # name the corpse
+    while failed and not dead:
+        dead = detector.stale([r for r in survivors
+                               if r not in failed])
+        if time.monotonic() > hard_deadline:
+            raise RuntimeError(
+                f"elastic: survivors {failed} reported failed "
+                f"chunks but no rank went heartbeat-stale — "
+                f"cannot attribute the failure; aborting")
+        if not dead:
+            time.sleep(cfg.poll_interval_s)
+    resume = chunk_start if failed else chunk_end
+    return {"op": "remesh", "resume_round": resume,
+            "dead": sorted(int(r) for r in dead)}
+
+
+def leader_verdict(kv, cfg: ElasticConfig, epoch: int, chunk: int,
+                   survivors: Sequence[int], detector: FailureDetector,
+                   chunk_start: int, chunk_end: int) -> dict:
+    """Rank 0's side of the chunk barrier (PR-7 entry point): decide
+    and publish unconditionally.  The elastic driver itself goes
+    through the fenced first-write-wins claim path instead (so a
+    promoted leader and a zombie ex-leader can never publish competing
+    verdicts); this plain form remains for single-leader callers and
+    the protocol unit tests."""
+    verdict = _decide_verdict(kv, cfg, epoch, chunk, survivors, detector,
+                              chunk_start, chunk_end)
+    kv.set(_verdict_prefix(cfg.namespace, epoch, chunk) + "v",
+           json.dumps(verdict))
     return verdict
 
 
 def follower_verdict(kv, cfg: ElasticConfig, epoch: int, chunk: int,
                      detector: FailureDetector) -> dict:
-    """Block until rank 0 publishes the chunk verdict."""
+    """Block until rank 0 publishes the chunk verdict (PR-7 entry
+    point — no leader promotion; see `_follow_chunk` for the
+    promotion-capable path the driver uses)."""
     prefix = _verdict_prefix(cfg.namespace, epoch, chunk)
     deadline = time.monotonic() + cfg.verdict_timeout_s
     while True:
@@ -344,8 +411,9 @@ def follower_verdict(kv, cfg: ElasticConfig, epoch: int, chunk: int,
 def remesh_barrier(kv, cfg: ElasticConfig, epoch: int, rank: int,
                    survivors: Sequence[int]) -> None:
     """KV-polling barrier among the survivors before the new epoch's
-    first collective (so nobody enters the fresh gloo rendezvous while
-    a peer is still rebuilding its arrays)."""
+    first collective (PR-7 entry point: raises if a peer never
+    arrives; the driver uses `remesh_barrier_checked`, which instead
+    CONVERGES on a death during recovery)."""
     prefix = _ready_prefix(cfg.namespace, epoch)
     kv.set(prefix + str(rank), "1")
     deadline = time.monotonic() + cfg.verdict_timeout_s
@@ -362,6 +430,233 @@ def remesh_barrier(kv, cfg: ElasticConfig, epoch: int, rank: int,
             missing = sorted(set(survivors) - present)
             raise RuntimeError(f"elastic: ranks {missing} never reached "
                                f"the epoch-{epoch} re-mesh barrier")
+        time.sleep(cfg.poll_interval_s)
+
+
+def remesh_barrier_checked(kv, cfg: ElasticConfig, epoch: int, rank: int,
+                           survivors: Sequence[int],
+                           detector: FailureDetector) -> List[int]:
+    """Leader-verdicted re-mesh barrier: returns the ranks that DIED
+    at the barrier instead of deadlocking on them.
+
+    Every survivor publishes a ready key; the lowest LIVE survivor
+    watches the set and claims (first-write-wins) a "go" verdict once
+    either everyone arrived (`dead: []`) or the stragglers have gone
+    heartbeat-stale (`dead: [...]`).  Every rank returns the same
+    verdict's dead list; a non-empty result means the caller must run
+    another re-mesh round (new failure_plan, epoch+1, barrier again) —
+    the death-during-recovery cascade converges because each round
+    strictly shrinks the survivor set.
+    """
+    ns = cfg.namespace
+    kv.set(_ready_prefix(ns, epoch) + str(rank), "1")
+    go_key = _go_prefix(ns, epoch) + "v"
+    start = time.monotonic()
+    deadline = start + cfg.verdict_timeout_s
+    while True:
+        table = kv.list(_go_prefix(ns, epoch))
+        if table:
+            return [int(r) for r in
+                    json.loads(next(iter(table.values())))["dead"]]
+        present = set()
+        for key in kv.list(_ready_prefix(ns, epoch)):
+            try:
+                present.add(int(key.rsplit("/", 1)[-1]))
+            except ValueError:
+                continue
+        missing = sorted(set(survivors) - present)
+        live = [r for r in survivors if r not in detector.stale(survivors)]
+        acting_leader = (live[0] if live else min(survivors)) == rank
+        if acting_leader:
+            if not missing:
+                won = kv.try_claim(go_key, json.dumps({"dead": []}))
+                return [int(r) for r in json.loads(won)["dead"]]
+            if time.monotonic() - start > cfg.marker_timeout_s:
+                stale_missing = detector.stale(missing)
+                if sorted(stale_missing) == missing:
+                    won = kv.try_claim(
+                        go_key, json.dumps({"dead": missing}))
+                    return [int(r) for r in json.loads(won)["dead"]]
+        if time.monotonic() > deadline:
+            raise RuntimeError(
+                f"elastic: ranks {missing} neither reached the "
+                f"epoch-{epoch} re-mesh barrier nor went "
+                f"heartbeat-stale within {cfg.verdict_timeout_s}s")
+        time.sleep(cfg.poll_interval_s)
+
+
+# ---------------------------------------------------------------------------
+# Fenced verdict claims, leader promotion, join admission
+# ---------------------------------------------------------------------------
+
+def _poll_verdict(kv, cfg: ElasticConfig, epoch: int, chunk: int) -> dict:
+    prefix = _verdict_prefix(cfg.namespace, epoch, chunk)
+    deadline = time.monotonic() + cfg.verdict_timeout_s
+    while True:
+        table = kv.list(prefix)
+        if table:
+            return json.loads(next(iter(table.values())))
+        if time.monotonic() > deadline:
+            raise RuntimeError(f"elastic: fenced out of the chunk-{chunk} "
+                               f"(epoch {epoch}) verdict claim but no "
+                               f"verdict ever appeared")
+        time.sleep(cfg.poll_interval_s)
+
+
+def _claim_verdict(kv, cfg: ElasticConfig, epoch: int, chunk: int,
+                   me: int, verdict: dict, my_generation: int,
+                   survivors: Sequence[int]) -> dict:
+    """Publish `verdict` first-write-wins, under the fencing check: a
+    leader that was fenced out (a newer generation exists and belongs
+    to someone else STILL IN the survivor set) abdicates and obeys the
+    fencer's verdict instead — the zombie-ex-leader guard.  A fence
+    whose holder has since died or departed does not block the new
+    leader: the holder cannot issue anything anymore."""
+    g, holder = newest_fence(kv, cfg.namespace)
+    if g > my_generation and holder != me and holder in set(survivors):
+        return _poll_verdict(kv, cfg, epoch, chunk)
+    won = kv.try_claim(_verdict_prefix(cfg.namespace, epoch, chunk) + "v",
+                       json.dumps(verdict))
+    return json.loads(won)
+
+
+def _list_join_requests(kv, ns: str, exclude: Sequence[int]
+                        ) -> Dict[int, str]:
+    """Pending join announcements: rank -> join id, minus `exclude`."""
+    out: Dict[int, str] = {}
+    for key, val in kv.list(f"{ns}/join/").items():
+        try:
+            r = int(key.rsplit("/", 1)[-1])
+        except ValueError:
+            continue
+        if r not in exclude:
+            out[r] = val
+    return out
+
+
+def _fold_joiners(kv, cfg: ElasticConfig, base: dict,
+                  survivors: Sequence[int], ownership: Ownership,
+                  w, w_new, chunk_end: int
+                  ) -> Tuple[dict, Dict[int, str]]:
+    """Fold pending join requests into the chunk verdict.
+
+    With joiners present the verdict becomes a re-mesh (even when
+    nobody died) carrying everything a joiner cannot derive locally:
+    the post-rebalance ownership map and the replicated iterate
+    (base64 fp32 — the chunk-end iterate when the chunk was clean, the
+    chunk-start one under a rollback).  Returns (verdict, join ids) —
+    admissions are only published AFTER the claim resolves, from the
+    WINNING verdict (`_publish_admissions`), so a joiner can never act
+    on a verdict that lost the race.
+    """
+    from repro.train.elastic import failure_plan, rebalance_plan
+
+    joins = _list_join_requests(
+        kv, cfg.namespace,
+        exclude=list(survivors) + list(base["dead"]))
+    if not joins:
+        return base, {}
+    joiners = sorted(joins)
+    own = dict(ownership)
+    if base["dead"]:
+        own = failure_plan(own, base["dead"])
+    own = rebalance_plan(own, joiners)
+    w_ship = w_new if (int(base["resume_round"]) == int(chunk_end)
+                       and w_new is not None) else w
+    verdict = {
+        "op": "remesh", "resume_round": int(base["resume_round"]),
+        "dead": list(base["dead"]), "joiners": joiners,
+        "ownership": {str(r): [int(x) for x in ws]
+                      for r, ws in own.items()},
+        "w_b64": base64.b64encode(
+            np.asarray(w_ship, np.float32).tobytes()).decode("ascii"),
+    }
+    return verdict, joins
+
+
+def _publish_admissions(kv, cfg: ElasticConfig, epoch: int, winner: dict,
+                        survivors: Sequence[int],
+                        join_ids: Dict[int, str]) -> None:
+    """Write each admitted joiner's pickup record, derived from the
+    verdict that actually WON the claim (identical no matter which
+    claimant writes it)."""
+    joiners = winner.get("joiners") or []
+    if not joiners:
+        return
+    ns = cfg.namespace
+    nxt = sorted(set(int(r) for r in survivors
+                     if r not in winner["dead"]) | set(joiners))
+    for r in joiners:
+        jid = join_ids.get(int(r))
+        if jid is None:
+            continue               # this claimant never saw the request
+        admit = {"epoch_next": int(epoch) + 1,
+                 "resume_round": int(winner["resume_round"]),
+                 "survivors": nxt,
+                 "ownership": winner["ownership"],
+                 "w_b64": winner["w_b64"]}
+        kv.set(f"{ns}/admit/{r}/{jid}", json.dumps(admit))
+        kv.delete(join_request_key(ns, int(r)))
+
+
+def _lead_chunk(kv, cfg: ElasticConfig, epoch: int, chunk: int, me: int,
+                survivors: Sequence[int], detector: FailureDetector,
+                chunk_start: int, chunk_end: int, ownership: Ownership,
+                w, w_new, fence_generation: int) -> dict:
+    """The driver's leader path: decide, fold joins, claim (fenced)."""
+    base = _decide_verdict(kv, cfg, epoch, chunk, survivors, detector,
+                           chunk_start, chunk_end)
+    verdict, join_ids = _fold_joiners(kv, cfg, base, survivors, ownership,
+                                      w, w_new, chunk_end)
+    winner = _claim_verdict(kv, cfg, epoch, chunk, me, verdict,
+                            fence_generation, survivors)
+    _publish_admissions(kv, cfg, epoch, winner, survivors, join_ids)
+    return winner
+
+
+def _follow_chunk(kv, cfg: ElasticConfig, epoch: int, chunk: int, me: int,
+                  survivors: Sequence[int], detector: FailureDetector,
+                  chunk_start: int, chunk_end: int, ownership: Ownership,
+                  w, w_new, fence_generation: int) -> Tuple[dict, int]:
+    """The driver's follower path, WITH leader promotion.
+
+    Polls for the chunk verdict; when the current leader (the lowest
+    surviving rank) goes heartbeat-stale and the control plane
+    survives coordinator loss, the lowest LIVE survivor claims the
+    next fencing generation and — if it wins — issues the verdict
+    itself (which will name the dead leader).  Returns
+    (verdict, fence generation now held).
+    """
+    prefix = _verdict_prefix(cfg.namespace, epoch, chunk)
+    deadline = time.monotonic() + cfg.verdict_timeout_s
+    while True:
+        table = kv.list(prefix)
+        if table:
+            return json.loads(next(iter(table.values()))), fence_generation
+        leader = min(survivors)
+        if leader in detector.stale([leader]) and \
+                getattr(kv, "survives_coordinator", False):
+            live = [r for r in survivors
+                    if r not in detector.stale(survivors)]
+            if live and live[0] == me:
+                g, _ = newest_fence(kv, cfg.namespace)
+                if claim_fence(kv, cfg.namespace, g + 1, me) == me:
+                    fence_generation = g + 1
+                    return _lead_chunk(
+                        kv, cfg, epoch, chunk, me, survivors, detector,
+                        chunk_start, chunk_end, ownership, w, w_new,
+                        fence_generation), fence_generation
+        if time.monotonic() > deadline:
+            leader_stale = leader in detector.stale([leader])
+            raise RuntimeError(
+                f"elastic: no verdict for chunk {chunk} (epoch {epoch}) "
+                f"within {cfg.verdict_timeout_s}s"
+                + (f" — rank {leader} (the verdict issuer) is "
+                   f"heartbeat-stale and this control plane does not "
+                   f"survive the coordinator; losing it is "
+                   f"not survivable in-memory "
+                   f"(cold fallback: checkpoint_dir)" if leader_stale
+                   else ""))
         time.sleep(cfg.poll_interval_s)
 
 
@@ -385,18 +680,48 @@ class ElasticRunResult:
     seconds: float
     process_id: int
     num_processes: int
+    rejoined: bool = False            # this rank departed and came back
+    remesh_overlap_saved_s: float = 0.0   # host rebuild hidden behind
+                                          # the re-mesh barrier wait
 
     @property
     def degraded(self) -> bool:
         return bool(self.events)
 
 
-def _parse_kill_env() -> Optional[Tuple[int, int]]:
+def _parse_kill_env() -> List[Tuple[int, int, bool]]:
+    """[(rank, round, at_barrier), ...] from REPRO_ELASTIC_KILL."""
     raw = os.environ.get(KILL_ENV)
     if not raw:
+        return []
+    out = []
+    for entry in raw.split(","):
+        parts = entry.strip().split(":")
+        if len(parts) not in (2, 3) or (len(parts) == 3
+                                        and parts[2] != "barrier"):
+            raise ValueError(f"bad {KILL_ENV} entry {entry!r} (want "
+                             f"'rank:round' or 'rank:round:barrier')")
+        out.append((int(parts[0]), int(parts[1]), len(parts) == 3))
+    return out
+
+
+def _parse_depart_env() -> Optional[Tuple[int, int, int]]:
+    """(rank, depart_round, rejoin_round) from REPRO_ELASTIC_DEPART."""
+    raw = os.environ.get(DEPART_ENV)
+    if not raw:
         return None
-    rank_s, round_s = raw.split(":")
-    return int(rank_s), int(round_s)
+    rank_s, k1_s, k2_s = raw.split(":")
+    rank, k1, k2 = int(rank_s), int(k1_s), int(k2_s)
+    if k2 <= k1:
+        raise ValueError(f"{DEPART_ENV}={raw!r}: rejoin round must come "
+                         f"after the depart round")
+    return rank, k1, k2
+
+
+def _sigkill_self() -> None:
+    sys.stdout.flush()
+    sys.stderr.flush()
+    os.kill(os.getpid(), signal.SIGKILL)
 
 
 def _survivor_mesh(survivors: Sequence[int], axis: str):
@@ -415,7 +740,8 @@ def _survivor_mesh(survivors: Sequence[int], axis: str):
 def run_mesh_elastic(obj, reg, data, y, w0, cfg, *,
                      ecfg: Optional[ElasticConfig] = None,
                      axis: str = "workers") -> ElasticRunResult:
-    """pSCOPE over a real mesh that SURVIVES losing ranks mid-run.
+    """pSCOPE over a real mesh that SURVIVES losing — and regaining —
+    ranks mid-run.
 
     Every process of the `jax.distributed` job calls this with the same
     arguments (`data`: a committed `ShardStore`, or worker-major
@@ -430,7 +756,8 @@ def run_mesh_elastic(obj, reg, data, y, w0, cfg, *,
     the survivors re-mesh, adopt the orphaned workers' shard extents,
     and resume — the logical worker count p never changes, so the
     returned history matches the uninterrupted p-worker trajectory
-    within fp32 (and is bit-identical across the surviving ranks).
+    within fp32 (and is bit-identical across the surviving ranks; a
+    re-admitted rank's history is the suffix from its resume round).
 
     After a degraded run the process MUST exit via `exit_now` (the
     distributed shutdown barrier would wait forever for the dead rank).
@@ -438,8 +765,11 @@ def run_mesh_elastic(obj, reg, data, y, w0, cfg, *,
     import jax
 
     from repro.core import pscope
-    from repro.launch.mesh import comm_bytes_per_round, stacked_worker_arrays
-    from repro.train.elastic import failure_plan, initial_ownership
+    from repro.launch.mesh import (comm_bytes_per_round,
+                                   prepare_stacked_host_blocks,
+                                   stacked_worker_arrays)
+    from repro.train.elastic import (failure_plan, initial_ownership,
+                                     rebalance_plan)
 
     ecfg = ecfg or ElasticConfig()
     me = int(jax.process_index())
@@ -452,16 +782,18 @@ def run_mesh_elastic(obj, reg, data, y, w0, cfg, *,
         p, d = int(data.p), int(data.d)
     else:
         p, d = int(data.vals.shape[0]), int(data.d)
-    ownership = initial_ownership(p, nprocs)
+    ownership: Ownership = initial_ownership(p, nprocs)
     cfg = dataclasses.replace(cfg, inner_path="lazy")
 
-    kv = DistributedKV() if nprocs > 1 else LocalKV()
+    kv = make_control_plane(ecfg.control, nprocs)
     hb = Heartbeat(kv, ns, me, ecfg.heartbeat_interval_s)
     hb.beat_once()
     hb.start()
     detector = FailureDetector(kv, ns, survivors,
                                ecfg.heartbeat_timeout_s)
-    kill = _parse_kill_env()
+    kills = _parse_kill_env()
+    depart = _parse_depart_env()
+    fence_gen = -1                  # no fencing generation claimed yet
 
     # cold fallback: resume from the newest checkpoint when one exists
     t0_round, w = 0, np.asarray(w0, np.float32)
@@ -482,15 +814,107 @@ def run_mesh_elastic(obj, reg, data, y, w0, cfg, *,
 
     T = cfg.outer_steps
     epoch = 0
-    chunk = 0
     t = t0_round
+    rejoined = False
+    overlap_total = 0.0
     values: List[float] = []
     nnzs: List[int] = []
     events: List[dict] = []
     wall0 = time.perf_counter()
 
+    def rebuild(pending_dead: List[int], pending_join: List[int],
+                boundary: int, resume: int,
+                own_override: Optional[Ownership] = None) -> None:
+        """Re-mesh (possibly repeatedly, if ranks die AT the barrier):
+        update membership + ownership, rebuild mesh and stacked arrays
+        with the host work on a background thread, and record events."""
+        nonlocal survivors, ownership, epoch, mesh, arrays, ckpt, \
+            overlap_total
+        while True:
+            if 0 in pending_dead and \
+                    not getattr(kv, "survives_coordinator", False):
+                raise RuntimeError(
+                    "elastic: rank 0 (the KV coordinator) died — not "
+                    "survivable in-memory on this control plane (cold "
+                    "fallback: checkpoint_dir; survivable alternatives: "
+                    "control='file:...' or an external --service-host)")
+            if me in pending_dead:
+                raise RuntimeError(
+                    f"elastic: rank {me} was itself declared dead by "
+                    f"the verdict (stalled past heartbeat_timeout_s?) "
+                    f"— refusing to split-brain the run")
+            survivors = sorted(
+                set(r for r in survivors if r not in pending_dead)
+                | set(pending_join))
+            if own_override is not None:
+                ownership = dict(own_override)
+                own_override = None
+            else:
+                if pending_dead:
+                    ownership = failure_plan(ownership, pending_dead)
+                if pending_join:
+                    ownership = rebalance_plan(ownership, pending_join)
+            epoch += 1
+            for r, k, at_barrier in kills:
+                if at_barrier and r == me and t < k <= boundary:
+                    _sigkill_self()   # death DURING recovery
+            t_re = time.perf_counter()
+            box: dict = {}
+
+            def bg_build():
+                tb = time.perf_counter()
+                try:
+                    box["blocks"] = prepare_stacked_host_blocks(
+                        ownership, data, y, ranks=[me])
+                except BaseException as e:   # re-raised on the caller
+                    box["err"] = e
+                box["seconds"] = time.perf_counter() - tb
+
+            builder = threading.Thread(target=bg_build, daemon=True,
+                                       name="elastic-rebuild")
+            builder.start()
+            mesh = _survivor_mesh(survivors, axis)
+            t_bar = time.perf_counter()
+            newly_dead = remesh_barrier_checked(kv, ecfg, epoch, me,
+                                                survivors, detector)
+            barrier_s = time.perf_counter() - t_bar
+            builder.join()
+            if "err" in box:
+                raise box["err"]
+            events.append({
+                "round": int(boundary), "resume_round": int(resume),
+                "rounds_to_recover": int(boundary - resume),
+                "dead": sorted(int(r) for r in pending_dead),
+                "joiners": sorted(int(r) for r in pending_join),
+                "epoch": int(epoch),
+                "remesh_seconds": float(time.perf_counter() - t_re),
+                "survivors": list(survivors),
+                "ownership": {int(r): list(ws)
+                              for r, ws in ownership.items()},
+            })
+            if newly_dead:
+                pending_dead, pending_join = list(newly_dead), []
+                continue
+            arrays = stacked_worker_arrays(mesh, axis, ownership,
+                                           host_blocks=box["blocks"])
+            overlap_total += min(box["seconds"], barrier_s)
+            break
+        if me == min(survivors) and ckpt is None and \
+                ecfg.checkpoint_dir and ecfg.checkpoint_every > 0:
+            # checkpoint takeover: the promoted leader carries the
+            # cold-fallback duty forward
+            from repro.train.checkpoint import AsyncCheckpointer
+            ckpt = AsyncCheckpointer(ecfg.checkpoint_dir)
+
     while t < T:
+        chunk = t // ecfg.check_every   # deterministic: a re-admitted
+        # rank derives the same marker/verdict keys as the incumbents
         chunk_len = min(ecfg.check_every, T - t)
+        boundary = t + chunk_len
+        if nprocs > 1 and me == min(survivors):
+            publish_progress(kv, ns, round_=t, epoch=epoch, chunk=chunk,
+                             survivors=survivors, ownership=ownership,
+                             leader=me, fence_generation=fence_gen)
         seg_cfg = dataclasses.replace(cfg, outer_steps=chunk_len)
         vals_g, cols_g, y_g, slots_g, p_total = arrays
         status, w_new, seg_vals, seg_nnz = "ok", None, None, None
@@ -501,18 +925,82 @@ def run_mesh_elastic(obj, reg, data, y, w0, cfg, *,
         except Exception as e:       # noqa: BLE001 — a peer died mid-
             status = f"failed: {e}"  # collective; report, roll back
             print(f"elastic: rank {me} chunk {chunk} (rounds {t}.."
-                  f"{t + chunk_len}) compute failed: {e!r}",
+                  f"{boundary}) compute failed: {e!r}",
                   file=sys.stderr, flush=True)
-        if kill is not None and kill[0] == me and t < kill[1] <= t + chunk_len:
-            # die AFTER the chunk's collectives, BEFORE the marker: the
-            # survivors detect the silence at the barrier, never inside
-            # a psum.  SIGKILL — no atexit, no shutdown barrier.
-            sys.stdout.flush()
-            sys.stderr.flush()
-            os.kill(os.getpid(), signal.SIGKILL)
+        for r, k, at_barrier in kills:
+            if not at_barrier and r == me and t < k <= boundary:
+                # die AFTER the chunk's collectives, BEFORE the marker:
+                # the survivors detect it at the barrier, never inside
+                # a psum.  SIGKILL — no atexit, no shutdown barrier.
+                _sigkill_self()
+
+        if depart is not None and depart[0] == me \
+                and t < depart[1] <= boundary:
+            # -- depart: go protocol-dead, park, then rejoin ----------
+            _, _, rejoin_round = depart
+            depart = None
+            hb.stop()
+            last_round, last_change = -1, time.monotonic()
+            while True:              # parked: watch the leader's beacon
+                prog = read_progress(kv, ns)
+                if prog is not None:
+                    if int(prog["round"]) >= rejoin_round:
+                        break
+                    if int(prog["round"]) != last_round:
+                        last_round = int(prog["round"])
+                        last_change = time.monotonic()
+                if time.monotonic() - last_change > ecfg.verdict_timeout_s:
+                    raise RuntimeError(
+                        f"elastic: rank {me} parked for rejoin at round "
+                        f"{rejoin_round} but the run stopped publishing "
+                        f"progress — it likely finished first")
+                time.sleep(ecfg.poll_interval_s)
+            # announce BEFORE asking for admission: heartbeats must be
+            # advancing again or the barrier would declare us dead
+            hb = Heartbeat(kv, ns, me, ecfg.heartbeat_interval_s)
+            hb.beat_once()
+            hb.start()
+            detector = FailureDetector(kv, ns, range(nprocs),
+                                       ecfg.heartbeat_timeout_s)
+            join_id = f"j{rejoin_round}"
+            kv.set(join_request_key(ns, me), join_id)
+            admit_prefix = f"{ns}/admit/{me}/"
+            deadline = time.monotonic() + ecfg.verdict_timeout_s
+            while True:
+                raw = kv.list(admit_prefix).get(admit_prefix + join_id)
+                if raw is not None:
+                    admit = json.loads(raw)
+                    break
+                if time.monotonic() > deadline:
+                    raise RuntimeError(
+                        f"elastic: rank {me} announced a rejoin but was "
+                        f"never admitted within "
+                        f"{ecfg.verdict_timeout_s}s")
+                time.sleep(ecfg.poll_interval_s)
+            w = np.frombuffer(base64.b64decode(admit["w_b64"]),
+                              np.float32).copy()
+            t = int(admit["resume_round"])
+            epoch = int(admit["epoch_next"]) - 1   # rebuild() adds 1
+            survivors = [int(r) for r in admit["survivors"]]
+            own_new = {int(r): tuple(int(x) for x in ws)
+                       for r, ws in admit["ownership"].items()}
+            if me == min(survivors):
+                # this rank resumes LEADERSHIP (it is the lowest rank
+                # again): take over the newest fencing generation, or
+                # the incumbent promoted leader's fence would read as
+                # fencing us out while everyone else waits on us
+                g, holder = newest_fence(kv, ns)
+                while holder is not None and holder != me:
+                    g += 1
+                    holder = claim_fence(kv, ns, g, me)
+                fence_gen = max(fence_gen, g)
+            values, nnzs = [], []    # history restarts at the suffix
+            rejoined = True
+            rebuild([], [me], boundary=t, resume=t, own_override=own_new)
+            continue
 
         if nprocs == 1:
-            verdict = {"op": "continue", "resume_round": t + chunk_len,
+            verdict = {"op": "continue", "resume_round": boundary,
                        "dead": []}
             if status != "ok":
                 raise RuntimeError(f"elastic single-process chunk failed: "
@@ -520,12 +1008,15 @@ def run_mesh_elastic(obj, reg, data, y, w0, cfg, *,
         else:
             publish_marker(kv, ns, epoch, chunk, me,
                            "ok" if status == "ok" else "failed",
-                           t + chunk_len)
-            if me == survivors[0]:
-                verdict = leader_verdict(kv, ecfg, epoch, chunk, survivors,
-                                         detector, t, t + chunk_len)
+                           boundary)
+            if me == min(survivors):
+                verdict = _lead_chunk(kv, ecfg, epoch, chunk, me,
+                                      survivors, detector, t, boundary,
+                                      ownership, w, w_new, fence_gen)
             else:
-                verdict = follower_verdict(kv, ecfg, epoch, chunk, detector)
+                verdict, fence_gen = _follow_chunk(
+                    kv, ecfg, epoch, chunk, me, survivors, detector, t,
+                    boundary, ownership, w, w_new, fence_gen)
 
         if verdict["op"] == "continue":
             if not values:
@@ -533,28 +1024,18 @@ def run_mesh_elastic(obj, reg, data, y, w0, cfg, *,
                 nnzs.append(int(seg_nnz[0]))
             values.extend(float(v) for v in seg_vals[1:])
             nnzs.extend(int(x) for x in seg_nnz[1:])
-            w, t = w_new, t + chunk_len
-            chunk += 1
-            if ckpt is not None and chunk % ecfg.checkpoint_every == 0:
+            w, t = w_new, boundary
+            if ckpt is not None and chunk % max(1, ecfg.checkpoint_every) \
+                    == 0:
                 ckpt.save(t, {"w": np.asarray(w)},
                           metadata={"round": int(t), "epoch": int(epoch)})
             continue
 
         # --- re-mesh ------------------------------------------------------
-        dead = list(verdict["dead"])
+        dead = [int(r) for r in verdict["dead"]]
+        joiners = [int(r) for r in verdict.get("joiners", [])]
         resume = int(verdict["resume_round"])
-        if 0 in dead:
-            raise RuntimeError("elastic: rank 0 (the KV coordinator) "
-                               "died — not survivable in-memory")
-        t_remesh = time.perf_counter()
-        survivors = [r for r in survivors if r not in dead]
-        ownership = failure_plan(ownership, dead)
-        epoch += 1
-        mesh = _survivor_mesh(survivors, axis)
-        arrays = stacked_worker_arrays(mesh, axis, ownership, data, y)
-        remesh_barrier(kv, ecfg, epoch, me, survivors)
-        remesh_s = time.perf_counter() - t_remesh
-        if resume == t + chunk_len and status == "ok":
+        if resume == boundary and status == "ok" and w_new is not None:
             if not values:
                 values.append(float(seg_vals[0]))
                 nnzs.append(int(seg_nnz[0]))
@@ -562,18 +1043,18 @@ def run_mesh_elastic(obj, reg, data, y, w0, cfg, *,
             nnzs.extend(int(x) for x in seg_nnz[1:])
             w = w_new
         # else: keep the chunk-start iterate (rollback; history untouched)
-        events.append({
-            "round": int(t + chunk_len), "resume_round": resume,
-            "rounds_to_recover": int(t + chunk_len - resume),
-            "dead": dead, "epoch": int(epoch),
-            "remesh_seconds": float(remesh_s),
-            "survivors": list(survivors),
-            "ownership": {int(r): list(ws)
-                          for r, ws in ownership.items()},
-        })
+        own_override = None
+        if "ownership" in verdict:
+            own_override = {int(r): tuple(int(x) for x in ws)
+                            for r, ws in verdict["ownership"].items()}
+        rebuild(dead, joiners, boundary, resume, own_override)
         t = resume
-        chunk += 1
 
+    if nprocs > 1 and me == min(survivors):
+        publish_progress(kv, ns, round_=t, epoch=epoch,
+                         chunk=t // ecfg.check_every, survivors=survivors,
+                         ownership=ownership, leader=me,
+                         fence_generation=fence_gen)
     hb.stop()
     if ckpt is not None:
         ckpt.wait()
@@ -586,7 +1067,9 @@ def run_mesh_elastic(obj, reg, data, y, w0, cfg, *,
         worker_ids=tuple(ownership.get(me, ())),
         survivors=tuple(survivors),
         seconds=time.perf_counter() - wall0,
-        process_id=me, num_processes=nprocs)
+        process_id=me, num_processes=nprocs,
+        rejoined=rejoined,
+        remesh_overlap_saved_s=float(overlap_total))
 
 
 def exit_now(code: int = 0) -> None:

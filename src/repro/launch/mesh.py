@@ -170,7 +170,8 @@ def init_distributed(coordinator: Optional[str] = None,
                      retries: Optional[int] = None,
                      backoff_s: float = 1.0,
                      elastic: bool = False,
-                     service_max_missing_heartbeats: int = 8640
+                     service_max_missing_heartbeats: int = 8640,
+                     external_service: Optional[bool] = None
                      ) -> Dict[str, int]:
     """Bring this process into the `jax.distributed` job (idempotent).
 
@@ -199,6 +200,16 @@ def init_distributed(coordinator: Optional[str] = None,
     keeps the survivors alive.  `service_max_missing_heartbeats`
     (default 8640 == one silent day) is the override.
 
+    `external_service=True` (env ``REPRO_SERVICE_EXTERNAL=1``) declares
+    that the coordination service is hosted OUTSIDE the mesh ranks (a
+    `launch.control.run_service_host` / ``--service-host`` process at
+    `coordinator`).  Rank 0 then brings up a *client only*, like every
+    other rank — the full bring-up path that jax's default initializer
+    cannot express, because it always starts the service inside
+    process 0.  This is what makes coordinator-rank death survivable:
+    the service socket (and with it the KV control plane and gloo's
+    communicator rendezvous) no longer dies with rank 0.
+
     Returns {"process_id": ..., "num_processes": ...} for convenience.
     A second call is a no-op (jax pins distributed state at first use),
     so library code can call this defensively.
@@ -213,6 +224,9 @@ def init_distributed(coordinator: Optional[str] = None,
                                                       120.0))
     if retries is None:
         retries = int(os.environ.get("REPRO_INIT_RETRIES", 3))
+    if external_service is None:
+        external_service = bool(int(os.environ.get(
+            "REPRO_SERVICE_EXTERNAL", "0")))
 
     from jax._src import distributed as _dist
     already = getattr(_dist.global_state, "client", None) is not None
@@ -222,17 +236,62 @@ def init_distributed(coordinator: Optional[str] = None,
             jax.config.update("jax_cpu_collectives_implementation",
                               cpu_collectives)
         if coordinator is not None:
-            _init_with_retries(coordinator, num_processes, process_id,
-                               timeout=initialization_timeout,
-                               retries=max(1, retries), backoff_s=backoff_s,
-                               elastic=elastic,
-                               service_max_missing_heartbeats=
-                               service_max_missing_heartbeats)
+            if external_service:
+                _init_client_only(coordinator, num_processes, process_id,
+                                  timeout=initialization_timeout,
+                                  service_max_missing_heartbeats=
+                                  service_max_missing_heartbeats)
+            else:
+                _init_with_retries(coordinator, num_processes, process_id,
+                                   timeout=initialization_timeout,
+                                   retries=max(1, retries),
+                                   backoff_s=backoff_s, elastic=elastic,
+                                   service_max_missing_heartbeats=
+                                   service_max_missing_heartbeats)
         elif num_processes is not None and num_processes > 1:
             raise ValueError("multi-process init needs a coordinator "
                              "address (host:port)")
     return {"process_id": jax.process_index(),
             "num_processes": jax.process_count()}
+
+
+def _init_client_only(coordinator: str, num_processes, process_id, *,
+                      timeout: float,
+                      service_max_missing_heartbeats: int) -> None:
+    """Join an EXTERNALLY-hosted coordination service: build only the
+    distributed-runtime client and hand it to `global_state`, so this
+    process — rank 0 included — is a peer like any other and its death
+    cannot take the service (KV store, gloo rendezvous) down with it.
+
+    Client heartbeat tolerance is raised to match the service's: the
+    default client would fatally terminate the process when the service
+    reports a peer failure, which is exactly the error propagation the
+    elastic layer replaces with its own chunk-boundary verdicts.
+    """
+    from jax._src import distributed as _dist
+    from jax._src.lib import xla_extension as xe
+
+    if num_processes is None or process_id is None:
+        raise ValueError("external-service init needs explicit "
+                         "num_processes and process_id")
+    gs = _dist.global_state
+    gs.coordinator_address = coordinator
+    gs.num_processes = int(num_processes)
+    gs.process_id = int(process_id)
+    gs.client = xe.get_distributed_runtime_client(
+        coordinator, int(process_id),
+        init_timeout=int(timeout),
+        heartbeat_interval=2,
+        max_missing_heartbeats=service_max_missing_heartbeats,
+        use_compression=True)
+    try:
+        gs.client.connect()
+    except Exception as e:         # noqa: BLE001 — diagnose, then re-raise
+        gs.client = None
+        raise RuntimeError(
+            f"init_distributed: process {process_id} could not join the "
+            f"EXTERNAL coordination service at {coordinator!r} within "
+            f"{timeout:.0f}s — is the --service-host process up?") from e
 
 
 def _init_with_retries(coordinator: str, num_processes, process_id, *,
@@ -335,43 +394,34 @@ def global_worker_array(mesh: Mesh, axis: str,
         (p * n_k,) + tail, sharding, shards)
 
 
-def stacked_worker_arrays(mesh: Mesh, axis: str,
-                          ownership: Mapping[int, Sequence[int]],
-                          data, y=None):
-    """Assemble the stacked uneven-ownership operands for
-    `pscope.run_stacked_scanned`.
+def prepare_stacked_host_blocks(ownership: Mapping[int, Sequence[int]],
+                                data, y=None, *,
+                                ranks: Optional[Sequence[int]] = None):
+    """The HOST half of `stacked_worker_arrays`: open the owned shard
+    extents (`ShardStore.local_slice` offset mmaps — orphan adoption is
+    just a bigger slice), stack each rank's workers into a zero-padded
+    (W_max, n_k, ...) block, and build the -1-padded slot rows.
 
-    `ownership` maps each SURVIVING rank to the worker ids it owns
-    (`train.elastic.failure_plan` output); `mesh` is the 1-D survivor
-    mesh, one device per surviving rank, in ascending-rank order (the
-    order `jax.devices()` preserves when the dead rank's devices are
-    filtered out).  `data` is a `ShardStore` (each host maps only the
-    extents it owns — orphan adoption is just a bigger
-    `store.local_slice`) or a worker-major `CSRMatrix` + labels.
+    Pure numpy, no jax device state touched — safe to run on a
+    background thread.  The elastic driver exploits exactly that:
+    survivors kick this off the moment the re-mesh verdict lands, so
+    the mmap + pad work overlaps the mesh rebuild and the remesh
+    barrier wait instead of serializing after them
+    (`remesh_overlap_saved_s` in the recovery events).
 
-    Every device's owned shards are stacked into a zero-padded
-    (W_max, n_k, ...) block plus an int32 slot→worker-id row (-1 pad);
-    the global (s, W_max, ...) arrays are registered via
-    `jax.make_array_from_single_device_arrays`, so no host ever
-    materializes rows it does not own.  Returns
-    (vals, cols, yg, slots, p_total).
+    `ranks` limits the build to the given ranks' blocks (default: every
+    rank in `ownership` — the single-process case).  Returns an opaque
+    dict for `stacked_worker_arrays(..., host_blocks=...)`.
     """
     from repro.data.sparse import CSRMatrix
     from repro.datasets.shards import ShardStore
     from repro.train.elastic import slot_table
 
-    ranks = sorted(int(r) for r in ownership)
-    ax = mesh.axis_names.index(axis)
-    devs = np.moveaxis(mesh.devices, ax, 0).reshape(mesh.shape[axis], -1)
-    if devs.shape != (len(ranks), 1):
-        raise ValueError(
-            f"the stacked layout needs a 1-D mesh with one device per "
-            f"surviving rank ({len(ranks)} ranks, mesh axis {axis} has "
-            f"shape {devs.shape})")
     slots = slot_table(ownership)
     W = len(next(iter(slots.values())))
     p_total = sum(len(tuple(ws)) for ws in ownership.values())
-    me = jax.process_index()
+    build = sorted(int(r) for r in (ranks if ranks is not None
+                                    else ownership))
 
     if isinstance(data, ShardStore):
         n_k, K = int(data.n_k), int(data.max_nnz)
@@ -394,25 +444,88 @@ def stacked_worker_arrays(mesh: Mesh, axis: str,
         raise ValueError("stacked_worker_arrays needs a ShardStore or a "
                          f"worker-major CSRMatrix, got {type(data)!r}")
 
+    blocks = {}
+    for rank in build:
+        ws = [w for w in slots[rank] if w >= 0]
+        v, c, yk = blocks_for(ws)
+        pad = lambda a, fill, dt: np.concatenate(
+            [np.asarray(a, dt),
+             np.full((W - len(ws),) + a.shape[1:], fill, dt)])[None]
+        blocks[rank] = {
+            "vals": pad(v, 0, np.float32),
+            "cols": pad(c, 0, np.int32),
+            # pad labels with a FINITE value so h'(margin, y) stays
+            # finite on the throwaway pad-slot inner loops (phase 3
+            # masks them out)
+            "y": pad(yk, 1.0, np.float32),
+            "slots": np.asarray(slots[rank], np.int32)[None],
+        }
+    return {"blocks": blocks, "W": W, "n_k": n_k, "K": K,
+            "p_total": p_total,
+            "ownership": {int(r): tuple(int(w) for w in ws)
+                          for r, ws in ownership.items()}}
+
+
+def stacked_worker_arrays(mesh: Mesh, axis: str,
+                          ownership: Mapping[int, Sequence[int]],
+                          data=None, y=None, *, host_blocks=None):
+    """Assemble the stacked uneven-ownership operands for
+    `pscope.run_stacked_scanned`.
+
+    `ownership` maps each SURVIVING rank to the worker ids it owns
+    (`train.elastic.failure_plan` output); `mesh` is the 1-D survivor
+    mesh, one device per surviving rank, in ascending-rank order (the
+    order `jax.devices()` preserves when the dead rank's devices are
+    filtered out).  `data` is a `ShardStore` (each host maps only the
+    extents it owns) or a worker-major `CSRMatrix` + labels.
+
+    Every device's owned shards are stacked into a zero-padded
+    (W_max, n_k, ...) block plus an int32 slot→worker-id row (-1 pad);
+    the global (s, W_max, ...) arrays are registered via
+    `jax.make_array_from_single_device_arrays`, so no host ever
+    materializes rows it does not own.  Returns
+    (vals, cols, yg, slots, p_total).
+
+    `host_blocks` (from `prepare_stacked_host_blocks`, possibly built
+    on a background thread) skips the host-side mmap + pad work; it
+    must have been prepared from the SAME ownership map.
+    """
+    ranks = sorted(int(r) for r in ownership)
+    ax = mesh.axis_names.index(axis)
+    devs = np.moveaxis(mesh.devices, ax, 0).reshape(mesh.shape[axis], -1)
+    if devs.shape != (len(ranks), 1):
+        raise ValueError(
+            f"the stacked layout needs a 1-D mesh with one device per "
+            f"surviving rank ({len(ranks)} ranks, mesh axis {axis} has "
+            f"shape {devs.shape})")
+    me = jax.process_index()
+    if host_blocks is None:
+        need = [r for i, r in enumerate(ranks)
+                if devs[i, 0].process_index == me]
+        host_blocks = prepare_stacked_host_blocks(ownership, data, y,
+                                                  ranks=need)
+    else:
+        want = {int(r): tuple(int(w) for w in sorted(tuple(ws)))
+                for r, ws in ownership.items()}
+        if host_blocks["ownership"] != want:
+            raise ValueError("host_blocks were prepared for a different "
+                             "ownership map — stale background build?")
+    W, n_k, K = host_blocks["W"], host_blocks["n_k"], host_blocks["K"]
+    p_total = host_blocks["p_total"]
+
     sharding = NamedSharding(mesh, P(axis))
     shards = {"vals": [], "cols": [], "y": [], "slots": []}
     for i, rank in enumerate(ranks):
         dev = devs[i, 0]
         if dev.process_index != me:
             continue
-        ws = [w for w in slots[rank] if w >= 0]
-        v, c, yk = blocks_for(ws)
-        pad = lambda a, fill, dt: np.concatenate(
-            [np.asarray(a, dt),
-             np.full((W - len(ws),) + a.shape[1:], fill, dt)])[None]
-        shards["vals"].append(jax.device_put(
-            pad(v, 0, np.float32), dev))
-        shards["cols"].append(jax.device_put(pad(c, 0, np.int32), dev))
-        # pad labels with a FINITE value so h'(margin, y) stays finite
-        # on the throwaway pad-slot inner loops (phase 3 masks them out)
-        shards["y"].append(jax.device_put(pad(yk, 1.0, np.float32), dev))
-        shards["slots"].append(jax.device_put(
-            np.asarray(slots[rank], np.int32)[None], dev))
+        if rank not in host_blocks["blocks"]:
+            raise ValueError(f"host_blocks missing locally-hosted rank "
+                             f"{rank} (have "
+                             f"{sorted(host_blocks['blocks'])})")
+        blk = host_blocks["blocks"][rank]
+        for name in ("vals", "cols", "y", "slots"):
+            shards[name].append(jax.device_put(blk[name], dev))
 
     s = len(ranks)
     mk = jax.make_array_from_single_device_arrays

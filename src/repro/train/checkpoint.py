@@ -25,6 +25,22 @@ import numpy as np
 import jax
 
 
+def atomic_write_text(path: str, text: str) -> None:
+    """Commit `text` to `path` via same-directory temp file + rename —
+    readers never observe a partial value, on local disk or NFS.  The
+    commit discipline shared by checkpoint meta and the file-backed
+    elastic control plane (`launch.control.FileControlPlane`)."""
+    d = os.path.dirname(path) or "."
+    os.makedirs(d, exist_ok=True)
+    tmp = os.path.join(d, f".{os.path.basename(path)}."
+                          f"{os.getpid()}.{threading.get_ident()}.tmp")
+    with open(tmp, "w") as f:
+        f.write(text)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, path)
+
+
 def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
     out = {}
     if isinstance(tree, dict):

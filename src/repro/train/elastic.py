@@ -67,6 +67,25 @@ def initial_ownership(p: int, hosts: int) -> Ownership:
     return out
 
 
+def _validate_partition(owners: Mapping[int, Tuple[int, ...]]) -> int:
+    """Assert `owners` exactly partitions range(p); returns p.
+
+    A worker owned twice, or by nobody, is a correctness bug upstream —
+    better to die loudly than to double-count a shard."""
+    seen: Dict[int, int] = {}
+    for r, ws in owners.items():
+        for w in ws:
+            if w in seen:
+                raise ValueError(f"worker {w} owned by both rank "
+                                 f"{seen[w]} and rank {r}")
+            seen[w] = r
+    p = len(seen)
+    if sorted(seen) != list(range(p)):
+        raise ValueError(f"ownership is not a partition of range({p}): "
+                         f"workers {sorted(seen)}")
+    return p
+
+
 def failure_plan(ownership: Mapping[int, Iterable[int]],
                  dead: Iterable[int]) -> Ownership:
     """Remap the dead ranks' workers onto the survivors.
@@ -79,23 +98,12 @@ def failure_plan(ownership: Mapping[int, Iterable[int]],
     inputs.  Returns the new map over the surviving ranks only.
 
     Raises if the survivors are empty or the input map is not an exact
-    partition (a worker owned twice, or by nobody, is a correctness
-    bug upstream — better to die loudly than to double-count a shard).
+    partition.
     """
     dead_set = set(int(r) for r in dead)
     owners: Ownership = {int(r): tuple(sorted(int(w) for w in ws))
                          for r, ws in ownership.items()}
-    seen: Dict[int, int] = {}
-    for r, ws in owners.items():
-        for w in ws:
-            if w in seen:
-                raise ValueError(f"worker {w} owned by both rank "
-                                 f"{seen[w]} and rank {r}")
-            seen[w] = r
-    p = len(seen)
-    if sorted(seen) != list(range(p)):
-        raise ValueError(f"ownership is not a partition of range({p}): "
-                         f"workers {sorted(seen)}")
+    _validate_partition(owners)
     survivors = sorted(set(owners) - dead_set)
     if not survivors:
         raise ValueError(f"no survivors: all of {sorted(owners)} dead")
@@ -106,7 +114,56 @@ def failure_plan(ownership: Mapping[int, Iterable[int]],
     for w in orphans:
         adopter = min(survivors, key=lambda r: (len(new[r]), r))
         new[adopter].append(w)
-    return {r: tuple(sorted(ws)) for r, ws in new.items()}
+    out = {r: tuple(sorted(ws)) for r, ws in new.items()}
+    _validate_partition(out)
+    return out
+
+
+def rebalance_plan(ownership: Mapping[int, Iterable[int]],
+                   joiners: Iterable[int]) -> Ownership:
+    """The inverse of `failure_plan`: hand workers back to (re)joining
+    ranks — scale the mesh from W survivors up to W + |joiners|.
+
+    Least-disruptive policy: repeatedly move ONE worker from the
+    currently most-loaded incumbent to the currently least-loaded
+    joiner, until no move improves balance (joiners end within one
+    worker of the incumbents).  The donated worker is the incumbent's
+    highest-id worker, so contiguous launch-time blocks erode from the
+    top — deterministic, so every party (leader, survivors, the joiner
+    itself) computes the identical plan from the verdict's (ownership,
+    joiners) inputs with no extra coordination round.
+
+    Like `failure_plan`, validates the exact-partition invariant on the
+    way in and out.  Joining ranks already present in `ownership` are a
+    caller bug; an empty joiner set returns the map unchanged.
+    """
+    owners: Ownership = {int(r): tuple(sorted(int(w) for w in ws))
+                         for r, ws in ownership.items()}
+    p = _validate_partition(owners)
+    join = sorted(set(int(r) for r in joiners))
+    if not join:
+        return owners
+    clash = [r for r in join if r in owners]
+    if clash:
+        raise ValueError(f"joining ranks {clash} already own workers")
+    if p < len(owners) + len(join):
+        raise ValueError(f"cannot give every rank a worker: p={p} "
+                         f"workers over {len(owners) + len(join)} ranks")
+
+    new: Dict[int, list] = {r: list(ws) for r, ws in owners.items()}
+    for r in join:
+        new[r] = []
+    while True:
+        taker = min(join, key=lambda r: (len(new[r]), r))
+        giver = max((r for r in new if r not in join or r != taker),
+                    key=lambda r: (len(new[r]), -r))
+        # stop once moving a worker no longer improves balance
+        if len(new[giver]) - len(new[taker]) <= 1:
+            break
+        new[taker].append(new[giver].pop())
+    out = {r: tuple(sorted(ws)) for r, ws in new.items()}
+    _validate_partition(out)
+    return out
 
 
 def max_workers_per_rank(ownership: Mapping[int, Iterable[int]]) -> int:

@@ -61,10 +61,12 @@ if _os.environ.get("REPRO_HARNESS_HARD_EXIT"):
     # normal interpreter exit would wait forever for the dead peer
     import sys as _sys
     import time as _time
-    if int(_os.environ["REPRO_PROCESS_ID"]) == 0:
+    if int(_os.environ["REPRO_PROCESS_ID"]) == 0 \
+            and not _os.environ.get("REPRO_SERVICE_EXTERNAL"):
         # rank 0 hosts the coordination service: exiting first closes
         # the service socket, which terminates peers that haven't
         # printed their result yet — linger so the followers go first
+        # (with an external --service-host nobody hosts it; no linger)
         _time.sleep(2.0)
     _sys.stdout.flush()
     _sys.stderr.flush()
@@ -103,8 +105,8 @@ def _tail(path: str, limit: int = 1200) -> str:
 
 def run_multihost(num_processes: int, body: str, *, timeout: float = 600.0,
                   devices_per_process: int = 1, env=None,
-                  kill_rank=None, allowed_failures=(), elastic=False,
-                  hard_exit=False):
+                  kill_rank=None, stop_rank=None, allowed_failures=(),
+                  elastic=False, hard_exit=False, service_host=False):
     """Fork `num_processes` ranks running `body`'s ``main()``.
 
     Returns the rank-ordered list of each rank's jsonable return value.
@@ -112,13 +114,20 @@ def run_multihost(num_processes: int, body: str, *, timeout: float = 600.0,
     timeout (all ranks are killed — a deadlocked collective cannot
     stall the suite past `timeout`).
 
-    Each rank's stdout+stderr streams to a temp file, so a timeout
-    failure reports every rank's PARTIAL output — the hung collective's
-    last words — instead of discarding it with the pipes.
+    Each rank's stdout+stderr streams to a temp file, and EVERY failure
+    mode — timeout, non-zero exit, missing result line — attaches every
+    rank's tail to the failure message: the cross-rank context (who
+    died first, whose verdict went missing) is usually the diagnosis,
+    and a child's last words must never be discarded with the pipes.
 
     Fault injection / elastic knobs:
       kill_rank=(rank, after_s)  parent-side timer SIGKILLs that rank
                                  `after_s` seconds into the run
+      stop_rank=(rank, at_s, for_s)
+                                 parent-side timers SIGSTOP that rank
+                                 `at_s` seconds in and SIGCONT it
+                                 `for_s` seconds later — the
+                                 slow-but-alive schedule
       allowed_failures=(ranks,)  ranks whose non-zero exit / missing
                                  result are tolerated (their slot in
                                  the returned list is None); ranks
@@ -130,7 +139,15 @@ def run_multihost(num_processes: int, body: str, *, timeout: float = 600.0,
                                  their result (required when a rank
                                  died: normal exit hangs at the
                                  distributed shutdown barrier)
+      service_host=True          the coordination service runs in an
+                                 EXTRA forked process that never joins
+                                 the mesh; ranks (0 included) connect
+                                 as clients — rank-0 death schedules
+                                 need this, or the service dies with
+                                 its host (launch.control docs)
     """
+    import signal
+
     port = free_port()
     script = _WRAPPER.format(body=textwrap.dedent(body), tag=RESULT_TAG)
     tmpdir = tempfile.mkdtemp(prefix="multihost_")
@@ -142,6 +159,25 @@ def run_multihost(num_processes: int, body: str, *, timeout: float = 600.0,
         extra_common["REPRO_HARNESS_ELASTIC"] = "1"
     if hard_exit:
         extra_common["REPRO_HARNESS_HARD_EXIT"] = "1"
+
+    service = None
+    if service_host:
+        service = subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.multihost",
+             "--service-host", "--coordinator", f"127.0.0.1:{port}",
+             "--num-processes", str(num_processes)],
+            env=_child_env(), stdout=subprocess.PIPE,
+            stderr=subprocess.STDOUT, text=True)
+        up = service.stdout.readline() or ""
+        if "SERVICE-HOST UP" not in up:
+            service.kill()
+            pytest.fail(f"external service host failed to start: {up!r}",
+                        pytrace=False)
+        extra_common["REPRO_SERVICE_EXTERNAL"] = "1"
+        extra_common["REPRO_HARNESS_HARD_EXIT"] = "1"   # no rank hosts
+        # the service, so nobody needs to linger — but the shutdown
+        # barrier would still hang on any schedule that kills a rank
+
     for rank in range(num_processes):
         rank_env = _child_env(extra={
             "REPRO_COORDINATOR": f"127.0.0.1:{port}",
@@ -156,7 +192,7 @@ def run_multihost(num_processes: int, body: str, *, timeout: float = 600.0,
             stdout=sink, stderr=subprocess.STDOUT, text=True))
 
     killed = set()
-    timer = None
+    timers = []
     if kill_rank is not None:
         victim, after_s = kill_rank
 
@@ -164,8 +200,24 @@ def run_multihost(num_processes: int, body: str, *, timeout: float = 600.0,
             killed.add(victim)
             procs[victim].kill()          # SIGKILL: no goodbye, no flush
 
-        timer = threading.Timer(after_s, _fire)
-        timer.start()
+        timers.append(threading.Timer(after_s, _fire))
+    if stop_rank is not None:
+        sr, at_s, for_s = stop_rank
+
+        def _sig(signum):
+            if procs[sr].poll() is None:
+                procs[sr].send_signal(signum)
+
+        timers.append(threading.Timer(at_s, _sig, (signal.SIGSTOP,)))
+        timers.append(threading.Timer(at_s + for_s, _sig,
+                                      (signal.SIGCONT,)))
+    for t in timers:
+        t.start()
+
+    def all_tails(limit: int = 1200) -> str:
+        return "\n".join(
+            f"--- rank {r} (exit {procs[r].returncode}) output ---\n"
+            f"{_tail(logs[r], limit)}" for r in range(num_processes))
 
     deadline = time.monotonic() + timeout
     try:
@@ -176,20 +228,24 @@ def run_multihost(num_processes: int, body: str, *, timeout: float = 600.0,
             proc.wait(timeout=left)
     except subprocess.TimeoutExpired:
         for proc in procs:
+            proc.send_signal(signal.SIGCONT)   # un-stop before the kill
             proc.kill()
         for proc in procs:
             proc.wait()
-        tails = "\n".join(
-            f"--- rank {r} (exit {procs[r].returncode}) partial output "
-            f"---\n{_tail(logs[r])}" for r in range(num_processes))
-        pytest.fail(f"multihost job ({num_processes} ranks) hung past "
-                    f"{timeout}s; killed all ranks\n{tails}",
-                    pytrace=False)
-    finally:
-        if timer is not None:
-            timer.cancel()
         for sink in sinks:
             sink.close()
+        pytest.fail(f"multihost job ({num_processes} ranks) hung past "
+                    f"{timeout}s; killed all ranks; partial output:\n"
+                    f"{all_tails()}", pytrace=False)
+    finally:
+        for t in timers:
+            t.cancel()
+        for sink in sinks:
+            if not sink.closed:
+                sink.close()
+        if service is not None:
+            service.kill()
+            service.communicate()
 
     allowed = set(allowed_failures) | killed
     results = []
@@ -204,9 +260,10 @@ def run_multihost(num_processes: int, body: str, *, timeout: float = 600.0,
                            if lines else None)
             continue
         assert proc.returncode == 0, (
-            f"rank {rank} exited {proc.returncode}:\n{out[-2500:]}")
+            f"rank {rank} exited {proc.returncode}:\n{out[-2500:]}\n\n"
+            f"all ranks:\n{all_tails()}")
         assert lines, (f"rank {rank} produced no {RESULT_TAG!r} line:\n"
-                       f"{out[-2500:]}")
+                       f"{out[-2500:]}\n\nall ranks:\n{all_tails()}")
         results.append(json.loads(lines[-1][len(RESULT_TAG):]))
     return results
 

@@ -1,0 +1,586 @@
+"""Chaos-schedule fault harness tests: the coordinator-survivable
+control plane, scale-up re-admission, and declarative fault scripts.
+
+Protocol machinery (FileControlPlane, fencing, rebalance_plan, chaos
+grammar, ElasticConfig validation, leader promotion) is exercised
+in-process with tiny timeouts; every named fault SCHEDULE then runs as
+a real forked multi-process job through `tests/distributed_harness`:
+
+  * kill a non-coordinator rank     (test_elastic.py's acceptance test)
+  * kill the coordinator            -> survivors promote a new verdict
+                                       issuer (no cold restart)
+  * kill then rejoin                -> the revived rank is re-admitted
+                                       at a chunk boundary and ends the
+                                       run owning shards
+  * two cascading kills             -> two re-mesh events, last rank
+                                       finishes alone
+  * death DURING the re-mesh barrier-> the recovery itself re-meshes
+                                       (no deadlock)
+  * SIGSTOP a rank briefly          -> slow-but-alive: NO re-mesh, the
+                                       run just waits
+
+Acceptance bar for every schedule: the surviving trajectory equals the
+uninterrupted `run_scanned` reference within fp32.
+"""
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from distributed_harness import ROOT, multihost, run_multihost
+from test_multihost import FIXTURE_D, FIXTURE_KW, _build_store
+
+from repro.launch.control import (FileControlPlane, LocalControlPlane,
+                                  claim_fence, make_control_plane,
+                                  newest_fence, publish_progress,
+                                  read_progress, validate_control_spec)
+from repro.launch.elastic import (ElasticConfig, FailureDetector,
+                                  Heartbeat, LocalKV, _follow_chunk,
+                                  publish_marker)
+from repro.launch.multihost import chaos_env, parse_chaos, validate_chaos
+from repro.train.elastic import (failure_plan, initial_ownership,
+                                 rebalance_plan)
+
+# chaos schedules need room for a death AND a rejoin: 8 rounds
+CHAOS_KW = dict(FIXTURE_KW, outer_steps=8)
+
+
+@pytest.fixture(scope="module")
+def store(tmp_path_factory):
+    return _build_store(str(tmp_path_factory.mktemp("chaos-store")))
+
+
+@pytest.fixture(scope="module")
+def reference_trace(store):
+    """Uninterrupted single-process trajectory, 8 rounds."""
+    import jax.numpy as jnp
+
+    from repro.core import LOGISTIC, PScopeConfig, Regularizer
+    from repro.core.pscope import run_scanned
+
+    cfg = PScopeConfig(**CHAOS_KW, inner_path="lazy")
+    _, values, nnz = run_scanned(LOGISTIC, Regularizer(1e-3, 1e-3),
+                                 store.csr_p, np.asarray(store.yp),
+                                 jnp.zeros(store.d), cfg)
+    return values, nnz
+
+
+# ---------------------------------------------------------------------------
+# ElasticConfig validation (construction-time knob rejection)
+# ---------------------------------------------------------------------------
+
+def test_elastic_config_rejects_nonpositive_check_every():
+    with pytest.raises(ValueError, match="check_every"):
+        ElasticConfig(check_every=0)
+
+
+def test_elastic_config_rejects_undetectable_heartbeat_timeout():
+    """A timeout at or below the publish interval can never observe a
+    stale counter — no death would ever be detected."""
+    with pytest.raises(ValueError, match="heartbeat_timeout_s"):
+        ElasticConfig(heartbeat_interval_s=1.0, heartbeat_timeout_s=1.0)
+
+
+def test_elastic_config_rejects_verdict_below_marker_timeout():
+    with pytest.raises(ValueError, match="verdict_timeout_s"):
+        ElasticConfig(marker_timeout_s=6.0, verdict_timeout_s=5.0)
+    # equality is allowed (the hard deadline merely coincides)
+    ElasticConfig(heartbeat_timeout_s=0.1, heartbeat_interval_s=0.02,
+                  marker_timeout_s=0.15, verdict_timeout_s=0.15)
+
+
+def test_elastic_config_rejects_verdict_below_heartbeat_timeout():
+    with pytest.raises(ValueError, match="heartbeat_timeout_s"):
+        ElasticConfig(heartbeat_timeout_s=10.0, marker_timeout_s=1.0,
+                      verdict_timeout_s=8.0)
+
+
+def test_elastic_config_rejects_negative_checkpoint_every():
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        ElasticConfig(checkpoint_every=-1)
+
+
+def test_elastic_config_rejects_bad_control_spec():
+    with pytest.raises(ValueError):
+        ElasticConfig(control="carrier-pigeon")
+    with pytest.raises(ValueError):
+        ElasticConfig(control="file:")
+    ElasticConfig(control="file:/tmp/x")
+    ElasticConfig(control="local")
+    ElasticConfig(control="kv")
+
+
+def test_validate_control_spec_accepts_none():
+    validate_control_spec(None)
+    with pytest.raises(ValueError):
+        validate_control_spec("smoke-signals")
+
+
+# ---------------------------------------------------------------------------
+# FileControlPlane: atomic commits + first-write-wins claims
+# ---------------------------------------------------------------------------
+
+def test_file_control_plane_set_list_delete(tmp_path):
+    cp = FileControlPlane(str(tmp_path))
+    cp.set("ns/e0/done/c0/1", json.dumps({"status": "ok"}))
+    cp.set("ns/e0/done/c0/2", "x")
+    cp.set("ns/e0/done/c1/1", "y")
+    table = cp.list("ns/e0/done/c0/")
+    assert sorted(table) == ["ns/e0/done/c0/1", "ns/e0/done/c0/2"]
+    assert json.loads(table["ns/e0/done/c0/1"]) == {"status": "ok"}
+    cp.delete("ns/e0/done/c0/1")
+    assert sorted(cp.list("ns/e0/done/c0/")) == ["ns/e0/done/c0/2"]
+    assert cp.survives_coordinator    # the whole point of the backend
+
+
+def test_file_control_plane_set_overwrites(tmp_path):
+    cp = FileControlPlane(str(tmp_path))
+    cp.set("ns/k", "1")
+    cp.set("ns/k", "2")
+    assert cp.list("ns/")["ns/k"] == "2"
+
+
+def test_file_control_plane_try_claim_first_wins(tmp_path):
+    cp = FileControlPlane(str(tmp_path))
+    assert cp.try_claim("ns/verdict/v", "first") == "first"
+    assert cp.try_claim("ns/verdict/v", "second") == "first"
+    assert cp.list("ns/verdict/")["ns/verdict/v"] == "first"
+
+
+def test_file_control_plane_try_claim_race_single_winner(tmp_path):
+    """32 threads race one claim key: exactly one value wins and every
+    racer observes the SAME winner — the property the fenced verdict
+    protocol rides on."""
+    cp = FileControlPlane(str(tmp_path))
+    results = [None] * 32
+    barrier = threading.Barrier(32)
+
+    def racer(i):
+        barrier.wait()
+        results[i] = cp.try_claim("race/v", f"claim-{i}")
+
+    threads = [threading.Thread(target=racer, args=(i,))
+               for i in range(32)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(set(results)) == 1
+    assert results[0] in {f"claim-{i}" for i in range(32)}
+
+
+def test_make_control_plane_dispatch(tmp_path):
+    assert isinstance(make_control_plane("local", 4), LocalControlPlane)
+    assert isinstance(make_control_plane(f"file:{tmp_path}", 4),
+                      FileControlPlane)
+    # single-process "kv" degrades to the in-memory store (no
+    # jax.distributed job to talk to)
+    assert isinstance(make_control_plane("kv", 1), LocalControlPlane)
+    assert isinstance(make_control_plane(None, 1), LocalControlPlane)
+
+
+# ---------------------------------------------------------------------------
+# Fencing generations
+# ---------------------------------------------------------------------------
+
+def test_fence_claim_and_newest():
+    cp = LocalControlPlane()
+    assert newest_fence(cp, "ns") == (-1, None)
+    assert claim_fence(cp, "ns", 0, rank=1) == 1
+    assert claim_fence(cp, "ns", 0, rank=2) == 1    # first wins
+    assert newest_fence(cp, "ns") == (0, 1)
+    assert claim_fence(cp, "ns", 1, rank=2) == 2
+    assert newest_fence(cp, "ns") == (1, 2)
+
+
+def test_fence_generations_on_file_plane(tmp_path):
+    cp = FileControlPlane(str(tmp_path))
+    claim_fence(cp, "run", 0, rank=3)
+    claim_fence(cp, "run", 1, rank=0)
+    assert newest_fence(cp, "run") == (1, 0)
+
+
+# ---------------------------------------------------------------------------
+# rebalance_plan (the scale-up inverse of failure_plan)
+# ---------------------------------------------------------------------------
+
+def test_rebalance_plan_round_trip_after_failure():
+    own = initial_ownership(4, 3)            # {0:(0,1), 1:(2,), 2:(3,)}
+    shrunk = failure_plan(own, [2])          # {0:(0,1), 1:(2,3)}
+    grown = rebalance_plan(shrunk, [2])
+    # the rejoined rank ends up OWNING a worker again
+    assert grown[2], f"rejoined rank owns nothing: {grown}"
+    assert sorted(w for ws in grown.values() for w in ws) == [0, 1, 2, 3]
+    assert grown == {0: (0,), 1: (2, 3), 2: (1,)}
+
+
+def test_rebalance_plan_noop_without_joiners():
+    own = initial_ownership(6, 2)
+    assert rebalance_plan(own, []) == own
+
+
+def test_rebalance_plan_balances_within_one_worker():
+    own = {0: (0, 1, 2, 3, 4, 5)}
+    grown = rebalance_plan(own, [1, 2])
+    sizes = sorted(len(ws) for ws in grown.values())
+    assert max(sizes) - min(sizes) <= 1
+    assert sorted(w for ws in grown.values() for w in ws) == list(range(6))
+
+
+def test_rebalance_plan_deterministic():
+    own = failure_plan(initial_ownership(8, 4), [1, 3])
+    assert rebalance_plan(own, [3, 1]) == rebalance_plan(own, [1, 3])
+
+
+def test_rebalance_plan_rejects_clashing_joiner():
+    with pytest.raises(ValueError, match="already own"):
+        rebalance_plan(initial_ownership(4, 2), [1])
+
+
+def test_rebalance_plan_rejects_more_ranks_than_workers():
+    with pytest.raises(ValueError, match="cannot give every rank"):
+        rebalance_plan(initial_ownership(2, 2), [2])
+
+
+# ---------------------------------------------------------------------------
+# Chaos grammar + validation + env translation
+# ---------------------------------------------------------------------------
+
+def test_parse_chaos_grammar():
+    chaos = parse_chaos("kill:1@2,kill-coordinator@3,depart:4@5,"
+                        "rejoin:4@6,stop:2@1.5:0.5")
+    assert chaos["kills"] == [(1, 2, False), (0, 3, False)]
+    assert chaos["departs"] == {4: 5}
+    assert chaos["rejoins"] == {4: 6}
+    assert chaos["stops"] == [(2, 1.5, 0.5)]
+
+
+def test_parse_chaos_barrier_kill():
+    assert parse_chaos("kill:2@4:barrier")["kills"] == [(2, 4, True)]
+
+
+def test_parse_chaos_bare_rejoin_infers_rank():
+    chaos = parse_chaos("kill:2@3,rejoin@5")
+    assert chaos["rejoins"] == {2: 5}
+    with pytest.raises(SystemExit):
+        parse_chaos("kill:1@2,kill:2@3,rejoin@5")    # ambiguous
+    with pytest.raises(SystemExit):
+        parse_chaos("rejoin@5")                      # no candidate
+
+
+def test_parse_chaos_rejects_bad_events():
+    for bad in ("explode:1@2", "kill:x@2", "stop:1@2", "kill:1"):
+        with pytest.raises(SystemExit):
+            parse_chaos(bad)
+
+
+def test_validate_chaos_rejects_out_of_schedule_rounds():
+    with pytest.raises(SystemExit, match="outside"):
+        validate_chaos(parse_chaos("kill:1@6"), num_processes=3,
+                       rounds=6, hb_timeout=4.0)
+    with pytest.raises(SystemExit, match="out of range"):
+        validate_chaos(parse_chaos("kill:7@2"), num_processes=3,
+                       rounds=6, hb_timeout=4.0)
+
+
+def test_validate_chaos_rejects_bad_rejoin_ordering():
+    with pytest.raises(SystemExit, match="strictly between"):
+        validate_chaos(parse_chaos("kill:1@4,rejoin@3"),
+                       num_processes=3, rounds=8, hb_timeout=4.0)
+    with pytest.raises(SystemExit, match="without a kill"):
+        validate_chaos(parse_chaos("kill:1@2,rejoin:2@4"),
+                       num_processes=3, rounds=8, hb_timeout=4.0)
+
+
+def test_validate_chaos_rejects_depart_without_rejoin():
+    with pytest.raises(SystemExit, match="no matching"):
+        validate_chaos(parse_chaos("depart:1@2"), num_processes=3,
+                       rounds=8, hb_timeout=4.0)
+
+
+def test_validate_chaos_rejects_stop_reaching_heartbeat_timeout():
+    with pytest.raises(SystemExit, match="declared dead"):
+        validate_chaos(parse_chaos("stop:1@2:5"), num_processes=3,
+                       rounds=8, hb_timeout=4.0)
+
+
+def test_chaos_env_translation():
+    from repro.launch.elastic import DEPART_ENV, KILL_ENV
+
+    env = chaos_env(parse_chaos("kill:1@2,kill:2@4:barrier"))
+    assert env[KILL_ENV] == "1:2,2:4:barrier"
+    assert DEPART_ENV not in env
+
+    env = chaos_env(parse_chaos("kill:2@3,rejoin@5"))
+    assert env[DEPART_ENV] == "2:3:5"
+    assert KILL_ENV not in env
+
+    env = chaos_env(parse_chaos("kill-coordinator@2,rejoin:0@4,kill:2@6"))
+    assert env[DEPART_ENV] == "0:2:4"
+    assert env[KILL_ENV] == "2:6"
+
+
+# ---------------------------------------------------------------------------
+# Leader promotion (in-process, tiny timeouts)
+# ---------------------------------------------------------------------------
+
+def test_follower_promotes_itself_when_leader_goes_stale():
+    """Rank 0 (leader) dies before issuing the chunk verdict; rank 1 —
+    the lowest LIVE survivor on a coordinator-survivable plane — claims
+    the next fencing generation and issues the verdict itself, naming
+    rank 0 dead."""
+    kv = LocalKV()
+    cfg = ElasticConfig(check_every=1, heartbeat_interval_s=0.02,
+                        heartbeat_timeout_s=0.1, marker_timeout_s=0.15,
+                        verdict_timeout_s=5.0, poll_interval_s=0.01,
+                        namespace="t")
+    hb1 = Heartbeat(kv, "t", rank=1, interval_s=0.02)
+    hb1.beat_once()
+    hb1.start()
+    try:
+        det = FailureDetector(kv, "t", [0, 1], timeout_s=0.1)
+        publish_marker(kv, "t", 0, 0, rank=1, status="ok", round_end=1)
+        own = initial_ownership(2, 2)
+        verdict, gen = _follow_chunk(
+            kv, cfg, epoch=0, chunk=0, me=1, survivors=[0, 1],
+            detector=det, chunk_start=0, chunk_end=1, ownership=own,
+            w=np.zeros(2, np.float32), w_new=np.ones(2, np.float32),
+            fence_generation=-1)
+    finally:
+        hb1.stop()
+    assert verdict["op"] == "remesh" and verdict["dead"] == [0]
+    assert gen == 0                       # promoted at generation 0
+    assert newest_fence(kv, "t") == (0, 1)
+    # the verdict was CLAIMED (visible to every other survivor)
+    assert kv.list("t/e0/verdict/c0/")
+
+
+def test_zombie_ex_leader_obeys_the_fencers_verdict():
+    """A fenced-out ex-leader must abdicate: its claim attempt returns
+    the newer generation's verdict, not its own."""
+    from repro.launch.elastic import _claim_verdict
+
+    kv = LocalKV()
+    cfg = ElasticConfig(namespace="t", marker_timeout_s=1.0,
+                        verdict_timeout_s=5.0)
+    claim_fence(kv, "t", 0, rank=1)       # rank 1 promoted meanwhile
+    kv.set("t/e0/verdict/c0/v",
+           json.dumps({"op": "remesh", "resume_round": 2, "dead": [0]}))
+    won = _claim_verdict(kv, cfg, epoch=0, chunk=0, me=0,
+                         verdict={"op": "continue", "resume_round": 2,
+                                  "dead": []},
+                         my_generation=-1, survivors=[0, 1])
+    assert won["dead"] == [0]             # the fencer's verdict, not ours
+
+
+def test_progress_beacon_round_trip():
+    cp = LocalControlPlane()
+    own = initial_ownership(4, 2)
+    publish_progress(cp, "ns", round_=6, epoch=1, chunk=3,
+                     survivors=[0, 1], ownership=own, leader=0,
+                     fence_generation=-1)
+    prog = read_progress(cp, "ns")
+    assert prog["round"] == 6 and prog["epoch"] == 1
+    assert prog["ownership"] == {0: (0, 1), 1: (2, 3)}
+    assert read_progress(cp, "empty") is None
+
+
+# ---------------------------------------------------------------------------
+# Forked schedules (real multi-process jax.distributed jobs)
+# ---------------------------------------------------------------------------
+
+def _chaos_body(store_root: str, control: str, *, ckpt: str = "None",
+                extra_ecfg: str = "") -> str:
+    return f"""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import Regularizer, LOGISTIC, PScopeConfig
+        from repro.launch.elastic import ElasticConfig, run_mesh_elastic
+        from repro.datasets.shards import open_store
+
+        def main():
+            store = open_store({store_root!r})
+            cfg = PScopeConfig(**{CHAOS_KW!r}, inner_path="lazy")
+            ecfg = ElasticConfig(check_every=2, heartbeat_interval_s=0.2,
+                                 heartbeat_timeout_s=2.0,
+                                 marker_timeout_s=3.0,
+                                 control={control!r},
+                                 checkpoint_dir={ckpt}{extra_ecfg})
+            res = run_mesh_elastic(LOGISTIC, Regularizer(1e-3, 1e-3),
+                                   store, None, jnp.zeros(store.d), cfg,
+                                   ecfg=ecfg)
+            return {{"rank": res.process_id,
+                     "survivors": list(res.survivors),
+                     "owned": list(res.worker_ids),
+                     "values": res.values.tolist(),
+                     "nnz": res.nnz.tolist(),
+                     "events": list(res.events),
+                     "epoch": res.epoch,
+                     "rejoined": res.rejoined,
+                     "overlap": res.remesh_overlap_saved_s}}
+    """
+
+
+def _assert_matches_reference(values, reference_trace):
+    v_ref, _ = reference_trace
+    assert len(values) == len(v_ref)
+    np.testing.assert_allclose(values, v_ref, rtol=1e-5, atol=1e-5)
+
+
+def test_forked_kill_coordinator_survivors_promote(
+        store, reference_trace, tmp_path, multihost):
+    """Rank 0 — the coordination-service host's USUAL home — SIGKILLs
+    itself mid-run.  With the file control plane and an external
+    service host, the survivors promote rank 1 to verdict issuer,
+    re-mesh, and finish IN MEMORY: no cold checkpoint_dir fallback."""
+    results = multihost(
+        3, _chaos_body(str(store.root), f"file:{tmp_path}/control"),
+        elastic=True, hard_exit=True, service_host=True,
+        allowed_failures=(0,),
+        env={"REPRO_ELASTIC_KILL": "0:3"}, timeout=600)
+
+    assert results[0] is None
+    r1, r2 = results[1], results[2]
+    assert r1["survivors"] == r2["survivors"] == [1, 2]
+    (e1,), (e2,) = r1["events"], r2["events"]
+    assert ({k: v for k, v in e1.items() if k != "remesh_seconds"}
+            == {k: v for k, v in e2.items() if k != "remesh_seconds"})
+    assert e1["dead"] == [0] and e1["epoch"] == 1
+    # every one of the p workers is owned by a survivor
+    assert sorted(r1["owned"] + r2["owned"]) == list(range(4))
+    assert r1["values"] == r2["values"]
+    _assert_matches_reference(r1["values"], reference_trace)
+
+
+def test_forked_kill_then_rejoin_readmits_the_rank(
+        store, reference_trace, tmp_path, multihost):
+    """Rank 2 goes protocol-dead at round 4 (the park/revive simulation
+    of a host loss), is re-meshed out, announces itself at round 4, and
+    is re-admitted at the next chunk boundary: the run scales W -> W+1
+    without restart, the rejoined rank ends the run OWNING a shard, and
+    its trajectory is the survivors' suffix."""
+    results = multihost(
+        3, _chaos_body(str(store.root), f"file:{tmp_path}/control"),
+        elastic=True, hard_exit=True,
+        env={"REPRO_ELASTIC_DEPART": "2:3:4"}, timeout=600)
+
+    r0, r1, r2 = results
+    assert r0["survivors"] == r1["survivors"] == r2["survivors"] \
+        == [0, 1, 2]
+    assert not r0["rejoined"] and r2["rejoined"]
+
+    # the survivors saw a death THEN a re-admission
+    assert [e["dead"] for e in r0["events"]] == [[2], []]
+    assert [e["joiners"] for e in r0["events"]] == [[], [2]]
+    # the rejoined rank ends the run owning shards (asserted via events
+    # AND its own worker_ids)
+    final = r0["events"][-1]
+    assert final["ownership"]["2"], (
+        f"rejoined rank owns nothing: {final}")
+    assert r2["owned"] == final["ownership"]["2"]
+    assert sorted(r0["owned"] + r1["owned"] + r2["owned"]) \
+        == list(range(4))
+
+    # full-run survivors: bit-identical, fp32-equal to the reference
+    assert r0["values"] == r1["values"]
+    _assert_matches_reference(r0["values"], reference_trace)
+    # the rejoiner's history is the SUFFIX from its resume round: the
+    # first entry (objective at the resume round) is recomputed on the
+    # rejoined mesh, so fp32-close; the rest bit-identical
+    suffix, full = r2["values"], r0["values"]
+    assert 0 < len(suffix) < len(full)
+    tail = full[len(full) - len(suffix):]
+    np.testing.assert_allclose(suffix, tail, rtol=1e-5, atol=1e-5)
+    assert suffix[1:] == tail[1:]
+
+
+def test_forked_two_cascading_kills(store, reference_trace, tmp_path,
+                                    multihost):
+    """Two sequential non-coordinator deaths: two re-mesh events, the
+    last survivor finishes alone owning every shard."""
+    results = multihost(
+        3, _chaos_body(str(store.root), f"file:{tmp_path}/control"),
+        elastic=True, hard_exit=True, allowed_failures=(1, 2),
+        env={"REPRO_ELASTIC_KILL": "1:2,2:4"}, timeout=600)
+
+    assert results[1] is None and results[2] is None
+    r0 = results[0]
+    assert r0["survivors"] == [0] and r0["epoch"] == 2
+    assert [e["dead"] for e in r0["events"]] == [[1], [2]]
+    assert r0["owned"] == [0, 1, 2, 3]
+    _assert_matches_reference(r0["values"], reference_trace)
+
+
+def test_forked_death_during_remesh_barrier_converges(
+        store, reference_trace, tmp_path, multihost):
+    """Rank 1 dies at a chunk boundary; rank 2 obeys the re-mesh
+    verdict but dies right BEFORE the re-mesh barrier.  The
+    leader-verdicted barrier detects the second corpse, re-meshes
+    AGAIN instead of deadlocking, and rank 0 finishes alone."""
+    results = multihost(
+        3, _chaos_body(str(store.root), f"file:{tmp_path}/control"),
+        elastic=True, hard_exit=True, allowed_failures=(1, 2),
+        env={"REPRO_ELASTIC_KILL": "1:3,2:3:barrier"}, timeout=600)
+
+    r0 = results[0]
+    assert r0["survivors"] == [0] and r0["epoch"] == 2
+    # both re-mesh events anchor at the SAME chunk boundary: the second
+    # is the barrier-death cascade, not new progress
+    assert [e["dead"] for e in r0["events"]] == [[1], [2]]
+    assert r0["events"][0]["round"] == r0["events"][1]["round"]
+    assert r0["owned"] == [0, 1, 2, 3]
+    _assert_matches_reference(r0["values"], reference_trace)
+
+
+def test_forked_sigstop_slow_rank_is_not_declared_dead(
+        store, reference_trace, tmp_path, multihost):
+    """A rank SIGSTOPped for LESS than the heartbeat timeout is slow,
+    not dead: the run must finish clean — no re-mesh, full membership,
+    reference trajectory."""
+    results = multihost(
+        3, _chaos_body(str(store.root), f"file:{tmp_path}/control"),
+        elastic=True, hard_exit=True, stop_rank=(1, 6.0, 1.0),
+        timeout=600)
+
+    assert all(r["events"] == [] for r in results)
+    assert all(r["survivors"] == [0, 1, 2] for r in results)
+    assert results[0]["values"] == results[1]["values"] \
+        == results[2]["values"]
+    _assert_matches_reference(results[0]["values"], reference_trace)
+
+
+def test_multihost_cli_chaos_rejoin(tmp_path):
+    """The `--chaos` CLI leg end-to-end: kill rank 2, rejoin it, verify
+    the suffix re-admission and the survivor trace."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.multihost", "--spawn", "3",
+         "--demo", "--elastic", "--verify",
+         "--chaos", "kill:2@3,rejoin@4",
+         "--rounds", "8", "--check-every", "2",
+         "--workdir", str(tmp_path / "demo")],
+        env=env, capture_output=True, text=True, timeout=480)
+    assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-3000:]
+    assert "VERIFY OK" in proc.stdout
+    assert "REJOIN OK: rank 2" in proc.stdout
+    assert "CHAOS OK" in proc.stdout
+    assert "SPAWN OK" in proc.stdout
+
+
+def test_multihost_cli_rejects_invalid_chaos(tmp_path):
+    """Satellite: the CLI validates fault schedules up front instead of
+    hanging a run that can never do what was asked."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.multihost", "--spawn", "3",
+         "--demo", "--chaos", "kill:1@99", "--rounds", "6",
+         "--workdir", str(tmp_path / "demo")],
+        env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode != 0
+    assert "outside" in proc.stderr

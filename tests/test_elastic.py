@@ -500,6 +500,50 @@ def test_pscope_elastic_solver_matches_lazy_and_records_events():
                   for w in ws) == list(range(4))
 
 
+def test_pscope_elastic_solver_rejoin_matches_lazy():
+    from repro.core import LOGISTIC, Regularizer, solvers
+    from repro.core.partition import build_partition
+    from repro.core.solvers import SolverConfig
+    from repro.data.synthetic import make_sparse_classification
+
+    X, y, _ = make_sparse_classification(256, 32, density=0.3, seed=1)
+    part = build_partition("uniform", X, y, 4)
+    kw = dict(rounds=6, inner_epochs=1.0)
+    tr_e = solvers.run("pscope_elastic", LOGISTIC, Regularizer(1e-3, 1e-3),
+                       part, SolverConfig(**kw, extras={"hosts": 4,
+                                                        "fail_at": 2,
+                                                        "fail_ranks": [3],
+                                                        "rejoin_at": 4}))
+    tr_l = solvers.run("pscope_lazy", LOGISTIC, Regularizer(1e-3, 1e-3),
+                       part, SolverConfig(**kw))
+    # the kill AND the re-admission are both placement-only
+    np.testing.assert_allclose(tr_e.values, tr_l.values,
+                               rtol=1e-6, atol=1e-6)
+    fail_ev, join_ev = tr_e.meta["elastic"]["events"]
+    assert fail_ev["dead"] == [3] and fail_ev["joiners"] == []
+    assert join_ev["round"] == 4 and join_ev["joiners"] == [3]
+    assert join_ev["dead"] == [] and join_ev["epoch"] == 2
+    # the rejoined rank ends up owning workers again
+    assert join_ev["ownership"][3]
+    assert sorted(w for ws in join_ev["ownership"].values()
+                  for w in ws) == list(range(4))
+
+
+def test_pscope_elastic_solver_rejects_bad_rejoin_round():
+    from repro.core import LOGISTIC, Regularizer, solvers
+    from repro.core.partition import build_partition
+    from repro.core.solvers import SolverConfig
+    from repro.data.synthetic import make_sparse_classification
+
+    X, y, _ = make_sparse_classification(128, 16, density=0.3, seed=2)
+    part = build_partition("uniform", X, y, 2)
+    with pytest.raises(ValueError, match="rejoin_at"):
+        solvers.run("pscope_elastic", LOGISTIC, Regularizer(1e-3, 1e-3),
+                    part, SolverConfig(rounds=4, inner_epochs=0.5,
+                                       extras={"fail_at": 2,
+                                               "rejoin_at": 2}))
+
+
 def test_pscope_elastic_solver_rejects_bad_fail_round():
     from repro.core import LOGISTIC, Regularizer, solvers
     from repro.core.partition import build_partition
