@@ -38,7 +38,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import time_fn
+from benchmarks.common import bench_row, time_fn
+from repro import obs
 from repro.core import plan as plan_mod
 from repro.core.prox import Regularizer
 from repro.core.pscope import (_inner_loop, _lazy_inner_loop,
@@ -58,32 +59,24 @@ REG = Regularizer(1e-4, 1e-4)
 ETA = 0.3
 
 
+# The dense/lazy/fused per-epoch traffic models now live in
+# `repro.obs.roofline.inner_epoch_bytes` — shared verbatim with the
+# device-side `bytes_moved` counter in core.pscope, so the bench rows
+# and the in-run counters cannot drift apart.
+
 def _bytes_dense(d: int, nnz: int) -> int:
-    """Per-epoch HBM model: each step reads the (d,) X row (dense view of
-    the instance), u, w_anchor, z and writes u -> (b + 4) reads + 1
-    write of d floats."""
-    return M * (BATCH + 4 + 1) * d * 4
+    return int(obs.roofline.inner_epoch_bytes("dense", d=d, M=M,
+                                              b=BATCH, k=nnz))
 
 
 def _bytes_lazy(d: int, nnz: int) -> int:
-    """Per-epoch model for the PR-2 scan: each step moves ~6
-    gather/scatter passes over the b*nnz touched entries (vals+cols
-    reads, u/z/w gathers, u writes, last stamps) plus the final O(d)
-    catch-up (u, z, last reads + u write)."""
-    per_step = BATCH * nnz * (2 + 6) * 4
-    final = 4 * d * 4
-    return M * per_step + final
+    return int(obs.roofline.inner_epoch_bytes("lazy", d=d, M=M,
+                                              b=BATCH, k=nnz))
 
 
 def _bytes_fused(d: int, nnz: int) -> int:
-    """Per-epoch model for the fused engine: per step ONE u gather +
-    ONE u scatter over the b*nnz touched entries (plan rows + values
-    stream in once), plus the one-shot plan build (~3 passes over the
-    M*b*nnz touch sequence) and the final O(d) catch-up."""
-    per_step = BATCH * nnz * (2 + 2) * 4
-    plan = 3 * M * BATCH * nnz * 4
-    final = 3 * d * 4
-    return M * per_step + plan + final
+    return int(obs.roofline.inner_epoch_bytes("fused", d=d, M=M,
+                                              b=BATCH, k=nnz))
 
 
 def bench_point(d: int, density: float, seed: int = 0,
@@ -137,24 +130,33 @@ def bench_point(d: int, density: float, seed: int = 0,
     t_auto = t_dense if picked == "dense" else t_fused
 
     tag = f"d{d}/rho{density:g}"
+    # rows go through bench_row so each carries a real pct_peak (the
+    # modeled bytes against THIS host's measured roofline) next to the
+    # same bytes_moved string the CSV has always printed
+    b_auto = _bytes_dense(d, nnz) if picked == "dense" \
+        else _bytes_fused(d, nnz)
     return [
-        {"name": f"inner_loop/dense/{tag}",
-         "us_per_call": f"{t_dense * 1e6:.0f}",
-         "derived": f"bytes_moved={_bytes_dense(d, nnz)};M={M};nnz={nnz}"},
-        {"name": f"inner_loop/lazy/{tag}",
-         "us_per_call": f"{t_lazy * 1e6:.0f}",
-         "derived": (f"bytes_moved={_bytes_lazy(d, nnz)};M={M};nnz={nnz};"
-                     f"speedup_vs_dense={t_dense / max(t_lazy, 1e-12):.2f}x")},
-        {"name": f"inner_loop/fused/{tag}",
-         "us_per_call": f"{t_fused * 1e6:.0f}",
-         "derived": (f"bytes_moved={_bytes_fused(d, nnz)};M={M};nnz={nnz};"
-                     f"speedup_vs_dense={t_dense / max(t_fused, 1e-12):.2f}x;"
-                     f"speedup_vs_lazy={t_lazy / max(t_fused, 1e-12):.2f}x")},
-        {"name": f"inner_loop/auto/{tag}",
-         "us_per_call": f"{t_auto * 1e6:.0f}",
-         "derived": (f"picked={picked};M={M};nnz={nnz};"
-                     f"speedup_vs_dense={t_dense / max(t_auto, 1e-12):.2f}x;"
-                     f"speedup_vs_lazy={t_lazy / max(t_auto, 1e-12):.2f}x")},
+        bench_row(
+            f"inner_loop/dense/{tag}", t_dense,
+            f"bytes_moved={_bytes_dense(d, nnz)};M={M};nnz={nnz}",
+            bytes_moved=_bytes_dense(d, nnz)),
+        bench_row(
+            f"inner_loop/lazy/{tag}", t_lazy,
+            (f"bytes_moved={_bytes_lazy(d, nnz)};M={M};nnz={nnz};"
+             f"speedup_vs_dense={t_dense / max(t_lazy, 1e-12):.2f}x"),
+            bytes_moved=_bytes_lazy(d, nnz)),
+        bench_row(
+            f"inner_loop/fused/{tag}", t_fused,
+            (f"bytes_moved={_bytes_fused(d, nnz)};M={M};nnz={nnz};"
+             f"speedup_vs_dense={t_dense / max(t_fused, 1e-12):.2f}x;"
+             f"speedup_vs_lazy={t_lazy / max(t_fused, 1e-12):.2f}x"),
+            bytes_moved=_bytes_fused(d, nnz)),
+        bench_row(
+            f"inner_loop/auto/{tag}", t_auto,
+            (f"picked={picked};M={M};nnz={nnz};"
+             f"speedup_vs_dense={t_dense / max(t_auto, 1e-12):.2f}x;"
+             f"speedup_vs_lazy={t_lazy / max(t_auto, 1e-12):.2f}x"),
+            bytes_moved=b_auto),
     ]
 
 

@@ -4,19 +4,31 @@ CSV emission (`name,us_per_call,derived`).
 All figures sweep the `core.solvers` registry; `trace_row` turns the
 `Trace` a registry run returns into one CSV row so every figure reports
 the same derived metrics (final gap, time/comm-to-eps, rounds, NNZ).
+
+`bench_row` / `stamp_row` is the one place the machine-readable row
+schema lives: every row that lands in a BENCH_*.json trail carries the
+host fingerprint, backend, timestamp, and (when the caller supplies a
+byte/FLOP model) a `pct_peak` roofline annotation against the
+*measured* host machine — so a perf-trail diff across PRs can tell a
+code regression from a container change.
 """
 from __future__ import annotations
 
+import datetime
+import functools
+import platform
+import re
 import time
-from typing import Dict, List
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import LOGISTIC, LASSO
-from repro.core.baselines.fista import fista_history
 from repro.core.partition import build_partition
+from repro.core.baselines.fista import fista_history
 from repro.core.solvers import Trace
 from repro.data.synthetic import make_dataset
 
@@ -113,3 +125,85 @@ def emit(rows: List[Dict]):
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}")
+
+
+# --------------------------------------------------------------------------
+# machine-readable row schema (BENCH_*.json trails)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def _fingerprint() -> Dict[str, Any]:
+    dev = jax.devices()[0]
+    host = obs.roofline.host_machine()
+    return {
+        "host": platform.node() or platform.machine(),
+        "machine": platform.machine(),
+        "backend": dev.platform,
+        "device": getattr(dev, "device_kind", str(dev)),
+        "device_count": jax.device_count(),
+        "jax": jax.__version__,
+        "roofline_machine": host.name,
+        "host_peak_gbps": round(host.hbm_bw / 1e9, 1),
+        "host_peak_gflops": round(host.peak_flops / 1e9, 1),
+    }
+
+
+def host_fingerprint() -> Dict[str, Any]:
+    """Who measured these numbers: hostname, arch, jax backend/device,
+    and the micro-benchmarked peak rates of this host (the denominator
+    of every `pct_peak` in the same file).  Cached per process."""
+    return dict(_fingerprint())
+
+
+_BYTES_RE = re.compile(r"bytes_moved=([0-9]+(?:\.[0-9]+)?)")
+
+
+def stamp_row(row: Dict[str, Any], *, bytes_moved: float = 0.0,
+              flops: float = 0.0, seconds: Optional[float] = None,
+              machine=None) -> Dict[str, Any]:
+    """Return `row` stamped with the shared perf-trail schema: host +
+    backend identity, a UTC timestamp, and a `pct_peak` roofline
+    annotation (None when the row carries no byte/FLOP model to
+    compute one from).  Existing keys win — a suite that computed its
+    own pct_peak is not second-guessed.
+
+    When `bytes_moved` is not passed, the row's `derived` string is
+    scanned for the conventional ``bytes_moved=N`` term, so legacy
+    rows pick up real annotations with no per-suite changes.
+    """
+    out = dict(row)
+    fp = host_fingerprint()
+    out.setdefault("host", fp["host"])
+    out.setdefault("backend", fp["backend"])
+    out.setdefault("device", fp["device"])
+    out.setdefault("timestamp", datetime.datetime.now(
+        datetime.timezone.utc).isoformat(timespec="seconds"))
+    if "pct_peak" not in out:
+        if seconds is None:
+            try:
+                seconds = float(out.get("us_per_call", "")) / 1e6
+            except (TypeError, ValueError):
+                seconds = None
+        if not bytes_moved:
+            m = _BYTES_RE.search(str(out.get("derived", "")))
+            if m:
+                bytes_moved = float(m.group(1))
+        if seconds and (bytes_moved or flops):
+            rl = obs.roofline.pct_peak(seconds=seconds,
+                                       bytes_moved=bytes_moved,
+                                       flops=flops, machine=machine)
+            out["pct_peak"] = round(rl["pct_peak"], 6)
+            out["roofline_bound"] = rl["bound"]
+        else:
+            out["pct_peak"] = None
+    return out
+
+
+def bench_row(name: str, seconds: float, derived: str = "", *,
+              bytes_moved: float = 0.0, flops: float = 0.0,
+              machine=None, **extra) -> Dict[str, Any]:
+    """Build one fully-stamped perf-trail row from a measured time."""
+    row = {"name": name, "us_per_call": f"{seconds * 1e6:.0f}",
+           "derived": derived, **extra}
+    return stamp_row(row, bytes_moved=bytes_moved, flops=flops,
+                     seconds=seconds, machine=machine)

@@ -42,39 +42,50 @@ def solver_configs(n_k: int) -> Dict[str, SolverConfig]:
     }
 
 
+# --smoke: the telemetry CI leg — just enough work to light up the
+# ingest -> partition -> solve span chain in a trace, not a benchmark
+SMOKE_SOLVERS = ("pscope", "pscope_lazy")
+SMOKE_CFG = SolverConfig(rounds=3, eta=1.2, inner_epochs=1.0)
+
+
 def run_dataset(ds: str, model: str, scale: float = 0.05,
-                registry: bool = False) -> List[Dict]:
+                registry: bool = False, smoke: bool = False) -> List[Dict]:
     build = build_registry_problem if registry else build_partitioned_problem
     obj, reg, part = build(ds, model, p=P_WORKERS, scale=scale)
     p_star = reference_optimum(obj, reg, part.X, part.y)
     cfgs = solver_configs(part.n_k)
     rows = []
     for name in solvers.available():
+        if smoke and name not in SMOKE_SOLVERS:
+            continue
         if name == "pscope_mesh" and jax.device_count() < part.p:
             # needs one device per worker (real meshes / forced-device
             # runs); benchmarks/bench_comm.py covers it in a child
             continue
-        cfg = cfgs.get(name, SolverConfig(rounds=30))
+        cfg = SMOKE_CFG if smoke else cfgs.get(name, SolverConfig(rounds=30))
         trace = solvers.run(name, obj, reg, part, cfg)
         rows.append(trace_row(trace, f"fig1/{ds}/{model}", p_star, EPS))
     return rows
 
 
-def main(full: bool = False, dataset: str = None) -> List[Dict]:
+def main(full: bool = False, dataset: str = None,
+         smoke: bool = False) -> List[Dict]:
     if dataset is not None:
         # a `repro.datasets` registry name ("rcv1-like", ...): the data
         # arrives through the real LIBSVM parse -> mmap shard path, and
         # the model follows the profile's task
         from repro import datasets as registry
         return run_dataset(dataset, registry.get(dataset).model,
-                           scale=0.05, registry=True)
+                           scale=0.05, registry=True, smoke=smoke)
     rows = []
     datasets = ["cov", "rcv1"] + (["avazu", "kdd2012"] if full else [])
+    if smoke:
+        datasets = datasets[:1]
     for ds in datasets:
         for model in ("logistic", "lasso"):
             rows.extend(run_dataset(ds, model,
                                     scale=0.05 if ds in ("cov", "rcv1")
-                                    else 0.02))
+                                    else 0.02, smoke=smoke))
     return rows
 
 

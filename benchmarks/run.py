@@ -50,7 +50,14 @@ def write_json(rows, path) -> None:
     `path` overrides the destination when exactly one trail matched
     (the historical --json PATH behavior); with several trails matched
     the per-trail default filenames are used.
+
+    Schema bench-rows/v2: every row is stamped through
+    `benchmarks.common.stamp_row` — host fingerprint, backend,
+    timestamp, and a `pct_peak` roofline annotation (None when the row
+    carries no byte model) — and the file carries one shared
+    `host` block so a trail diff can tell code from container.
     """
+    from benchmarks.common import host_fingerprint, stamp_row
     matched = {}
     for prefix, default_path in JSON_TRAILS.items():
         trail_rows = [r for r in rows if r["name"].startswith(prefix)]
@@ -64,14 +71,15 @@ def write_json(rows, path) -> None:
         return
     for default_path, trail_rows in matched.items():
         out = path if (path and len(matched) == 1) else default_path
+        trail_rows = [stamp_row(r) for r in trail_rows]
         us = {}
         for r in trail_rows:
             try:
                 us[r["name"]] = float(r.get("us_per_call", ""))
             except (TypeError, ValueError):
                 continue
-        doc = {"schema": "bench-rows/v1", "us_per_call": us,
-               "rows": trail_rows}
+        doc = {"schema": "bench-rows/v2", "us_per_call": us,
+               "host": host_fingerprint(), "rows": trail_rows}
         with open(out, "w") as f:
             json.dump(doc, f, indent=2, sort_keys=True)
             f.write("\n")
@@ -95,6 +103,12 @@ def main() -> None:
                     help="run fig1/table2 on a repro.datasets registry "
                          "dataset (e.g. rcv1-like): real LIBSVM text "
                          "through the mmap ingestion path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fast cells (CI): fig1 runs two solvers "
+                         "few rounds, lazy_inner one small cell")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the run's telemetry spans/counters as "
+                         "Chrome-trace JSON (Perfetto-loadable)")
     args = ap.parse_args()
 
     if args.list_solvers:
@@ -107,13 +121,15 @@ def main() -> None:
                             bench_shard_codec, bench_comm, bench_elastic)
     suites = [
         ("fig1", lambda: fig1_convergence.main(full=args.full,
-                                               dataset=args.dataset)),
+                                               dataset=args.dataset,
+                                               smoke=args.smoke)),
         ("table2", lambda: table2_timing.main(dataset=args.dataset)),
         ("fig2a", fig2a_speedup.main),
         ("fig2b", fig2b_partition.main),
         ("recovery", recovery_bench.main),
         ("roofline", roofline_report.main),
-        ("lazy_inner", lambda: bench_lazy_inner.main(full=args.full)),
+        ("lazy_inner", lambda: bench_lazy_inner.main(full=args.full,
+                                                     smoke=args.smoke)),
         ("partition", lambda: bench_partition.main(full=args.full)),
         ("ingest", lambda: bench_ingest.main(full=args.full)),
         ("ingest_codec", lambda: bench_shard_codec.main(full=args.full)),
@@ -136,6 +152,12 @@ def main() -> None:
               f"{r.get('derived', '')}")
     if args.json is not None:
         write_json(rows, args.json or None)
+    if args.trace_out:
+        from repro import obs
+        obs.write_trace(args.trace_out)
+        print(f"wrote {args.trace_out} "
+              f"({len(obs.get_collector().events())} telemetry events)",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -321,7 +321,7 @@ def epoch_gathers(h_prime, w_anchor: Array, z: Array, vals_k: Array,
 #   step math), two O(d) tails (final catch-up, plan delivery), and a
 #   fixed per-step dispatch floor — and its small working set stays
 #   cache-resident at every d in the sweep.
-_LAZY_SLOT_US = 0.30      # per touched slot per epoch (plan + scan)
+_LAZY_SLOT_US = 0.15      # per touched slot per epoch (plan + scan)
 _LAZY_DIM_US = 0.04       # per coordinate (final catch-up + qf delivery)
 _LAZY_STEP_US = 15.0      # per inner step (scan dispatch floor)
 

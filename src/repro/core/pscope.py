@@ -64,6 +64,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import plan as plan_mod
+from repro.obs import roofline as obs_roofline
 from repro.core import svrg
 from repro.core.prox import Regularizer, prox_elastic_net
 from repro.core.recovery import recovery_catch_up
@@ -80,6 +81,19 @@ NNZ_TOL = 1e-8   # |w_i| above this counts as a nonzero (Section 7.3)
 # loops are collective-free.  `launch.mesh.comm_bytes_per_round` turns
 # this into the analytic bytes-on-wire figure the mesh driver records.
 COMM_ALLREDUCES_PER_ROUND = 2
+
+# Device-side per-round counters carried through the scan when
+# `run_scanned(..., counters=True)`: cumulative over rounds, one f32
+# per name, surfaced post-hoc as `core.solvers.Trace.counters`.
+#   bytes_moved — modeled inner-epoch traffic summed over workers
+#                 (obs.roofline.inner_epoch_bytes; static per round)
+#   catch_up    — Lemma-11 catch-up replays actually executed: the sum
+#                 of the epoch plan's per-slot staleness counts q
+#   prox_skip   — autonomous prox steps deferred to the end-of-epoch
+#                 final catch-up (the plan's q_f residuals)
+#   comm_bytes  — the analytic CALL wire bytes, 2 d-vector all-reduces
+#                 per round (matches launch.mesh.comm_bytes_per_round)
+COUNTER_NAMES = ("bytes_moved", "catch_up", "prox_skip", "comm_bytes")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +118,12 @@ class PScopeState(NamedTuple):
     w: Array          # global iterate (d,)
     t: Array          # outer step counter
     key: Array
+    # cumulative telemetry counters, (len(COUNTER_NAMES),) f32, or None
+    # (the default: counter-free states are pytree-identical to the
+    # pre-telemetry layout, so every existing caller is untouched).
+    # Never feeds back into w/key — the iterate path is bit-identical
+    # with counters on or off.
+    ctr: Optional[Array] = None
 
 
 def init_state(w0: Array, seed: int = 0) -> PScopeState:
@@ -174,9 +194,14 @@ def _lazy_inner_loop(h_prime: Callable, reg: Regularizer, eta: float,
                      u0: Array, w_anchor: Array, z: Array,
                      vals_k: Array, cols_k: Array, yk: Array,
                      idx: Array,
-                     statics: Optional[plan_mod.ShardStatics] = None
-                     ) -> Array:
+                     statics: Optional[plan_mod.ShardStatics] = None,
+                     with_stats: bool = False):
     """M fused inner steps touching only each microbatch's columns.
+
+    `with_stats=True` additionally returns a (2,) f32 of this epoch's
+    plan-derived work counters — (sum of catch-up replays q, sum of
+    final-catch-up residuals q_f) — read straight off the already-built
+    `EpochPlan`, so the iterate math is untouched (see COUNTER_NAMES).
 
     All catch-up bookkeeping — which columns each step touches, how
     many autonomous prox steps each must replay (Lemma 11), which slots
@@ -211,17 +236,20 @@ def _lazy_inner_loop(h_prime: Callable, reg: Regularizer, eta: float,
     eplan = plan_mod.build_epoch_plan(cols_k, idx, d, statics)
     gathers = plan_mod.epoch_gathers(h_prime, w_anchor, z, vals_k, yk, idx,
                                      eplan.cflat, statics)
-    return ops.fused_lazy_epoch(u0, z, eplan, gathers, h_prime=h_prime,
-                                eta=eta, lam1=reg.lam1, lam2=reg.lam2,
-                                inner_batch=idx.shape[1])
+    u = ops.fused_lazy_epoch(u0, z, eplan, gathers, h_prime=h_prime,
+                             eta=eta, lam1=reg.lam1, lam2=reg.lam2,
+                             inner_batch=idx.shape[1])
+    if not with_stats:
+        return u
+    return u, _epoch_plan_stats(eplan)
 
 
 def _lazy_inner_loop_enc(h_prime: Callable, reg: Regularizer, eta: float,
                          u0: Array, w_anchor: Array, z: Array,
                          vals16_k: Array, colb_k: Array, dcols_k: Array,
                          nnz_k: Array, yk: Array, idx: Array,
-                         statics: Optional[plan_mod.ShardStatics] = None
-                         ) -> Array:
+                         statics: Optional[plan_mod.ShardStatics] = None,
+                         with_stats: bool = False):
     """`_lazy_inner_loop` over an ENCODED shard (datasets codec leaves).
 
     The decode is fused into the epoch, not materialized up front:
@@ -246,9 +274,18 @@ def _lazy_inner_loop_enc(h_prime: Callable, reg: Regularizer, eta: float,
     eplan = plan_mod.build_epoch_plan(cols_k, idx, d, statics)
     gathers = plan_mod.epoch_gathers(h_prime, w_anchor, z, vals16_k, yk,
                                      idx, eplan.cflat, statics)
-    return ops.fused_lazy_epoch(u0, z, eplan, gathers, h_prime=h_prime,
-                                eta=eta, lam1=reg.lam1, lam2=reg.lam2,
-                                inner_batch=idx.shape[1])
+    u = ops.fused_lazy_epoch(u0, z, eplan, gathers, h_prime=h_prime,
+                             eta=eta, lam1=reg.lam1, lam2=reg.lam2,
+                             inner_batch=idx.shape[1])
+    if not with_stats:
+        return u
+    return u, _epoch_plan_stats(eplan)
+
+
+def _epoch_plan_stats(eplan) -> Array:
+    """(catch_up, prox_skip) for one epoch, read off the gather plan."""
+    return jnp.stack([jnp.sum(eplan.q.astype(jnp.float32)),
+                      jnp.sum(eplan.qf.astype(jnp.float32))])
 
 
 def _lazy_inner_loop_ref(h_prime: Callable, reg: Regularizer, eta: float,
@@ -398,8 +435,33 @@ def _outer_step_core(obj: Objective, reg: Regularizer, cfg: PScopeConfig,
         Xp, yp, idx)
 
     # --- phase 3: cooperative averaging (the second "all-reduce") ---------
+    ctr = state.ctr
+    if ctr is not None:
+        d = w_t.shape[0]
+        ctr = ctr + _round_counter_increment(
+            "dense", d=d, p=p, k=d, cfg=cfg,
+            catch_up=jnp.zeros((), jnp.float32),
+            prox_skip=jnp.zeros((), jnp.float32))
     return PScopeState(w=_average(u_final, participation), t=state.t + 1,
-                       key=key)
+                       key=key, ctr=ctr)
+
+
+def _round_counter_increment(path: str, *, d: int, p: int, k: int,
+                             cfg: PScopeConfig, catch_up: Array,
+                             prox_skip: Array) -> Array:
+    """One outer round's (len(COUNTER_NAMES),) counter increment.
+
+    bytes_moved and comm_bytes are static analytic constants (the same
+    models BENCH_inner_loop / BENCH_comm pin), so only the two plan
+    sums are live device values — the counter carry costs two scalar
+    reductions per round and nothing else.
+    """
+    per_worker = obs_roofline.inner_epoch_bytes(
+        path, d=d, M=cfg.inner_steps, b=cfg.inner_batch, k=k)
+    return jnp.stack([
+        jnp.full((), p * per_worker, jnp.float32),
+        catch_up, prox_skip,
+        jnp.full((), COMM_ALLREDUCES_PER_ROUND * d * 4.0, jnp.float32)])
 
 
 def _outer_step_lazy_core(obj: Objective, reg: Regularizer,
@@ -437,36 +499,48 @@ def _outer_step_lazy_core(obj: Objective, reg: Regularizer,
         lambda k: svrg.sample_microbatches(k, n_k, cfg.inner_steps,
                                            cfg.inner_batch)
     )(jax.random.split(k_idx, p))
+    want_stats = state.ctr is not None
     if encoded:
         inner = functools.partial(_lazy_inner_loop_enc, h_prime, reg,
-                                  cfg.eta)
+                                  cfg.eta, with_stats=want_stats)
         if statics is None:
-            u_final = jax.vmap(
+            out = jax.vmap(
                 lambda v16, cb, dc, nz, yk, ixk: inner(
                     w_t, w_t, z, v16, cb, dc, nz, yk, ixk))(
                     csr_p.vals16, csr_p.colb, csr_p.dcols, csr_p.row_nnz,
                     yp, idx)
         else:
-            u_final = jax.vmap(
+            out = jax.vmap(
                 lambda v16, cb, dc, nz, yk, ixk, st: inner(
                     w_t, w_t, z, v16, cb, dc, nz, yk, ixk, statics=st))(
                     csr_p.vals16, csr_p.colb, csr_p.dcols, csr_p.row_nnz,
                     yp, idx, statics)
     else:
-        inner = functools.partial(_lazy_inner_loop, h_prime, reg, cfg.eta)
+        inner = functools.partial(_lazy_inner_loop, h_prime, reg, cfg.eta,
+                                  with_stats=want_stats)
         if statics is None:
-            u_final = jax.vmap(
+            out = jax.vmap(
                 lambda v, c, yk, ixk: inner(w_t, w_t, z, v, c, yk, ixk))(
                     csr_p.vals, csr_p.cols, yp, idx)
         else:
-            u_final = jax.vmap(
+            out = jax.vmap(
                 lambda v, c, yk, ixk, st: inner(w_t, w_t, z, v, c, yk, ixk,
                                                 statics=st))(
                     csr_p.vals, csr_p.cols, yp, idx, statics)
 
     # --- phase 3: cooperative averaging -----------------------------------
+    ctr = state.ctr
+    if want_stats:
+        u_final, stats_w = out          # stats_w: (p, 2) per-worker sums
+        stats = jnp.sum(stats_w, axis=0)
+        k_w = (csr_p.vals16.shape[-1] if encoded else csr_p.vals.shape[-1])
+        ctr = ctr + _round_counter_increment(
+            "fused", d=d, p=p, k=k_w, cfg=cfg,
+            catch_up=stats[0], prox_skip=stats[1])
+    else:
+        u_final = out
     return PScopeState(w=_average(u_final, participation), t=state.t + 1,
-                       key=key)
+                       key=key, ctr=ctr)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2))
@@ -596,7 +670,7 @@ def _scan_with_recording(step_fn, record, state, parts, T: int,
     if record_every == 1:
         def body(st, part_t):
             st2 = step_fn(st, part_t)
-            return st2, record(st2.w)
+            return st2, record(st2)
         return jax.lax.scan(body, state, parts, length=T)
 
     full, rem = divmod(T, record_every)
@@ -609,7 +683,7 @@ def _scan_with_recording(step_fn, record, state, parts, T: int,
 
     def chunk(st, part_chunk):
         st, _ = jax.lax.scan(inner, st, part_chunk, length=record_every)
-        return st, record(st.w)
+        return st, record(st)
 
     state, recs = jax.lax.scan(chunk, state, parts_main, length=full)
     state, _ = jax.lax.scan(inner, state, parts_rem, length=rem)
@@ -620,17 +694,21 @@ def _scan_with_recording(step_fn, record, state, parts, T: int,
 # hyperparameter sweep must not accumulate them unboundedly
 @functools.lru_cache(maxsize=32)
 def _sim_trajectory_fn(obj: Objective, reg: Regularizer, cfg: PScopeConfig,
-                       record_every: int = 1):
+                       record_every: int = 1, with_counters: bool = False):
     """Compiled T-round simulation trajectory, cached per (obj, reg, cfg,
-    record_every)."""
+    record_every, with_counters)."""
     lazy = cfg.inner_path == "lazy"
 
     def trajectory(w0, key0, Xp, yp, parts, statics):
         obj_val = _objective_value_device(obj, reg, Xp, yp)
-        state = PScopeState(w=w0, t=jnp.zeros((), jnp.int32), key=key0)
+        ctr0 = (jnp.zeros((len(COUNTER_NAMES),), jnp.float32)
+                if with_counters else None)
+        state = PScopeState(w=w0, t=jnp.zeros((), jnp.int32), key=key0,
+                            ctr=ctr0)
 
-        def record(w):
-            return obj_val(w), jnp.sum(jnp.abs(w) > NNZ_TOL)
+        def record(st):
+            base = (obj_val(st.w), jnp.sum(jnp.abs(st.w) > NNZ_TOL))
+            return base + (st.ctr,) if with_counters else base
 
         def step_fn(st, part_t):
             if lazy:
@@ -638,7 +716,14 @@ def _sim_trajectory_fn(obj: Objective, reg: Regularizer, cfg: PScopeConfig,
                                              part_t, statics)
             return _outer_step_core(obj, reg, cfg, st, Xp, yp, part_t)
 
-        v0, nnz0 = record(state.w)
+        if with_counters:
+            v0, nnz0, c0 = record(state)
+            state, (vals, nnzs, ctrs) = _scan_with_recording(
+                step_fn, record, state, parts, cfg.outer_steps, record_every)
+            return (state.w, jnp.concatenate([v0[None], vals]),
+                    jnp.concatenate([nnz0[None], nnzs]),
+                    jnp.concatenate([c0[None], ctrs]))
+        v0, nnz0 = record(state)
         state, (vals, nnzs) = _scan_with_recording(
             step_fn, record, state, parts, cfg.outer_steps, record_every)
         return (state.w, jnp.concatenate([v0[None], vals]),
@@ -652,7 +737,8 @@ def _sim_trajectory_fn(obj: Objective, reg: Regularizer, cfg: PScopeConfig,
 def run_scanned(obj: Objective, reg: Regularizer, Xp, yp: Array, w0: Array,
                 cfg: PScopeConfig,
                 participation_schedule: Optional[Callable] = None,
-                record_every: int = 1, start_round: int = 0):
+                record_every: int = 1, start_round: int = 0,
+                counters: bool = False):
     """The zero-sync simulation driver: T outer rounds in ONE compiled
     program.
 
@@ -672,13 +758,24 @@ def run_scanned(obj: Objective, reg: Regularizer, Xp, yp: Array, w0: Array,
 
     Returns (w_T, values, nnz) — numpy arrays of T // record_every + 1
     entries, index 0 being the initial (round start_round) iterate.
+
+    `counters=True` additionally carries the (len(COUNTER_NAMES),)
+    telemetry counters through the scan and returns them as a fourth
+    (records, 4) cumulative array — same single host transfer, same
+    values/NNZ bits (the counters never touch the iterate path; the
+    added cost is two scalar plan reductions per round).
     """
     cfg, Xp, yp, statics = _prepare_sim(obj, reg, Xp, yp, cfg)
     p = yp.shape[0]
     parts = _stack_participation(participation_schedule, cfg.outer_steps, p)
-    compiled = _sim_trajectory_fn(obj, reg, cfg, record_every)
+    compiled = _sim_trajectory_fn(obj, reg, cfg, record_every,
+                                  bool(counters))
     w0d = jnp.array(w0, dtype=jnp.float32, copy=True)
     key0 = advance_key(jax.random.PRNGKey(cfg.seed), start_round)
+    if counters:
+        w, values, nnzs, ctrs = compiled(w0d, key0, Xp, yp, parts, statics)
+        return (np.asarray(w), np.asarray(values), np.asarray(nnzs),
+                np.asarray(ctrs))
     w, values, nnzs = compiled(w0d, key0, Xp, yp, parts, statics)
     return np.asarray(w), np.asarray(values), np.asarray(nnzs)
 
@@ -911,13 +1008,13 @@ def _distributed_trajectory_fn(obj: Objective, reg: Regularizer,
         state = PScopeState(w=w0, t=jnp.zeros((), jnp.int32), key=key0)
         obj_val = _objective_value_device(obj, reg, X, y)
 
-        def record(w):
-            return obj_val(w), jnp.sum(jnp.abs(w) > NNZ_TOL)
+        def record(st):
+            return obj_val(st.w), jnp.sum(jnp.abs(st.w) > NNZ_TOL)
 
         def step_fn(st, _):
             return step_core(st, X, y, statics)
 
-        v0, nnz0 = record(state.w)
+        v0, nnz0 = record(state)
         state, (vals, nnzs) = _scan_with_recording(
             step_fn, record, state, None, cfg.outer_steps, record_every)
         return (state.w, jnp.concatenate([v0[None], vals]),
@@ -1115,14 +1212,14 @@ def _stacked_trajectory_fn(obj: Objective, reg: Regularizer,
     def trajectory(w0, key0, vals, cols, y, slots, statics):
         state = PScopeState(w=w0, t=jnp.zeros((), jnp.int32), key=key0)
 
-        def record(w):
-            return (obj_val(w, vals, cols, y, slots),
-                    jnp.sum(jnp.abs(w) > NNZ_TOL))
+        def record(st):
+            return (obj_val(st.w, vals, cols, y, slots),
+                    jnp.sum(jnp.abs(st.w) > NNZ_TOL))
 
         def step_fn(st, _):
             return step_core(st, vals, cols, y, slots, statics)
 
-        v0, nnz0 = record(state.w)
+        v0, nnz0 = record(state)
         state, (vs, nnzs) = _scan_with_recording(
             step_fn, record, state, None, cfg.outer_steps, record_every)
         return (state.w, jnp.concatenate([v0[None], vs]),

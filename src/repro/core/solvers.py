@@ -36,6 +36,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import pscope
 from repro.core.baselines import (admm_history, cocoa_history, dbcd_history,
                                   dpsgd_history, dpsvrg_history,
@@ -85,6 +86,12 @@ class Trace:
     w_final: Optional[Array] = None
     heldout: Dict[str, float] = dataclasses.field(default_factory=dict)
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # named cumulative counter series, index-aligned with `values`
+    # (e.g. the scanned drivers' device-side bytes_moved / catch_up /
+    # prox_skip / comm_bytes — see pscope.COUNTER_NAMES); empty unless
+    # the adapter feeds them via `record_history(..., counters=...)`
+    counters: Dict[str, List[float]] = dataclasses.field(
+        default_factory=dict)
     _t0: Optional[float] = dataclasses.field(default=None, repr=False)
     _overhead: float = dataclasses.field(default=0.0, repr=False)
 
@@ -126,7 +133,8 @@ class Trace:
         self._overhead += time.perf_counter() - t_in
 
     def record_history(self, values, nnzs, comm_per_record: float,
-                       total_seconds: float) -> None:
+                       total_seconds: float,
+                       counters: Optional[Dict[str, Any]] = None) -> None:
         """Feed a device-recorded trajectory post-hoc (the zero-sync
         scanned drivers, `pscope.run_scanned`): index 0 is the initial
         iterate.  The compiled trajectory admits no per-round
@@ -148,6 +156,13 @@ class Trace:
             prev = self.comm[-1] if self.comm else 0.0
             self.comm.append(prev + (comm_per_record if i else 0.0))
             self.seconds.append(total_seconds * i / rounds)
+        if counters:
+            # cumulative named series riding the same device transfer
+            # (pscope.run_scanned(counters=True)); index-aligned with
+            # the values just appended
+            for name, series in counters.items():
+                self.counters.setdefault(name, []).extend(
+                    float(x) for x in series)
 
     def record_heldout(self, **metrics: float) -> None:
         """Attach held-out metrics (e.g. from `evaluate_heldout`).
@@ -404,7 +419,24 @@ def _pscope_config(obj, reg, part, cfg, inner_path: str):
         outer_steps=cfg.rounds, seed=cfg.seed, inner_path=inner_path)
 
 
-def _run_pscope_scanned(obj, reg, Xp, yp, w0, pcfg, trace, eval_data=None):
+def _round_offsets(n_records: int, total_seconds: float) -> List[float]:
+    """The linear per-round time attribution `record_history` uses —
+    reused to timestamp counter events inside the solve span."""
+    rounds = max(n_records - 1, 1)
+    return [total_seconds * i / rounds for i in range(n_records)]
+
+
+def _emit_counter_events(counters: Dict[str, Any], offsets: List[float],
+                         t0_s: float) -> None:
+    """Emit each cumulative series as obs counter samples, timestamped
+    at the solve span start + the per-round attribution offsets."""
+    for name, series in counters.items():
+        for val, off in zip(series, offsets):
+            obs.counter(name, float(val), ts_s=t0_s + off)
+
+
+def _run_pscope_scanned(obj, reg, Xp, yp, w0, pcfg, trace, eval_data=None,
+                        counters: bool = True):
     """Drive pSCOPE through the zero-sync scanned driver and feed the
     Trace from the device-side history — no per-round host sync.
 
@@ -412,11 +444,38 @@ def _run_pscope_scanned(obj, reg, Xp, yp, w0, pcfg, trace, eval_data=None):
     `SolverConfig.extras["eval"]`, e.g. from
     `datasets.train_test_split`): held-out metrics are evaluated
     post-hoc on the final iterate, outside the compiled trajectory, and
-    their cost is charged as recording overhead."""
+    their cost is charged as recording overhead.
+
+    `counters=True` (the default; opt out via
+    `SolverConfig.extras["counters"]`) carries the device-side
+    telemetry counters through the scan — same single host transfer,
+    values/NNZ bit-identical either way — and surfaces them as
+    `trace.counters` plus per-round obs counter events inside the
+    solve span; the host-side fan-out is charged as recording
+    overhead."""
     t0 = time.perf_counter()
-    w, values, nnzs = pscope.run_scanned(obj, reg, Xp, yp, w0, pcfg)
+    with obs.span(f"solve.{trace.solver}", rounds=pcfg.outer_steps,
+                  inner_path=pcfg.inner_path, p=trace.p,
+                  d=trace.d) as sp:
+        if counters:
+            w, values, nnzs, ctrs = pscope.run_scanned(
+                obj, reg, Xp, yp, w0, pcfg, counters=True)
+        else:
+            w, values, nnzs = pscope.run_scanned(obj, reg, Xp, yp, w0,
+                                                 pcfg)
+            ctrs = None
+    total = time.perf_counter() - t0
+    cdict = None
+    if ctrs is not None:
+        cdict = {name: ctrs[:, j]
+                 for j, name in enumerate(pscope.COUNTER_NAMES)}
     trace.record_history(values, nnzs, comm_per_record=2.0,
-                         total_seconds=time.perf_counter() - t0)
+                         total_seconds=total, counters=cdict)
+    if cdict is not None:
+        t_emit = time.perf_counter()
+        _emit_counter_events(cdict, _round_offsets(len(values), total),
+                             sp.t0)
+        trace.charge_overhead(time.perf_counter() - t_emit)
     if eval_data is not None:
         t_eval = time.perf_counter()
         trace.record_heldout(**evaluate_heldout(obj, reg, *eval_data, w))
@@ -436,7 +495,8 @@ def _run_pscope(obj, reg, part, cfg, trace):
     pcfg = _pscope_config(obj, reg, part, cfg,
                           cfg.extras.get("inner_path", "dense"))
     return _run_pscope_scanned(obj, reg, part.Xp, part.yp, _w0(part, cfg),
-                               pcfg, trace, cfg.extras.get("eval"))
+                               pcfg, trace, cfg.extras.get("eval"),
+                               counters=cfg.extras.get("counters", True))
 
 
 @register("pscope_lazy",
@@ -451,7 +511,8 @@ def _run_pscope_lazy(obj, reg, part, cfg, trace):
     pcfg = _pscope_config(obj, reg, part, cfg, "lazy")
     return _run_pscope_scanned(obj, reg, part.csr_p, part.yp,
                                _w0(part, cfg), pcfg, trace,
-                               cfg.extras.get("eval"))
+                               cfg.extras.get("eval"),
+                               counters=cfg.extras.get("counters", True))
 
 
 @register("pscope_mesh",
@@ -480,14 +541,28 @@ def _run_pscope_mesh(obj, reg, part, cfg, trace):
     pcfg = _pscope_config(obj, reg, part, cfg, inner_path)
     data = part.Xp if inner_path == "dense" else part.csr_p
     spec = cfg.extras.get("mesh_spec")
-    res = mesh_mod.run_mesh(obj, reg, data, part.yp, _w0(part, cfg), pcfg,
-                            spec)
+    with obs.span("solve.pscope_mesh", rounds=pcfg.outer_steps,
+                  inner_path=pcfg.inner_path, p=trace.p,
+                  d=trace.d) as sp:
+        res = mesh_mod.run_mesh(obj, reg, data, part.yp, _w0(part, cfg),
+                                pcfg, spec)
     trace.meta["comm_units"] = "bytes"
     trace.meta["mesh"] = {"num_processes": res.num_processes,
                           "local_worker_ids": list(res.worker_ids)}
     trace.record_history(res.values, res.nnz,
                          comm_per_record=res.comm_bytes_per_round,
                          total_seconds=res.seconds)
+    # Per-round wire-byte counters.  The mesh step's collectives live
+    # inside the compiled scan, so the series is the same analytic
+    # model `Trace.comm` records — emitted FROM trace.comm so the
+    # timeline counter and the trace agree exactly, by construction.
+    t_emit = time.perf_counter()
+    comm_series = list(trace.comm[-len(res.values):])
+    trace.counters.setdefault("comm_bytes", []).extend(comm_series)
+    _emit_counter_events({"comm_bytes": comm_series},
+                         _round_offsets(len(res.values), res.seconds),
+                         sp.t0)
+    trace.charge_overhead(time.perf_counter() - t_emit)
     eval_data = cfg.extras.get("eval")
     if eval_data is not None:
         t_eval = time.perf_counter()
@@ -560,6 +635,9 @@ def _run_pscope_elastic(obj, reg, part, cfg, trace):
                "survivors": sorted(ownership),
                "ownership": {int(r): list(ws)
                              for r, ws in ownership.items()}}]
+    obs.instant("elastic.remesh", round=fail_at, epoch=1,
+                dead=sorted(fail_ranks), joiners=[],
+                survivors=sorted(ownership))
 
     segments = []
     if rejoin_at is not None:
@@ -581,6 +659,9 @@ def _run_pscope_elastic(obj, reg, part, cfg, trace):
                 "survivors": sorted(ownership),
                 "ownership": {int(r): list(ws)
                               for r, ws in ownership.items()}})
+            obs.instant("elastic.remesh", round=start, epoch=len(events),
+                        dead=[], joiners=list(joiners),
+                        survivors=sorted(ownership))
         seg = dataclasses.replace(pcfg, outer_steps=end - start)
         w, v, n = pscope.run_scanned(obj, reg, part.csr_p, part.yp, w,
                                      seg, start_round=start)

@@ -210,15 +210,20 @@ def load(name: str, *, p: int = 8, scale: float = 1.0, seed: int = 0,
     shadowing one encoding with another.  Pass ``overwrite=True`` to
     re-ingest with the new codec.
     """
+    from repro import obs
     prof = get(name)
-    fixture = ensure_fixture(name, scale, seed, root)
-    tag = f"p{p}.{placement}"
-    if hash_dim_log2 is not None:
-        tag += f".h{hash_dim_log2}"
-    out_dir = data_root(root) / "shards" / f"{fixture.stem}.{tag}"
-    store = ingest_libsvm(
-        fixture, out_dir, p, placement=placement, n_features=prof.d,
-        hash_dim_log2=hash_dim_log2, zero_based=False, codec=codec,
-        chunk_bytes=chunk_bytes, seed=seed, obj=obj, reg=reg,
-        overwrite=overwrite, **placement_kw)
+    # spans even on a cache hit: the timeline always shows where the
+    # data came from (fixture check + store open vs a full re-ingest)
+    with obs.span("ingest.load", dataset=name, p=p, scale=scale,
+                  placement=placement, codec=codec or "raw"):
+        fixture = ensure_fixture(name, scale, seed, root)
+        tag = f"p{p}.{placement}"
+        if hash_dim_log2 is not None:
+            tag += f".h{hash_dim_log2}"
+        out_dir = data_root(root) / "shards" / f"{fixture.stem}.{tag}"
+        store = ingest_libsvm(
+            fixture, out_dir, p, placement=placement, n_features=prof.d,
+            hash_dim_log2=hash_dim_log2, zero_based=False, codec=codec,
+            chunk_bytes=chunk_bytes, seed=seed, obj=obj, reg=reg,
+            overwrite=overwrite, **placement_kw)
     return LoadedDataset(profile=prof, store=store, fixture=fixture)

@@ -63,6 +63,7 @@ from typing import Optional, Tuple, Union
 
 import numpy as np
 
+from repro import obs
 from repro.data.sparse import CSRMatrix, EncodedCSR
 from repro.datasets import codec as codecs
 from repro.datasets.hashing import FeatureHasher
@@ -835,31 +836,35 @@ def ingest_libsvm(path: Union[str, Path], out_dir: Union[str, Path],
     max_col = -1
     row_base = 0
     try:
-        for chunk in iter_libsvm_chunks(path, chunk_bytes=chunk_bytes,
-                                        zero_based=zero_based, stats=stats):
-            cols, vals = chunk.cols, chunk.vals
-            if hasher is not None:
-                cols, vals = hasher(cols, vals)
-                # placement must see the features as they will be
-                # STORED: gamma's (p, d) curvature state is indexed by
-                # hashed column ids
-                chunk = dataclasses.replace(chunk, cols=cols, vals=vals)
-            nnz = np.diff(chunk.indptr).astype(np.int32)
-            if chunk.n:
-                max_nnz = max(max_nnz, int(nnz.max()))
-            if len(cols):
-                max_col = max(max_col, int(cols.max()))
-            wk = policy.assign_chunk(chunk)
-            mem = row_base + np.arange(chunk.n, dtype=np.int64)
-            row_base += chunk.n
-            feat_wk = np.repeat(wk, nnz)
-            for k in range(p):
-                rows_k = wk == k
-                if not np.any(rows_k):
-                    continue
-                fk = feat_wk == k
-                spills[k].append(vals[fk], cols[fk], nnz[rows_k],
-                                 chunk.labels[rows_k], mem[rows_k])
+        with obs.span("ingest.parse", source=path.name, p=p,
+                      placement=placement):
+            for chunk in iter_libsvm_chunks(path, chunk_bytes=chunk_bytes,
+                                            zero_based=zero_based,
+                                            stats=stats):
+                cols, vals = chunk.cols, chunk.vals
+                if hasher is not None:
+                    cols, vals = hasher(cols, vals)
+                    # placement must see the features as they will be
+                    # STORED: gamma's (p, d) curvature state is indexed
+                    # by hashed column ids
+                    chunk = dataclasses.replace(chunk, cols=cols,
+                                                vals=vals)
+                nnz = np.diff(chunk.indptr).astype(np.int32)
+                if chunk.n:
+                    max_nnz = max(max_nnz, int(nnz.max()))
+                if len(cols):
+                    max_col = max(max_col, int(cols.max()))
+                wk = policy.assign_chunk(chunk)
+                mem = row_base + np.arange(chunk.n, dtype=np.int64)
+                row_base += chunk.n
+                feat_wk = np.repeat(wk, nnz)
+                for k in range(p):
+                    rows_k = wk == k
+                    if not np.any(rows_k):
+                        continue
+                    fk = feat_wk == k
+                    spills[k].append(vals[fk], cols[fk], nnz[rows_k],
+                                     chunk.labels[rows_k], mem[rows_k])
     finally:
         for s in spills:
             s.close()
@@ -879,37 +884,42 @@ def ingest_libsvm(path: Union[str, Path], out_dir: Union[str, Path],
         K = max(K, pad_to)
 
     # ---- pass 2: spill -> padded mmap segments, block by block ----------
-    shapes = {"vals": (p, n_k, K), "cols": (p, n_k, K),
-              "row_nnz": (p, n_k), "labels": (p, n_k), "members": (p, n_k)}
-    maps = {key: np.memmap(out_dir / _SEGMENTS[key][0],
-                           dtype=_SEGMENTS[key][1], mode="w+",
-                           shape=shapes[key]) for key in _SEGMENTS}
-    for k, s in enumerate(spills):
-        fv = open(s.paths["vals"], "rb")
-        fc = open(s.paths["cols"], "rb")
-        nnz_all = np.fromfile(s.paths["nnz"], np.int32)
-        maps["row_nnz"][k] = nnz_all[:n_k]
-        maps["labels"][k] = np.fromfile(s.paths["y"], np.float32)[:n_k]
-        maps["members"][k] = np.fromfile(s.paths["mem"], np.int64)[:n_k]
-        row = 0
-        while row < n_k:
-            blk = nnz_all[row:min(row + finalize_rows, n_k)]
-            total = int(blk.sum())
-            bv = np.frombuffer(fv.read(total * 4), np.float32)
-            bc = np.frombuffer(fc.read(total * 4), np.int32)
-            pv, pc = _scatter_padded(bv, bc, blk, K)
-            maps["vals"][k, row:row + len(blk)] = pv
-            maps["cols"][k, row:row + len(blk)] = pc
-            row += len(blk)
-        fv.close()
-        fc.close()
-    for m in maps.values():
-        m.flush()
-    del maps
-    shutil.rmtree(spill_dir)
+    with obs.span("ingest.finalize", p=p, n_k=n_k, K=K,
+                  codec=codec or "raw"):
+        shapes = {"vals": (p, n_k, K), "cols": (p, n_k, K),
+                  "row_nnz": (p, n_k), "labels": (p, n_k),
+                  "members": (p, n_k)}
+        maps = {key: np.memmap(out_dir / _SEGMENTS[key][0],
+                               dtype=_SEGMENTS[key][1], mode="w+",
+                               shape=shapes[key]) for key in _SEGMENTS}
+        for k, s in enumerate(spills):
+            fv = open(s.paths["vals"], "rb")
+            fc = open(s.paths["cols"], "rb")
+            nnz_all = np.fromfile(s.paths["nnz"], np.int32)
+            maps["row_nnz"][k] = nnz_all[:n_k]
+            maps["labels"][k] = np.fromfile(s.paths["y"], np.float32)[:n_k]
+            maps["members"][k] = np.fromfile(s.paths["mem"],
+                                             np.int64)[:n_k]
+            row = 0
+            while row < n_k:
+                blk = nnz_all[row:min(row + finalize_rows, n_k)]
+                total = int(blk.sum())
+                bv = np.frombuffer(fv.read(total * 4), np.float32)
+                bc = np.frombuffer(fc.read(total * 4), np.int32)
+                pv, pc = _scatter_padded(bv, bc, blk, K)
+                maps["vals"][k, row:row + len(blk)] = pv
+                maps["cols"][k, row:row + len(blk)] = pc
+                row += len(blk)
+            fv.close()
+            fc.close()
+        for m in maps.values():
+            m.flush()
+        del maps
+        shutil.rmtree(spill_dir)
 
-    codec_meta = (_encode_store(out_dir, p, n_k, K, codec, finalize_rows)
-                  if codec is not None else None)
+        codec_meta = (_encode_store(out_dir, p, n_k, K, codec,
+                                    finalize_rows)
+                      if codec is not None else None)
 
     stats.seconds = time.perf_counter() - t0
     manifest = {

@@ -71,6 +71,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.launch.control import (DistributedKVControlPlane,
                                   LocalControlPlane, claim_fence,
                                   join_request_key, make_control_plane,
@@ -875,13 +876,15 @@ def run_mesh_elastic(obj, reg, data, y, w0, cfg, *,
             builder.start()
             mesh = _survivor_mesh(survivors, axis)
             t_bar = time.perf_counter()
-            newly_dead = remesh_barrier_checked(kv, ecfg, epoch, me,
-                                                survivors, detector)
+            with obs.span("elastic.remesh_barrier", epoch=int(epoch),
+                          survivors=[int(r) for r in survivors]):
+                newly_dead = remesh_barrier_checked(kv, ecfg, epoch, me,
+                                                    survivors, detector)
             barrier_s = time.perf_counter() - t_bar
             builder.join()
             if "err" in box:
                 raise box["err"]
-            events.append({
+            event = {
                 "round": int(boundary), "resume_round": int(resume),
                 "rounds_to_recover": int(boundary - resume),
                 "dead": sorted(int(r) for r in pending_dead),
@@ -891,7 +894,13 @@ def run_mesh_elastic(obj, reg, data, y, w0, cfg, *,
                 "survivors": list(survivors),
                 "ownership": {int(r): list(ws)
                               for r, ws in ownership.items()},
-            })
+            }
+            events.append(event)
+            # fold recovery into the timeline as an instant marker (the
+            # ownership map is in the JSONL audit trail, not the trace)
+            obs.instant("elastic.remesh",
+                        **{k: v for k, v in event.items()
+                           if k != "ownership"})
             if newly_dead:
                 pending_dead, pending_join = list(newly_dead), []
                 continue
@@ -919,9 +928,15 @@ def run_mesh_elastic(obj, reg, data, y, w0, cfg, *,
         vals_g, cols_g, y_g, slots_g, p_total = arrays
         status, w_new, seg_vals, seg_nnz = "ok", None, None, None
         try:
-            w_new, seg_vals, seg_nnz = pscope.run_stacked_scanned(
-                obj, reg, vals_g, cols_g, y_g, slots_g, w, seg_cfg, mesh,
-                axis=axis, start_round=t, p_total=p_total)
+            with obs.span("elastic.chunk", chunk=int(chunk),
+                          start_round=int(t), rounds=int(chunk_len),
+                          epoch=int(epoch)):
+                w_new, seg_vals, seg_nnz = pscope.run_stacked_scanned(
+                    obj, reg, vals_g, cols_g, y_g, slots_g, w, seg_cfg,
+                    mesh, axis=axis, start_round=t, p_total=p_total)
+            # cumulative bytes-on-wire through this chunk's boundary
+            obs.counter("comm_bytes",
+                        comm_bytes_per_round(d) * float(boundary))
         except Exception as e:       # noqa: BLE001 — a peer died mid-
             status = f"failed: {e}"  # collective; report, roll back
             print(f"elastic: rank {me} chunk {chunk} (rounds {t}.."

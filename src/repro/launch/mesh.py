@@ -45,6 +45,7 @@ import numpy as np
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.sharding.logical import SOLVER_LOGICAL_AXES, solver_rules
 
 
@@ -61,12 +62,14 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
-# Hardware constants (TPU v5e-class, per chip) used by the roofline.
-PEAK_FLOPS_BF16 = 197e12        # FLOP/s
-HBM_BW = 819e9                  # B/s
-ICI_LINK_BW = 50e9              # B/s per link (intra-pod)
-DCI_BW = 5e9                    # B/s per chip effective (cross-pod)
-HBM_BYTES = 16 * 2 ** 30        # 16 GiB
+# Hardware constants (TPU v5e-class, per chip) used by the roofline —
+# re-exported from the canonical machine model in `repro.obs.roofline`
+# (same numbers the HLO analyzer and the bench %-of-peak stamps use).
+PEAK_FLOPS_BF16 = obs.roofline.TPU_V5E.peak_flops
+HBM_BW = obs.roofline.TPU_V5E.hbm_bw
+ICI_LINK_BW = obs.roofline.TPU_V5E.ici_bw
+DCI_BW = obs.roofline.TPU_V5E.dci_bw
+HBM_BYTES = obs.roofline.TPU_V5E.hbm_bytes
 
 
 # ---------------------------------------------------------------------------
@@ -251,8 +254,12 @@ def init_distributed(coordinator: Optional[str] = None,
         elif num_processes is not None and num_processes > 1:
             raise ValueError("multi-process init needs a coordinator "
                              "address (host:port)")
-    return {"process_id": jax.process_index(),
+    info = {"process_id": jax.process_index(),
             "num_processes": jax.process_count()}
+    # stamp this process's telemetry collector with its rank so spool
+    # files merge into a per-rank timeline (single-process runs stay 0)
+    obs.set_rank(info["process_id"])
+    return info
 
 
 def _init_client_only(coordinator: str, num_processes, process_id, *,
@@ -632,67 +639,82 @@ def run_mesh(obj, reg, data, y, w0, cfg, spec: Optional[MeshSpec] = None, *,
         cfg = _dc.replace(cfg,
                           inner_path="dense" if kind == "dense" else "lazy")
 
-    if kind == "store":
-        store = payload
-        sl = store.local_slice(owned)
-        pos = {w: i for i, w in enumerate(sl.worker_ids)}
-        if store.codec is not None:
-            # codec store: register the ENCODED leaves (uint16 bf16
-            # bits, delta columns — about half the raw CSR bytes on
-            # device) and let the solve path fuse the decode into the
-            # epoch gather (pscope's EncodedCSR branch).  Each host
-            # still decodes only the byte extents of the workers it
-            # owns (`LocalShardSlice._packed_decoded`).
-            from repro.data.sparse import EncodedCSR
-            X = EncodedCSR(
-                vals16=global_worker_array(
-                    mesh, axis, {w: sl.vals16[pos[w]] for w in owned}),
-                colb=global_worker_array(
-                    mesh, axis, {w: sl.colb[pos[w]] for w in owned}),
-                dcols=global_worker_array(
-                    mesh, axis, {w: sl.dcols[pos[w]] for w in owned}),
-                row_nnz=global_worker_array(
-                    mesh, axis, {w: sl.row_nnz[pos[w]] for w in owned}),
-                d=d)
-        else:
+    with obs.span("mesh.shards", p=p, kind=kind,
+                  owned=[int(w) for w in owned]):
+        if kind == "store":
+            store = payload
+            sl = store.local_slice(owned)
+            pos = {w: i for i, w in enumerate(sl.worker_ids)}
+            if store.codec is not None:
+                # codec store: register the ENCODED leaves (uint16 bf16
+                # bits, delta columns — about half the raw CSR bytes on
+                # device) and let the solve path fuse the decode into
+                # the epoch gather (pscope's EncodedCSR branch).  Each
+                # host still decodes only the byte extents of the
+                # workers it owns (`LocalShardSlice._packed_decoded`).
+                from repro.data.sparse import EncodedCSR
+                X = EncodedCSR(
+                    vals16=global_worker_array(
+                        mesh, axis, {w: sl.vals16[pos[w]] for w in owned}),
+                    colb=global_worker_array(
+                        mesh, axis, {w: sl.colb[pos[w]] for w in owned}),
+                    dcols=global_worker_array(
+                        mesh, axis, {w: sl.dcols[pos[w]] for w in owned}),
+                    row_nnz=global_worker_array(
+                        mesh, axis,
+                        {w: sl.row_nnz[pos[w]] for w in owned}),
+                    d=d)
+            else:
+                X = CSRMatrix(
+                    vals=global_worker_array(mesh, axis,
+                                             {w: sl.vals[pos[w]]
+                                              for w in owned}),
+                    cols=global_worker_array(mesh, axis,
+                                             {w: sl.cols[pos[w]]
+                                              for w in owned}),
+                    row_nnz=global_worker_array(mesh, axis,
+                                                {w: sl.row_nnz[pos[w]]
+                                                 for w in owned}),
+                    d=d)
+            yg = global_worker_array(mesh, axis,
+                                     {w: sl.yp[pos[w]] for w in owned})
+        elif kind == "csr":
+            csr, yp = payload
             X = CSRMatrix(
                 vals=global_worker_array(mesh, axis,
-                                         {w: sl.vals[pos[w]]
+                                         {w: np.asarray(csr.vals[w])
                                           for w in owned}),
                 cols=global_worker_array(mesh, axis,
-                                         {w: sl.cols[pos[w]]
+                                         {w: np.asarray(csr.cols[w])
                                           for w in owned}),
                 row_nnz=global_worker_array(mesh, axis,
-                                            {w: sl.row_nnz[pos[w]]
+                                            {w: np.asarray(csr.row_nnz[w])
                                              for w in owned}),
                 d=d)
-        yg = global_worker_array(mesh, axis,
-                                 {w: sl.yp[pos[w]] for w in owned})
-    elif kind == "csr":
-        csr, yp = payload
-        X = CSRMatrix(
-            vals=global_worker_array(mesh, axis,
-                                     {w: np.asarray(csr.vals[w])
-                                      for w in owned}),
-            cols=global_worker_array(mesh, axis,
-                                     {w: np.asarray(csr.cols[w])
-                                      for w in owned}),
-            row_nnz=global_worker_array(mesh, axis,
-                                        {w: np.asarray(csr.row_nnz[w])
-                                         for w in owned}),
-            d=d)
-        yg = global_worker_array(mesh, axis, {w: yp[w] for w in owned})
-    else:
-        Xp, yp = payload
-        X = global_worker_array(mesh, axis, {w: Xp[w] for w in owned})
-        yg = global_worker_array(mesh, axis, {w: yp[w] for w in owned})
+            yg = global_worker_array(mesh, axis, {w: yp[w] for w in owned})
+        else:
+            Xp, yp = payload
+            X = global_worker_array(mesh, axis, {w: Xp[w] for w in owned})
+            yg = global_worker_array(mesh, axis,
+                                     {w: yp[w] for w in owned})
 
     t0 = time.perf_counter()
-    w, values, nnzs = pscope.run_distributed_scanned(
-        obj, reg, X, yg, w0, cfg, mesh, axis=axis,
-        record_every=record_every)
+    with obs.span("mesh.solve", p=p, d=d, rounds=cfg.outer_steps,
+                  inner_path=cfg.inner_path) as solve_span:
+        w, values, nnzs = pscope.run_distributed_scanned(
+            obj, reg, X, yg, w0, cfg, mesh, axis=axis,
+            record_every=record_every)
+    # cumulative bytes-on-wire per recorded round as counter events,
+    # spread across the solve span (the scanned driver runs all rounds
+    # in one jit, so per-round on-device timestamps don't exist)
+    seconds = time.perf_counter() - t0
+    per_rec = comm_bytes_per_round(d) * record_every
+    n_rec = len(values)
+    for i in range(n_rec):
+        obs.counter("comm_bytes", per_rec * i,
+                    ts_s=solve_span.t0 + seconds * i / max(1, n_rec - 1))
     return MeshRunResult(
         w=np.asarray(w), values=np.asarray(values), nnz=np.asarray(nnzs),
         comm_bytes_per_round=comm_bytes_per_round(d),
-        worker_ids=owned, seconds=time.perf_counter() - t0,
+        worker_ids=owned, seconds=seconds,
         process_id=jax.process_index(), num_processes=jax.process_count())

@@ -336,10 +336,23 @@ def _run_rank(args) -> int:
         payload["remesh_overlap_saved_s"] = res.remesh_overlap_saved_s
     print("RESULT " + json.dumps(payload), flush=True)
 
+    if args.trace_out:
+        # per-rank spool, merged by the spawner (or by hand with
+        # obs.merge_spools) into one clock-aligned Chrome trace.  Must
+        # happen before the degraded-path exit_now below — a hard exit
+        # never flushes.
+        from repro import obs
+        obs.write_spool(obs.spool_path(args.trace_out, info["process_id"]))
+
     rc = 0
     if info["process_id"] == args.verify_rank:
         if args.out:
             Path(args.out).write_text(json.dumps(payload, indent=2) + "\n")
+        if args.events_out and args.elastic:
+            with open(args.events_out, "w") as fh:
+                for ev in res.events:
+                    fh.write(json.dumps(dict(ev, rank=res.process_id))
+                             + "\n")
         if args.verify:
             from repro.core.pscope import run_scanned
             _, v_ref, nnz_ref = run_scanned(
@@ -421,6 +434,10 @@ def _spawn(args) -> int:
         passthrough += ["--verify"]
     if args.out:
         passthrough += ["--out", args.out]
+    if args.trace_out:
+        passthrough += ["--trace-out", args.trace_out]
+    if args.events_out:
+        passthrough += ["--events-out", args.events_out]
     if external_service:
         passthrough += ["--external-service"]
     if args.elastic:
@@ -519,6 +536,17 @@ def _spawn(args) -> int:
             print(f"rank {r} produced no RESULT line", file=sys.stderr)
             return 1
         results[r] = json.loads(lines[-1][len("RESULT "):])
+
+    if args.trace_out:
+        # killed ranks never wrote a spool (SIGKILL flushes nothing);
+        # merge_spools skips what it can't read
+        from repro import obs
+        try:
+            obs.merge_spools(f"{args.trace_out}.rank*.spool.json",
+                             out=args.trace_out)
+            print(f"TRACE OK: merged timeline -> {args.trace_out}")
+        except ValueError as exc:
+            print(f"TRACE WARN: {exc}", file=sys.stderr)
 
     full = {r: res for r, res in results.items() if r not in rejoin_ranks}
     vals = [tuple(res["values"]) for res in full.values()]
@@ -625,6 +653,14 @@ def main(argv=None) -> int:
                          "leaves alive)")
     ap.add_argument("--out", default=None, metavar="PATH",
                     help="the verify rank writes the trace JSON here")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="telemetry: each rank spools its spans/counters "
+                         "to PATH.rankN.spool.json; the spawner merges "
+                         "them into one Chrome-trace JSON at PATH "
+                         "(load in Perfetto / chrome://tracing)")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="(--elastic) the verify rank writes the re-mesh "
+                         "event log as JSON Lines, one event per line")
     ap.add_argument("--rounds", type=int, default=6)
     ap.add_argument("--eta", type=float, default=0.5)
     ap.add_argument("--inner-steps", type=int, default=64)

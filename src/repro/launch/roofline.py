@@ -21,7 +21,9 @@ therefore implement a trip-count-aware HLO cost model over
 All shapes in SPMD-partitioned HLO are per-device, so every number
 below is per-chip.
 
-Roofline terms (TPU v5e-class constants in launch/mesh.py):
+Roofline terms (default machine: the TPU v5e-class MachineModel in
+repro.obs.roofline, re-exported by launch/mesh.py; pass any other
+MachineModel to `roofline_terms`):
   t_compute = flops_per_chip / 197e12
   t_memory  = bytes_per_chip / 819e9
   t_coll    = intra_bytes / 50e9 + cross_pod_bytes / 5e9
@@ -34,7 +36,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.launch import mesh as hw
+from repro.obs import roofline as obs_roofline
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -297,11 +299,17 @@ def analyze_hlo(hlo_text: str, chips_per_pod: int = 256) -> Costs:
     return HloCostModel(hlo_text, chips_per_pod).entry_costs()
 
 
-def roofline_terms(costs: Costs) -> Dict[str, float]:
-    t_compute = costs.flops / hw.PEAK_FLOPS_BF16
-    t_memory = costs.bytes / hw.HBM_BW
-    t_coll = (costs.coll_intra / hw.ICI_LINK_BW
-              + costs.coll_cross / hw.DCI_BW)
+def roofline_terms(costs: Costs,
+                   machine: Optional[obs_roofline.MachineModel] = None
+                   ) -> Dict[str, float]:
+    """Roofline time terms for `costs` on `machine` (default: the
+    TPU-v5e model in `repro.obs.roofline` — the same constants
+    launch/mesh.py re-exports, so existing reports are unchanged)."""
+    m = machine or obs_roofline.TPU_V5E
+    t_compute = costs.flops / m.peak_flops
+    t_memory = costs.bytes / m.hbm_bw
+    t_coll = (costs.coll_intra / m.ici_bw
+              + costs.coll_cross / m.dci_bw)
     terms = {"t_compute": t_compute, "t_memory": t_memory,
              "t_collective": t_coll}
     dom = max(terms, key=terms.get)

@@ -1,0 +1,54 @@
+"""Unified telemetry: span tracing, device-side counters, rooflines.
+
+`repro.obs` is the one place runs report *where time and bytes go*:
+
+  * `obs.span("ingest.parse") / obs.counter("comm_bytes", v) /
+    obs.instant("elastic.remesh", ...)` record into a thread-safe
+    in-process collector; `obs.write_trace(path)` exports a
+    Chrome-trace JSON that loads in Perfetto.
+  * Multi-host runs write per-rank spools (`obs.write_spool`) which
+    `obs.merge_spools` folds into one clock-aligned timeline.
+  * `obs.roofline` holds the machine models (`TPU_V5E`, measured
+    `host_machine()`), the shared inner-epoch byte formulas, and
+    `pct_peak` annotations stamped into every BENCH_*.json row.
+
+Importing this package is jax-free and cheap; see
+docs/observability.md for the full walkthrough.
+"""
+from repro.obs import roofline
+from repro.obs.telemetry import (
+    Collector,
+    MAX_EVENTS,
+    Span,
+    counter,
+    get_collector,
+    instant,
+    merge_spools,
+    reset,
+    set_collector,
+    set_rank,
+    span,
+    spool_path,
+    validate_chrome_trace,
+    write_spool,
+    write_trace,
+)
+
+__all__ = [
+    "Collector",
+    "MAX_EVENTS",
+    "Span",
+    "counter",
+    "get_collector",
+    "instant",
+    "merge_spools",
+    "reset",
+    "roofline",
+    "set_collector",
+    "set_rank",
+    "span",
+    "spool_path",
+    "validate_chrome_trace",
+    "write_spool",
+    "write_trace",
+]

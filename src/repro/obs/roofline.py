@@ -1,0 +1,161 @@
+"""Machine models and %-of-peak accounting for perf trails.
+
+Generalizes the machine constants that `launch/roofline.py` hard-coded
+for the TPU-v5e HLO analyzer into a reusable `MachineModel`, adds a
+*measured* model of the host this process is actually running on
+(`host_machine()` — CI containers and dev boxes differ by an order of
+magnitude, so a fixed "peak" would make %-peak numbers fiction), and
+computes roofline annotations (`pct_peak`) from the byte/FLOP counts
+the benchmarks already track.
+
+Also the canonical home of the inner-epoch byte models
+(`inner_epoch_bytes`): the dense/lazy/fused traffic formulas that
+`benchmarks/bench_lazy_inner.py` introduced and the device-side
+`bytes_moved` counter in `core.pscope` now shares.  One formula, three
+consumers (bench rows, device counters, roofline report) — they can't
+drift apart.
+
+numpy + stdlib only; never imports jax (core.pscope imports this
+module, and it must stay importable before any backend exists).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import platform
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineModel:
+    """Peak rates for one machine tier (FLOP/s, bytes/s)."""
+
+    name: str
+    peak_flops: float          # FLOP/s at the relevant precision
+    hbm_bw: float              # main-memory bandwidth, bytes/s
+    ici_bw: float = 0.0        # per-link interconnect bandwidth, bytes/s
+    dci_bw: float = 0.0        # data-center interconnect, bytes/s
+    hbm_bytes: float = 0.0     # memory capacity, bytes
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+# The v5e numbers launch/roofline.py and launch/mesh.py have always
+# used (bf16 MXU peak, HBM and ICI per-chip) — kept bit-identical so
+# the HLO analyzer's reports don't shift.
+TPU_V5E = MachineModel(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    dci_bw=5e9,
+    hbm_bytes=16 * 2**30,
+)
+
+
+def _measure_membw(mib: int = 64, repeats: int = 3) -> float:
+    """Sustained host copy bandwidth in bytes/s (read + write)."""
+    n = mib * 2**20 // 8
+    src = np.ones(n, dtype=np.float64)
+    dst = np.empty_like(src)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        np.copyto(dst, src)
+        best = min(best, time.perf_counter() - t0)
+    return 2.0 * src.nbytes / max(best, 1e-9)
+
+
+def _measure_flops(n: int = 384, repeats: int = 3) -> float:
+    """Sustained host GEMM rate in FLOP/s (f32, whatever BLAS numpy has)."""
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    b = rng.standard_normal((n, n)).astype(np.float32)
+    a @ b  # warm the BLAS path
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        a @ b
+        best = min(best, time.perf_counter() - t0)
+    return 2.0 * n**3 / max(best, 1e-9)
+
+
+@functools.lru_cache(maxsize=1)
+def host_machine() -> MachineModel:
+    """A measured model of THIS host (micro-benchmarked once per
+    process, ~tens of ms).  %-of-peak numbers in bench rows are
+    computed against this, so a row says "this kernel reached 41% of
+    what the container's memory system can do" rather than comparing
+    a CPU run against TPU paper numbers."""
+    return MachineModel(
+        name=f"host-{platform.machine()}",
+        peak_flops=_measure_flops(),
+        hbm_bw=_measure_membw(),
+    )
+
+
+def pct_peak(*, seconds: float, bytes_moved: float = 0.0,
+             flops: float = 0.0,
+             machine: Optional[MachineModel] = None) -> Dict[str, Any]:
+    """Roofline annotation for one measured kernel invocation.
+
+    Given measured wall time and modeled traffic/work, returns the
+    achieved fraction of the machine's roofline: the binding resource
+    is whichever of (bytes/hbm_bw, flops/peak_flops) NEEDS more time;
+    pct_peak = needed_time / measured_time, in [0, ~1] when the model
+    is honest (can exceed 1 if the byte model over-counts, which is
+    itself a useful signal — it means caches served traffic the model
+    charged to memory).
+    """
+    m = machine or host_machine()
+    seconds = float(seconds)
+    t_mem = float(bytes_moved) / m.hbm_bw if m.hbm_bw > 0 else 0.0
+    t_cmp = float(flops) / m.peak_flops if m.peak_flops > 0 else 0.0
+    needed = max(t_mem, t_cmp)
+    bound = "memory" if t_mem >= t_cmp else "compute"
+    out: Dict[str, Any] = {
+        "pct_peak": (needed / seconds) if seconds > 0 else 0.0,
+        "bound": bound,
+        "machine": m.name,
+    }
+    if bytes_moved:
+        out["achieved_gbps"] = bytes_moved / max(seconds, 1e-12) / 1e9
+        out["peak_gbps"] = m.hbm_bw / 1e9
+    if flops:
+        out["achieved_gflops"] = flops / max(seconds, 1e-12) / 1e9
+    return out
+
+
+def inner_epoch_bytes(path: str, *, d: int, M: int, b: int,
+                      k: int, itemsize: int = 4) -> float:
+    """Modeled bytes moved by ONE worker's inner epoch (M minibatch
+    steps of size b over k-wide padded-CSR rows, dimension d).
+
+    These are the traffic models `BENCH_inner_loop.json` has carried
+    in its `derived` strings since the fused-kernel PR:
+
+      dense:  every step streams u, grad work and prox over all d
+              (b + 4 + 1 dense d-vectors per step).
+      lazy:   per step, touch only the support — gather/scatter of u,
+              z, mu plus CSR vals/cols and the catch-up state
+              (2 + 6 support-sized streams) — then one final dense
+              catch-up pass over d (4 vectors: q_f gather, u update,
+              write, plan).
+      fused:  the Pallas whole-epoch kernel — per step only CSR
+              rows + u gather/scatter (2 + 2 streams) plus the int32
+              plan triple, and 3 dense d-passes total (scatter-in,
+              final catch-up, scatter-out).
+    """
+    d, M, b, k = int(d), int(M), int(b), int(k)
+    if path == "dense":
+        return float(M * (b + 4 + 1) * d * itemsize)
+    if path == "lazy":
+        return float(M * (b * k * (2 + 6) * itemsize) + 4 * d * itemsize)
+    if path == "fused":
+        return float(M * (b * k * (2 + 2) * itemsize)
+                     + 3 * M * b * k * 4 + 3 * d * itemsize)
+    raise ValueError(f"unknown inner path {path!r} (dense|lazy|fused)")

@@ -272,9 +272,11 @@ def build_partition(scheme: str, X, y, p: int, seed: int = 0) -> Partition:
     carries whichever representation it was built from and derives the
     other lazily.
     """
+    from repro import obs
     spec = get_scheme(scheme)
-    idx = spec.build(X, y, p, seed)
-    return make_partition(X, y, idx, name=scheme)
+    with obs.span("partition.build", scheme=scheme, p=p):
+        idx = spec.build(X, y, p, seed)
+        return make_partition(X, y, idx, name=scheme)
 
 
 # -- base registrations -----------------------------------------------------

@@ -1,0 +1,361 @@
+"""Telemetry subsystem tests: span/counter collection, Chrome-trace
+schema, spool merge, device counters (bit-identical trajectories,
+bounded overhead), and the roofline annotation math."""
+import json
+import threading
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro import obs
+from repro.obs.telemetry import Collector, merge_spools, spool_path
+from repro.core import LOGISTIC, PScopeConfig, Regularizer
+from repro.core import pscope
+from repro.core import solvers
+from repro.core.partition import uniform_partition, stack_partition
+from repro.data.synthetic import make_sparse_classification
+
+
+# ---------------------------------------------------------------------------
+# span/counter API + Chrome-trace schema
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_chrome_trace_schema():
+    c = Collector(rank=3, process_name="worker-3")
+    with c.span("ingest.parse", source="x.libsvm"):
+        with c.span("ingest.parse.pass1"):
+            pass
+    c.counter("comm_bytes", 512.0)
+    c.instant("elastic.remesh", dead=[1])
+    doc = c.to_chrome_trace()
+    obs.validate_chrome_trace(doc)
+    evs = doc["traceEvents"]
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert {e["name"] for e in xs} == {"ingest.parse", "ingest.parse.pass1"}
+    assert all(e["pid"] == 3 for e in xs)
+    assert all(e["ts"] >= 0 for e in evs if "ts" in e)
+    # the outer span strictly contains the inner one
+    outer = next(e for e in xs if e["name"] == "ingest.parse")
+    inner = next(e for e in xs if e["name"] == "ingest.parse.pass1")
+    assert outer["ts"] <= inner["ts"]
+    assert outer["ts"] + outer["dur"] >= inner["ts"] + inner["dur"]
+    assert outer["args"]["source"] == "x.libsvm"
+    cat = [e for e in evs if e["ph"] == "C"]
+    assert cat and cat[0]["args"] == {"comm_bytes": 512.0}
+    inst = [e for e in evs if e["ph"] == "i"]
+    assert inst and inst[0]["args"]["dead"] == [1]
+
+
+def test_span_records_exception_and_reraises():
+    c = Collector()
+    with pytest.raises(ValueError):
+        with c.span("solve.boom"):
+            raise ValueError("no")
+    ev = c.events()[-1]
+    assert ev["name"] == "solve.boom" and "error" in ev["args"]
+
+
+def test_collector_thread_safety():
+    c = Collector()
+    gate = threading.Barrier(4)   # all 4 alive at once: distinct idents
+
+    def work(i):
+        gate.wait()
+        for _ in range(200):
+            with c.span(f"t{i}.op"):
+                pass
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(c.events()) == 800
+    obs.validate_chrome_trace(c.to_chrome_trace())
+    # each thread got its own stable tid lane
+    tids = {e["tid"] for e in c.to_chrome_trace()["traceEvents"]
+            if e["ph"] == "X"}
+    assert len(tids) == 4
+
+
+def test_validate_chrome_trace_rejects_malformed():
+    with pytest.raises(ValueError):
+        obs.validate_chrome_trace({"no": "traceEvents"})
+    with pytest.raises(ValueError):
+        obs.validate_chrome_trace(
+            {"traceEvents": [{"ph": "X", "name": "a", "ts": 0,
+                              "pid": 0, "tid": 0, "dur": -5}]})
+    with pytest.raises(ValueError):
+        obs.validate_chrome_trace(
+            {"traceEvents": [{"ph": "Z", "name": "a", "ts": 0,
+                              "pid": 0, "tid": 0}]})
+
+
+def test_spool_merge_aligns_ranks(tmp_path):
+    out = str(tmp_path / "trace.json")
+    for rank in (0, 1):
+        c = Collector(rank=rank)
+        with c.span("mesh.solve", p=2):
+            pass
+        c.counter("comm_bytes", 256.0 * (rank + 1))
+        c.write_spool(spool_path(out, rank))
+    doc = merge_spools(f"{out}.rank*.spool.json", out=out)
+    obs.validate_chrome_trace(doc)
+    on_disk = json.load(open(out))
+    assert on_disk["traceEvents"] == doc["traceEvents"]
+    pids = {e["pid"] for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert pids == {0, 1}
+    # timestamps rebased to a common origin: all non-negative
+    assert all(e["ts"] >= 0 for e in doc["traceEvents"] if "ts" in e)
+
+
+def test_spool_merge_skips_unreadable(tmp_path):
+    out = str(tmp_path / "trace.json")
+    c = Collector(rank=0)
+    with c.span("mesh.solve"):
+        pass
+    c.write_spool(spool_path(out, 0))
+    # rank 1 was SIGKILLed mid-write: truncated file
+    with open(spool_path(out, 1), "w") as fh:
+        fh.write('{"schema": "repro-obs-spool/v1", "events": [')
+    doc = merge_spools(f"{out}.rank*.spool.json")
+    assert {e["pid"] for e in doc["traceEvents"] if e["ph"] == "X"} == {0}
+    # nothing readable at all -> explicit error, not an empty trace
+    with pytest.raises(ValueError):
+        merge_spools(str(tmp_path / "nothing.rank*.spool.json"))
+
+
+# ---------------------------------------------------------------------------
+# device counters: bit-identical trajectories, exact comm accounting
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_problem():
+    X, y, _ = make_sparse_classification(256, 64, density=0.1, seed=0)
+    idx = uniform_partition(jax.random.PRNGKey(0), 256, 4)
+    Xp, yp = stack_partition(jnp.asarray(X), jnp.asarray(y), idx)
+    return Xp, yp
+
+
+@pytest.mark.parametrize("inner_path", ["dense", "lazy"])
+def test_counters_never_perturb_trajectory(small_problem, inner_path):
+    Xp, yp = small_problem
+    reg = Regularizer(1e-3, 1e-3)
+    cfg = PScopeConfig(eta=0.5, inner_steps=16, inner_batch=2,
+                       outer_steps=5, inner_path=inner_path)
+    w0 = np.zeros(Xp.shape[-1], np.float32)
+    w_a, v_a, nnz_a = pscope.run_scanned(LOGISTIC, reg, Xp, yp, w0, cfg)
+    w_b, v_b, nnz_b, ctrs = pscope.run_scanned(LOGISTIC, reg, Xp, yp, w0,
+                                               cfg, counters=True)
+    # bitwise, not allclose: the counters ride alongside the iterate
+    # and must not touch it
+    assert np.array_equal(w_a, w_b)
+    assert np.array_equal(v_a, v_b)
+    assert np.array_equal(nnz_a, nnz_b)
+    assert ctrs.shape == (cfg.outer_steps + 1, len(pscope.COUNTER_NAMES))
+    # cumulative and monotone
+    assert np.all(np.diff(ctrs, axis=0) >= 0)
+
+
+def test_comm_bytes_counter_is_exact(small_problem):
+    Xp, yp = small_problem
+    d = Xp.shape[-1]
+    reg = Regularizer(1e-3, 1e-3)
+    cfg = PScopeConfig(eta=0.5, inner_steps=16, inner_batch=2,
+                       outer_steps=6, inner_path="lazy")
+    _, _, _, ctrs = pscope.run_scanned(
+        LOGISTIC, reg, Xp, yp, np.zeros(d, np.float32), cfg, counters=True)
+    j = pscope.COUNTER_NAMES.index("comm_bytes")
+    want = np.arange(cfg.outer_steps + 1, dtype=np.float64) \
+        * pscope.COMM_ALLREDUCES_PER_ROUND * d * 4.0
+    assert np.array_equal(ctrs[:, j], want)
+
+
+def test_trace_counters_match_trace_comm(small_problem):
+    """The timeline's comm_bytes series and Trace.comm agree exactly:
+    Trace.comm counts all-reduces (2/round), the counter carries the
+    wire bytes of the same all-reduces (x d x 4), and the emitted
+    counter events repeat the Trace.counters series verbatim."""
+    Xp, yp = small_problem
+    d = Xp.shape[-1]
+    X = Xp.reshape(-1, d)
+    y = yp.reshape(-1)
+    from repro.core.partition import make_partition
+    idx = np.arange(X.shape[0]).reshape(4, -1)
+    part = make_partition(jnp.asarray(X), jnp.asarray(y),
+                          jnp.asarray(idx), "uniform")
+    obs.reset()
+    tr = solvers.run("pscope_lazy", LOGISTIC, Regularizer(1e-3, 1e-3),
+                     part, solvers.SolverConfig(rounds=4, eta=0.5))
+    assert tr.counters["comm_bytes"] == [c * d * 4.0 for c in tr.comm]
+    ctr_evs = [e for e in obs.get_collector().events()
+               if e["ph"] == "C" and e["name"] == "comm_bytes"]
+    assert ([e["args"]["comm_bytes"] for e in ctr_evs]
+            == tr.counters["comm_bytes"])
+    obs.reset()
+
+
+def test_counter_overhead_within_tolerance(small_problem):
+    """Recording counters must not inflate the solve's wall clock
+    beyond tolerance.  CI containers are noisy, so the bound is
+    generous (50%) — the acceptance-grade <3% claim is checked on the
+    quiet benchmark boxes; this guards against accidental O(rounds)
+    host sync or a lost donate_argnums."""
+    Xp, yp = small_problem
+    reg = Regularizer(1e-3, 1e-3)
+    cfg = PScopeConfig(eta=0.5, inner_steps=64, inner_batch=2,
+                       outer_steps=20, inner_path="lazy")
+    w0 = np.zeros(Xp.shape[-1], np.float32)
+
+    import time
+
+    def best_of(fn, n=3):
+        fn()  # compile
+        ts = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    t_plain = best_of(lambda: pscope.run_scanned(
+        LOGISTIC, reg, Xp, yp, w0, cfg))
+    t_ctr = best_of(lambda: pscope.run_scanned(
+        LOGISTIC, reg, Xp, yp, w0, cfg, counters=True))
+    assert t_ctr <= t_plain * 1.5 + 0.05, (t_plain, t_ctr)
+
+
+def test_solvers_counters_opt_out(small_problem):
+    Xp, yp = small_problem
+    X = Xp.reshape(-1, Xp.shape[-1])
+    y = yp.reshape(-1)
+    from repro.core.partition import make_partition
+    idx = np.arange(X.shape[0]).reshape(4, -1)
+    part = make_partition(jnp.asarray(X), jnp.asarray(y),
+                          jnp.asarray(idx), "uniform")
+    cfg = solvers.SolverConfig(rounds=3, eta=0.5,
+                               extras={"counters": False})
+    tr = solvers.run("pscope_lazy", LOGISTIC, Regularizer(1e-3, 1e-3),
+                     part, cfg)
+    assert tr.counters == {}
+
+
+# ---------------------------------------------------------------------------
+# roofline annotations
+# ---------------------------------------------------------------------------
+
+def test_machine_model_constants_unchanged():
+    # launch/mesh.py re-exports these; the HLO analyzer's reports must
+    # not shift when the constants moved into obs.roofline
+    from repro.launch import mesh
+    m = obs.roofline.TPU_V5E
+    assert (mesh.PEAK_FLOPS_BF16, mesh.HBM_BW, mesh.ICI_LINK_BW,
+            mesh.DCI_BW, mesh.HBM_BYTES) == \
+        (m.peak_flops, m.hbm_bw, m.ici_bw, m.dci_bw, m.hbm_bytes)
+
+
+def test_pct_peak_math():
+    m = obs.roofline.MachineModel("toy", peak_flops=100.0, hbm_bw=10.0)
+    r = obs.roofline.pct_peak(seconds=2.0, bytes_moved=10.0, machine=m)
+    assert r["bound"] == "memory"
+    assert r["pct_peak"] == pytest.approx(0.5)   # needs 1s, took 2s
+    r = obs.roofline.pct_peak(seconds=1.0, flops=100.0, machine=m)
+    assert r["bound"] == "compute"
+    assert r["pct_peak"] == pytest.approx(1.0)
+
+
+def test_inner_epoch_bytes_formulas():
+    d, M, b, k = 4096, 64, 1, 40
+    assert obs.roofline.inner_epoch_bytes("dense", d=d, M=M, b=b, k=k) \
+        == M * (b + 4 + 1) * d * 4
+    assert obs.roofline.inner_epoch_bytes("lazy", d=d, M=M, b=b, k=k) \
+        == M * (b * k * 8 * 4) + 4 * d * 4
+    assert obs.roofline.inner_epoch_bytes("fused", d=d, M=M, b=b, k=k) \
+        == M * (b * k * 4 * 4) + 3 * M * b * k * 4 + 3 * d * 4
+    with pytest.raises(ValueError):
+        obs.roofline.inner_epoch_bytes("nope", d=d, M=M, b=b, k=k)
+
+
+def test_host_machine_measured_positive():
+    m = obs.roofline.host_machine()
+    assert m.peak_flops > 0 and m.hbm_bw > 0
+    assert m.name.startswith("host-")
+
+
+def test_stamp_row_schema(tmp_path):
+    from benchmarks.common import bench_row, stamp_row
+    row = bench_row("inner_loop/dense/test", 1e-3,
+                    "bytes_moved=1000;M=64", bytes_moved=1000.0)
+    for key in ("host", "backend", "timestamp", "pct_peak"):
+        assert key in row
+    assert row["pct_peak"] is not None and row["pct_peak"] > 0
+    # legacy rows: bytes_moved recovered from the derived string
+    legacy = stamp_row({"name": "x", "us_per_call": "1000",
+                        "derived": "bytes_moved=819000;M=1"})
+    assert legacy["pct_peak"] is not None
+    # no byte model at all -> stamped with an explicit null
+    bare = stamp_row({"name": "y", "us_per_call": "10", "derived": ""})
+    assert bare["pct_peak"] is None
+
+
+def test_roofline_report_ingests_bench_json(tmp_path, monkeypatch):
+    from benchmarks import roofline_report
+    doc = {"schema": "bench-rows/v2",
+           "host": {"backend": "cpu", "host": "box"},
+           "rows": [{"name": "inner_loop/fused/d1/rho1",
+                     "us_per_call": "100", "derived": "",
+                     "pct_peak": 0.41, "roofline_bound": "memory",
+                     "backend": "cpu", "host": "box"}],
+           "us_per_call": {"inner_loop/fused/d1/rho1": 100.0}}
+    (tmp_path / "BENCH_test.json").write_text(json.dumps(doc))
+    monkeypatch.setattr(roofline_report, "ROOT", str(tmp_path))
+    rows = roofline_report.main()
+    names = [r["name"] for r in rows]
+    assert "roofline/trail/BENCH_test.json" in names
+    summary = rows[names.index("roofline/trail/BENCH_test.json")]
+    assert "max_pct_peak=41.0%" in summary["derived"]
+    table = roofline_report.bench_markdown_table()
+    assert "41.0%" in table and "inner_loop/fused/d1/rho1" in table
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=64),
+       st.integers(min_value=1, max_value=8),
+       st.integers(min_value=1, max_value=128),
+       st.integers(min_value=1, max_value=256))
+def test_inner_epoch_bytes_positive_and_monotone_in_m(d, b, k, m):
+    for path in ("dense", "lazy", "fused"):
+        lo = obs.roofline.inner_epoch_bytes(path, d=d, M=m, b=b, k=k)
+        hi = obs.roofline.inner_epoch_bytes(path, d=d, M=m + 1, b=b, k=k)
+        assert 0 < lo <= hi
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31),
+       st.lists(st.floats(min_value=0, max_value=1e12,
+                          allow_nan=False), min_size=0, max_size=20))
+def test_counter_recording_never_inflates_span_seconds(seed, values):
+    """Property: however many counter samples land inside a span, the
+    span's recorded duration stays wall-clock truthful — emitting a
+    counter is O(1) append, never a sync."""
+    import time
+    c = Collector(rank=seed % 7)
+    t0 = time.perf_counter()
+    with c.span("solve.test"):
+        for i, v in enumerate(values):
+            c.counter("bytes_moved", v)
+    elapsed = time.perf_counter() - t0
+    ev = c.events()[-1]
+    assert ev["ph"] == "X"
+    # span duration (us) cannot exceed the measured enclosing time
+    # plus scheduling tolerance
+    assert ev["dur"] <= elapsed * 1e6 + 5e4
+    assert len([e for e in c.events() if e["ph"] == "C"]) == len(values)
